@@ -1,0 +1,233 @@
+"""Loop-aware HLO accounting: per-device FLOPs, matmul traffic and collective
+payload bytes, with every ``while`` body weighted by its trip count.
+
+``compiled.cost_analysis()`` counts each while body ONCE, which understates a
+scanned 64-layer model by 64× and chunked attention by (Sq/bq)·(Skv/bk)×.
+This parser rebuilds the numbers from the compiled (SPMD-partitioned,
+per-device) HLO text:
+
+1. split the module into computations; build a per-computation symbol table
+   (op name → shape) including fusion parameters;
+2. find every ``while`` op, its body/cond computations, and its trip count
+   (the integer constant compared against the induction variable in cond —
+   lax.scan/fori_loop always lower this way);
+3. propagate multiplicity down the call tree (while bodies, fusions, calls,
+   conditionals);
+4. sum, per computation × multiplicity:
+   * dot FLOPs: 2 · |result| · Π(contracting dims)
+   * dot traffic bytes: operand + result bytes (matmul-traffic lower bound —
+     assumes elementwise chains fuse, which the MXU pipeline does)
+   * collective payload bytes by op kind.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)"
+)
+_CALL_RE = re.compile(r"(?:fusion|call)\(.*?\).*?(?:calls|to_apply)=%?([\w\.\-]+)")
+_COND_RE = re.compile(
+    r"conditional\(.*?(?:branch_computations=\{([^}]*)\}|"
+    r"true_computation=%?([\w\.\-]+), false_computation=%?([\w\.\-]+))"
+)
+_DOT_RE = re.compile(r"\bdot\(")
+_COLL_RE = re.compile(
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERANDS_RE = re.compile(r"\(([^)]*)\)")
+
+
+def _shape_bytes(dtype: str, dims: list[int]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _first_shape(text: str):
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    dt, dims = m.group(1), m.group(2)
+    if dt not in _DTYPE_BYTES:
+        return None
+    return dt, [int(d) for d in dims.split(",") if d]
+
+
+def parse_module(txt: str) -> dict:
+    """Returns {"flops": f, "dot_bytes": b, "collectives": {kind: bytes},
+    "n_collectives": int} — per-device, loop-weighted."""
+    # ---- 1. split into computations ---------------------------------------
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in txt.splitlines():
+        mc = _COMP_RE.match(line)
+        if mc:
+            cur = mc.group(1)
+            comps[cur] = []
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+
+    # symbol tables: comp → {opname: (dtype, dims)}
+    symtab: dict[str, dict] = {}
+    for cname, lines in comps.items():
+        tab = {}
+        for line in lines:
+            md = _DEF_RE.match(line)
+            if not md:
+                continue
+            shape = _first_shape(md.group(2))
+            if shape:
+                tab[md.group(1)] = shape
+        symtab[cname] = tab
+
+    # ---- 2/3. while trip counts + call-graph multiplicities ----------------
+    edges: dict[str, list[tuple[str, int]]] = defaultdict(list)  # parent → (child, mult)
+    entry = None
+    for cname, lines in comps.items():
+        if entry is None:
+            entry = cname  # first computation printed is ENTRY in XLA dumps
+        for line in lines:
+            mw = _WHILE_RE.search(line)
+            if mw:
+                cond, body = mw.group(1), mw.group(2)
+                trips = _trip_count(comps.get(cond, []))
+                edges[cname].append((body, trips))
+                edges[cname].append((cond, trips + 1))
+                continue
+            mcall = _CALL_RE.search(line)
+            if mcall:
+                edges[cname].append((mcall.group(1), 1))
+                continue
+            mcond = _COND_RE.search(line)
+            if mcond:
+                branches = (
+                    mcond.group(1).split(",")
+                    if mcond.group(1)
+                    else [mcond.group(2), mcond.group(3)]
+                )
+                for b in branches:
+                    b = b.strip().lstrip("%")
+                    if b:
+                        edges[cname].append((b, 1))
+
+    # ENTRY detection: computation not referenced as a child
+    children = {c for lst in edges.values() for c, _ in lst}
+    roots = [c for c in comps if c not in children]
+    mult: dict[str, float] = defaultdict(float)
+    for r in roots:
+        mult[r] += 1.0
+    # propagate (computations are a DAG; iterate in dependency order)
+    order = list(comps.keys())
+    changed = True
+    it = 0
+    while changed and it < 50:
+        changed = False
+        it += 1
+        new = defaultdict(float)
+        for r in roots:
+            new[r] += 1.0
+        for parent in order:
+            if mult.get(parent, 0) <= 0:
+                continue
+            for child, m in edges.get(parent, []):
+                new[child] += mult[parent] * m
+        if any(abs(new[k] - mult.get(k, 0)) > 0.5 for k in set(new) | set(mult)):
+            changed = True
+        mult = new
+
+    # ---- 4. accumulate ------------------------------------------------------
+    flops = 0.0
+    dot_bytes = 0.0
+    colls: dict[str, float] = defaultdict(float)
+    n_coll = 0
+    for cname, lines in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        tab = symtab[cname]
+        for line in lines:
+            md = _DEF_RE.match(line)
+            if not md:
+                continue
+            rhs = md.group(1), md.group(2)
+            name, body = rhs
+            out_shape = _first_shape(body)
+            if _DOT_RE.search(body):
+                if out_shape is None:
+                    continue
+                dt, dims = out_shape
+                out_elems = 1
+                for d in dims:
+                    out_elems *= d
+                k = 1
+                mc = _CONTRACT_RE.search(body)
+                ops = _OPERANDS_RE.search(body[body.index("dot(") :])
+                lhs_name = None
+                if ops:
+                    lhs_name = ops.group(1).split(",")[0].strip().lstrip("%")
+                    lhs_name = lhs_name.split(" ")[-1].lstrip("%")
+                if mc and lhs_name and lhs_name in tab:
+                    ldims = tab[lhs_name][1]
+                    for ci in mc.group(1).split(","):
+                        if ci != "" and int(ci) < len(ldims):
+                            k *= ldims[int(ci)]
+                flops += m * 2.0 * out_elems * k
+                # traffic: result + operands
+                tb = _shape_bytes(dt, dims)
+                if ops:
+                    for oname in ops.group(1).split(","):
+                        oname = oname.strip().split(" ")[-1].lstrip("%")
+                        if oname in tab:
+                            tb += _shape_bytes(*tab[oname])
+                dot_bytes += m * tb
+            else:
+                mcoll = _COLL_RE.search(body)
+                if mcoll and out_shape:
+                    kind = mcoll.group(1)
+                    colls[kind] += m * _shape_bytes(*out_shape)
+                    n_coll += 1
+
+    return {
+        "flops": flops,
+        "dot_bytes": dot_bytes,
+        "collectives": dict(colls),
+        "n_collective_sites": n_coll,
+        "n_computations": len(comps),
+    }
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    """lax.scan/fori cond: compare(iter, constant) — take that constant."""
+    consts: dict[str, int] = {}
+    for line in cond_lines:
+        md = _DEF_RE.match(line)
+        if not md:
+            continue
+        mm = re.search(r"constant\((\d+)\)", md.group(2))
+        if mm and re.match(r"\s*[su]\d+\[\]", md.group(2)):
+            consts[md.group(1)] = int(mm.group(1))
+    for line in cond_lines:
+        if "compare(" in line:
+            ops = _OPERANDS_RE.search(line[line.index("compare(") :])
+            if ops:
+                for oname in ops.group(1).split(","):
+                    oname = oname.strip().split(" ")[-1].lstrip("%")
+                    if oname in consts:
+                        return consts[oname]
+    # fallback: any scalar int constant in cond
+    return max(consts.values(), default=1)

@@ -1,0 +1,149 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+"""Roofline analysis per (arch × shape) on the single-pod mesh.
+
+HLO FLOPs / matmul-traffic / collective-bytes come from a loop-aware parse of
+the compiled per-device SPMD module (``benchmarks.hlo_analysis``): every
+``while`` body (layer scan, attention chunk scans, MoE expert scan, loss
+chunks, remat recomputes) is weighted by its trip count — the numbers
+``compiled.cost_analysis()`` cannot give (it counts loop bodies once).
+
+Terms (seconds per step, TPU v5e):
+  compute    = HLO_dot_FLOPs_per_device / 197e12
+  memory     = matmul_traffic_bytes_per_device / 819e9   (operands + results;
+               assumes elementwise chains fuse — the MXU-pipeline bound)
+  collective = collective_payload_bytes_per_device / 50e9
+
+plus MODEL_FLOPS = 6·N_active·D (train) / 2·N_active·D (serve) and the
+usefulness ratio MODEL_FLOPS / (HLO_FLOPs × chips), which exposes remat /
+recompute / dispatch waste.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--arch A] [--shape S] [--variant V]
+"""
+import argparse
+import json
+import time
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link
+CHIPS = 256  # single pod
+
+RESULTS = "results/roofline"
+
+
+def measure_cell(arch: str, shape_name: str, variant: str = "baseline") -> dict:
+    import jax
+
+    from benchmarks.hlo_analysis import parse_module
+    from repro.configs.base import SHAPES, get_arch
+    from repro.launch.dryrun import analytic_flops, build_cell, param_counts
+    from repro.launch.mesh import make_production_mesh
+
+    cfg0 = get_arch(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=False)
+
+    t0 = time.time()
+    policy = "dots" if "dots" in variant else "full"
+    fn, args, _ = build_cell(cfg0, shape, mesh, remat_policy=policy)
+    with jax.set_mesh(mesh):
+        compiled = fn.lower(*args).compile()
+    parsed = parse_module(compiled.as_text())
+    ma = compiled.memory_analysis()
+    peak_bytes = int(
+        ma.argument_size_in_bytes
+        + ma.output_size_in_bytes
+        + ma.temp_size_in_bytes
+        - ma.alias_size_in_bytes
+    )
+
+    flops_dev = parsed["flops"]
+    bytes_dev = parsed["dot_bytes"]  # matmul-traffic bound (fused elementwise)
+    coll_bytes = parsed["collectives"]
+    coll_total = sum(coll_bytes.values())
+
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    collective_s = coll_total / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+
+    af = analytic_flops(cfg0, shape)
+    pc = param_counts(cfg0)
+    hlo_global = flops_dev * CHIPS
+    ratio = af["model_flops"] / hlo_global if hlo_global else float("nan")
+
+    # step time bound & roofline fraction: useful model FLOPs per second at
+    # the bound implied by the dominant term
+    step_bound_s = max(terms.values())
+    mfu_bound = (
+        af["total"] / (step_bound_s * CHIPS * PEAK_FLOPS)
+        if step_bound_s > 0
+        else float("nan")
+    )
+
+    return {
+        "arch": arch,
+        "shape": shape_name,
+        "variant": variant,
+        "chips": CHIPS,
+        "hlo_flops_per_device": flops_dev,
+        "hlo_bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": coll_total,
+        "collective_by_kind": coll_bytes,
+        "peak_bytes_per_device": peak_bytes,
+        "terms_s": terms,
+        "bottleneck": bottleneck,
+        "model_flops": af["model_flops"],
+        "attn_flops": af["attn_flops"],
+        "useful_ratio": ratio,
+        "roofline_fraction": mfu_bound,
+        "params": pc,
+        "measure_s": time.time() - t0,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs.base import cells, get_arch, list_archs
+
+    os.makedirs(RESULTS, exist_ok=True)
+    archs = [args.arch] if args.arch else list_archs()
+    for arch in archs:
+        cfg = get_arch(arch)
+        shapes = [args.shape] if args.shape else [s.name for s in cells(cfg)]
+        for sname in shapes:
+            out_path = os.path.join(
+                RESULTS, f"{arch}_{sname}_{args.variant}.json"
+            )
+            if os.path.exists(out_path) and not args.force:
+                continue
+            try:
+                rec = measure_cell(arch, sname, args.variant)
+            except Exception as e:  # noqa: BLE001
+                rec = {"arch": arch, "shape": sname, "error": str(e)[-2000:]}
+            with open(out_path, "w") as f:
+                json.dump(rec, f, indent=1)
+            if "error" in rec:
+                print(f"[roofline] {arch} {sname}: ERROR {rec['error'][:200]}")
+            else:
+                t = rec["terms_s"]
+                print(
+                    f"[roofline] {arch} {sname}: "
+                    f"C={t['compute']*1e3:.1f}ms M={t['memory']*1e3:.1f}ms "
+                    f"X={t['collective']*1e3:.1f}ms → {rec['bottleneck']}"
+                    f" (useful={rec['useful_ratio']:.2f}, "
+                    f"roofline={rec['roofline_fraction']*100:.1f}%)",
+                    flush=True,
+                )
+
+
+if __name__ == "__main__":
+    main()

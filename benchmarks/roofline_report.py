@@ -1,0 +1,106 @@
+"""Render §Dry-run / §Roofline tables for EXPERIMENTS.md from saved results.
+
+Adds the TPU-adjusted collective term X_adj to every record:
+
+  X_adj = [ 0.5·AG + 0.5·(2/16)·AR + 0.5·permute + 0.5·A2A ] / 50 GB/s
+
+assumptions (stated in EXPERIMENTS.md): (1) activation/grad collectives move
+bf16 on TPU where the CPU lowering placed f32 converts before the collective
+(×0.5); (2) all-reduces whose consumers are sharded lower as reduce-scatter
+(+ a partial gather) on TPU — the CPU partitioner lacks that pass (×2/16).
+
+Usage: PYTHONPATH=src:. python -m benchmarks.roofline_report > results/report.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+
+PEAK_FLOPS = 197e12
+ICI_BW = 50e9
+CHIPS = 256
+HBM = 16 * 2**30
+
+
+def adjusted_collective_s(by_kind: dict) -> float:
+    ag = by_kind.get("all-gather", 0.0)
+    ar = by_kind.get("all-reduce", 0.0)
+    cp = by_kind.get("collective-permute", 0.0)
+    a2a = by_kind.get("all-to-all", 0.0)
+    rs = by_kind.get("reduce-scatter", 0.0)
+    return (0.5 * ag + 0.5 * (2 / 16) * ar + 0.5 * cp + 0.5 * a2a + 0.5 * rs) / ICI_BW
+
+
+def load_roofline(variant_filter=None):
+    rows = []
+    for f in sorted(glob.glob("results/roofline/*.json")):
+        r = json.load(open(f))
+        if "error" in r:
+            continue
+        if variant_filter and r.get("variant") != variant_filter:
+            continue
+        t = r["terms_s"]
+        x_adj = adjusted_collective_s(r["collective_by_kind"])
+        step = max(t["compute"], t["memory"], x_adj)
+        r["x_adj_s"] = x_adj
+        r["step_bound_s"] = step
+        r["bottleneck_adj"] = max(
+            {"compute": t["compute"], "memory": t["memory"], "collective": x_adj},
+            key=lambda k: {"compute": t["compute"], "memory": t["memory"],
+                           "collective": x_adj}[k],
+        )
+        total_useful = r["model_flops"] + r["attn_flops"]
+        r["roofline_adj"] = (
+            total_useful / (step * CHIPS * PEAK_FLOPS) if step > 0 else 0.0
+        )
+        rows.append(r)
+    return rows
+
+
+def roofline_table(rows) -> str:
+    hdr = (
+        "| arch | shape | variant | C (ms) | M (ms) | X_raw (ms) | X_adj (ms) "
+        "| bound (adj) | useful | roofline (adj) | peak GiB/dev |\n"
+        "|---|---|---|---:|---:|---:|---:|---|---:|---:|---:|\n"
+    )
+    out = [hdr]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["variant"])):
+        t = r["terms_s"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['variant']} "
+            f"| {t['compute']*1e3:.1f} | {t['memory']*1e3:.1f} "
+            f"| {t['collective']*1e3:.1f} | {r['x_adj_s']*1e3:.1f} "
+            f"| {r['bottleneck_adj']} | {r['useful_ratio']:.2f} "
+            f"| {r['roofline_adj']*100:.1f}% "
+            f"| {r.get('peak_bytes_per_device', 0)/2**30:.1f} |\n"
+        )
+    return "".join(out)
+
+
+def dryrun_table() -> str:
+    hdr = (
+        "| arch | shape | mesh | ok | compile (s) | peak GiB/dev | HLO colls |\n"
+        "|---|---|---|---|---:|---:|---:|\n"
+    )
+    out = [hdr]
+    for f in sorted(glob.glob("results/dryrun/*.json")):
+        r = json.load(open(f))
+        peak = r.get("memory", {}).get("peak_bytes_per_device", 0) / 2**30
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {'✓' if r['ok'] else '✗ ' + r.get('error', '')[:60]} "
+            f"| {r.get('compile_s', 0):.0f} | {peak:.1f} "
+            f"| {r.get('collectives', {}).get('n_collective_ops', 0)} |\n"
+        )
+    return "".join(out)
+
+
+def main():
+    print("## §Dry-run (all cells × both meshes)\n")
+    print(dryrun_table())
+    print("\n## §Roofline (single-pod, loop-aware HLO accounting)\n")
+    print(roofline_table(load_roofline()))
+
+
+if __name__ == "__main__":
+    main()

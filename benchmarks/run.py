@@ -1,0 +1,38 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV and writes results/bench.json.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+
+def main() -> None:
+    from benchmarks.paper_benchmarks import ALL
+
+    rows = []
+    print("name,us_per_call,derived")
+    for bench in ALL:
+        t0 = time.time()
+        try:
+            for name, us, derived in bench():
+                print(f"{name},{us:.1f},{derived}")
+                rows.append(
+                    {"name": name, "us_per_call": us, "derived": derived}
+                )
+        except Exception as e:  # noqa: BLE001
+            print(f"{bench.__name__},-1,ERROR:{e}")
+            rows.append({"name": bench.__name__, "error": str(e)})
+        rows.append(
+            {"name": f"_{bench.__name__}_wall_s", "us_per_call": 0,
+             "derived": f"{time.time()-t0:.1f}s"}
+        )
+    os.makedirs("results", exist_ok=True)
+    with open("results/bench.json", "w") as f:
+        json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

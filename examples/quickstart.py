@@ -1,0 +1,59 @@
+"""Quickstart: the Blaze MapReduce API in five minutes.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    DistRange,
+    data_mesh,
+    distribute,
+    make_dist_hashmap,
+    map_reduce,
+    topk,
+)
+
+# ---------------------------------------------------------------------------
+# 1. Monte-Carlo π — the paper's Appendix A.2, small fixed key range
+# ---------------------------------------------------------------------------
+from repro.core.algorithms import estimate_pi
+
+print("π ≈", estimate_pi(1_000_000))
+
+# ---------------------------------------------------------------------------
+# 2. Word count — the paper's Appendix A.1, DistHashMap target
+# ---------------------------------------------------------------------------
+lines = np.array(
+    [[3, 1, 4, 1], [5, 9, 2, 6], [5, 3, 5, -1]], dtype=np.int32
+)  # token ids, -1 = padding
+lines_v = distribute(lines)
+
+
+def wordcount_mapper(line_idx, tokens, emit):
+    emit(tokens, 1, mask=tokens >= 0)  # batched emit, masked lanes
+
+
+counts = make_dist_hashmap(data_mesh(), 64, (), jnp.int32, "sum")
+counts = map_reduce(lines_v, wordcount_mapper, "sum", counts)
+print("word counts:", dict(sorted(counts.to_dict().items())))
+
+# ---------------------------------------------------------------------------
+# 3. Custom mapper over a DistRange with a dense target
+# ---------------------------------------------------------------------------
+
+
+def squares_mapper(v, emit):
+    emit(v % 4, v * v)  # key = v mod 4, value = v²
+
+
+sums = map_reduce(DistRange(0, 100, 1), squares_mapper, "sum",
+                  jnp.zeros((4,), jnp.int32))
+print("Σ v² by v%4:", [int(x) for x in sums])
+
+# ---------------------------------------------------------------------------
+# 4. Distributed top-k with a custom score
+# ---------------------------------------------------------------------------
+pts = distribute(np.random.RandomState(0).randn(10_000, 3).astype(np.float32))
+closest = topk(pts, 5, score_fn=lambda x: -jnp.sum(x * x))  # nearest to 0
+print("5 points nearest the origin:\n", closest)

@@ -1,0 +1,35 @@
+"""Blaze core: in-memory MapReduce + distributed containers on SPMD JAX."""
+from repro.core.containers import (
+    EMPTY_KEY,
+    DistHashMap,
+    DistRange,
+    DistVector,
+    collect,
+    data_mesh,
+    distribute,
+    foreach,
+    make_dist_hashmap,
+    topk,
+)
+from repro.core.mapreduce import MapReduceStats, map_reduce
+from repro.data.text import load_file
+from repro.core.reducers import Reducer, custom_reducer, get_reducer
+
+__all__ = [
+    "EMPTY_KEY",
+    "DistHashMap",
+    "DistRange",
+    "DistVector",
+    "MapReduceStats",
+    "Reducer",
+    "collect",
+    "custom_reducer",
+    "data_mesh",
+    "distribute",
+    "foreach",
+    "get_reducer",
+    "load_file",
+    "make_dist_hashmap",
+    "map_reduce",
+    "topk",
+]

@@ -1,0 +1,30 @@
+"""The paper's §3 applications, each expressed with the Blaze MapReduce API."""
+from repro.core.algorithms.gmm import GMMResult, gmm_em, gmm_em_reference
+from repro.core.algorithms.kmeans import KMeansResult, kmeans, kmeans_reference
+from repro.core.algorithms.knn import KNNResult, knn, knn_full_sort
+from repro.core.algorithms.pagerank import (
+    PageRankResult,
+    pagerank,
+    pagerank_reference,
+)
+from repro.core.algorithms.pi import estimate_pi, estimate_pi_handrolled
+from repro.core.algorithms.wordcount import counts_dict, wordcount
+
+__all__ = [
+    "GMMResult",
+    "KMeansResult",
+    "KNNResult",
+    "PageRankResult",
+    "counts_dict",
+    "estimate_pi",
+    "estimate_pi_handrolled",
+    "gmm_em",
+    "gmm_em_reference",
+    "kmeans",
+    "kmeans_reference",
+    "knn",
+    "knn_full_sort",
+    "pagerank",
+    "pagerank_reference",
+    "wordcount",
+]

@@ -1,0 +1,199 @@
+"""Expectation-Maximization for Gaussian Mixtures (paper §3.1.4, Fig. 7).
+
+Six MapReduce-family operations per iteration, exactly the paper's plan:
+
+  1. densities  p_ik  (Eq. 2)  — ``foreach`` over points (elementwise map)
+  2. membership w_ik  (Eq. 3)  — ``foreach``
+  3. N_k = Σ_i w_ik            — MapReduce, dense [K] "sum"
+  4. Σ_i w_ik x_i    (Eq. 5)   — MapReduce, dense [K, d] "sum"
+  5. Σ_i w_ik (x−μ)(x−μ)ᵀ (Eq. 6) — MapReduce, dense [K, d, d] "sum"
+  6. log-likelihood  (Eq. 7)   — MapReduce, dense [1] "sum"
+
+All K-keyed targets are small-fixed-key-range dense accumulators, so each op
+lowers to a per-device dense partial + one ``psum`` — the hand-written plan.
+Points are stored distributedly; per-point state (densities/memberships) lives
+beside the point in one DistVector of rows ``[x | p-or-w]``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core import DistVector, distribute, foreach, map_reduce
+
+
+def _gauss_env(alpha, mu, sigma):
+    """Precompute per-component precision + normalisation (host, K is tiny)."""
+    k, d = mu.shape
+    prec = np.linalg.inv(sigma)
+    logdet = np.linalg.slogdet(sigma)[1]
+    logcoef = -0.5 * (d * np.log(2 * np.pi) + logdet)
+    return (
+        jnp.asarray(alpha, jnp.float32),
+        jnp.asarray(mu, jnp.float32),
+        jnp.asarray(prec, jnp.float32),
+        jnp.asarray(logcoef, jnp.float32),
+    )
+
+
+def density_fn(row, env):
+    """foreach #1: fill the p-block with Gaussian densities p_ik (Eq. 2)."""
+    alpha, mu, prec, logcoef = env
+    d = mu.shape[1]
+    x = row[:d]
+    diff = x[None, :] - mu  # [K, d]
+    maha = jnp.einsum("kd,kde,ke->k", diff, prec, diff)
+    logp = logcoef - 0.5 * maha
+    return jnp.concatenate([x, logp])
+
+
+def membership_fn(row, env):
+    """foreach #2: p-block → w-block (Eq. 3), numerically via log-sum-exp."""
+    alpha, mu, prec, logcoef = env
+    d = mu.shape[1]
+    x, logp = row[:d], row[d:]
+    logw = logp + jnp.log(jnp.maximum(alpha, 1e-30))
+    logw = logw - jax.nn.logsumexp(logw)
+    return jnp.concatenate([x, jnp.exp(logw)])
+
+
+def nk_mapper(i, row, emit, mu):
+    k = mu.shape[0]
+    w = row[-k:]
+    emit(jnp.arange(k), w)
+
+
+def musum_mapper(i, row, emit, mu):
+    k, d = mu.shape
+    x, w = row[:d], row[-k:]
+    emit(jnp.arange(k), w[:, None] * x[None, :])
+
+
+def sigmasum_mapper(i, row, emit, mu):
+    k, d = mu.shape
+    x, w = row[:d], row[-k:]
+    diff = x[None, :] - mu  # [K, d]
+    outer = diff[:, :, None] * diff[:, None, :]
+    emit(jnp.arange(k), w[:, None, None] * outer)
+
+
+def loglik_mapper(i, row, emit, alpha):
+    k = alpha.shape[0]
+    logp = row[-k:]
+    emit(0, jax.nn.logsumexp(logp + jnp.log(jnp.maximum(alpha, 1e-30))))
+
+
+@dataclasses.dataclass
+class GMMResult:
+    alpha: np.ndarray
+    mu: np.ndarray
+    sigma: np.ndarray
+    log_likelihood: float
+    iterations: int
+    converged: bool
+    shuffle_bytes_per_iter: int
+
+
+def gmm_em(
+    points: np.ndarray,
+    k: int,
+    *,
+    init_mu: np.ndarray | None = None,
+    tol: float = 1e-4,
+    max_iters: int = 50,
+    mesh: Mesh | None = None,
+    engine: str = "eager",
+    seed: int = 0,
+) -> GMMResult:
+    n, d = points.shape
+    rng = np.random.RandomState(seed)
+    if init_mu is None:
+        init_mu = points[rng.choice(n, k, replace=False)]
+    alpha = np.full(k, 1.0 / k, np.float32)
+    mu = init_mu.astype(np.float32).copy()
+    sigma = np.tile(np.eye(d, dtype=np.float32), (k, 1, 1))
+
+    rows0 = np.concatenate([points, np.zeros((n, k), np.float32)], axis=1)
+    rows_v = distribute(rows0.astype(np.float32), mesh) if mesh else distribute(
+        rows0.astype(np.float32)
+    )
+
+    prev_ll, it, converged, stats = -np.inf, 0, False, None
+    for it in range(1, max_iters + 1):
+        env = _gauss_env(alpha, mu, sigma)
+        rows_p = foreach(rows_v, density_fn, env=env)  # op 1
+        # op 6 (log-likelihood of the CURRENT model) reads the p-block:
+        ll = map_reduce(
+            rows_p, loglik_mapper, "sum", jnp.zeros((1,), jnp.float32),
+            mesh=mesh, engine=engine, env=env[0],
+        )[0]
+        rows_w = foreach(rows_p, membership_fn, env=env)  # op 2
+        nk = map_reduce(  # op 3
+            rows_w, nk_mapper, "sum", jnp.zeros((k,), jnp.float32),
+            mesh=mesh, engine=engine, env=env[1],
+        )
+        musum, stats = map_reduce(  # op 4
+            rows_w, musum_mapper, "sum", jnp.zeros((k, d), jnp.float32),
+            mesh=mesh, engine=engine, env=env[1], return_stats=True,
+        )
+        nk_np = np.maximum(np.asarray(nk), 1e-8)
+        new_mu = np.asarray(musum) / nk_np[:, None]
+        sigsum = map_reduce(  # op 5
+            rows_w, sigmasum_mapper, "sum", jnp.zeros((k, d, d), jnp.float32),
+            mesh=mesh, engine=engine, env=jnp.asarray(new_mu), return_stats=False,
+        )
+        alpha = (nk_np / n).astype(np.float32)
+        mu = new_mu.astype(np.float32)
+        sigma = (
+            np.asarray(sigsum) / nk_np[:, None, None]
+            + 1e-4 * np.eye(d, dtype=np.float32)
+        ).astype(np.float32)
+
+        ll = float(ll)
+        if abs(ll - prev_ll) < tol * max(1.0, abs(prev_ll)):
+            converged = True
+            break
+        prev_ll = ll
+
+    fs = stats.finalize() if stats is not None else None
+    return GMMResult(
+        alpha=alpha, mu=mu, sigma=sigma, log_likelihood=float(ll),
+        iterations=it, converged=converged,
+        shuffle_bytes_per_iter=fs.shuffle_payload_bytes if fs else 0,
+    )
+
+
+def gmm_em_reference(points, k, init_mu, tol=1e-4, max_iters=50):
+    """numpy oracle with the same update rules + regularisation."""
+    n, d = points.shape
+    alpha = np.full(k, 1.0 / k)
+    mu = init_mu.astype(np.float64).copy()
+    sigma = np.tile(np.eye(d), (k, 1, 1))
+    prev_ll = -np.inf
+    for it in range(1, max_iters + 1):
+        prec = np.linalg.inv(sigma)
+        logdet = np.linalg.slogdet(sigma)[1]
+        diff = points[:, None, :] - mu[None]  # [n,k,d]
+        maha = np.einsum("nkd,kde,nke->nk", diff, prec, diff)
+        logp = -0.5 * (d * np.log(2 * np.pi) + logdet)[None] - 0.5 * maha
+        logw = logp + np.log(alpha)[None]
+        ll = np.log(np.exp(logw - logw.max(1, keepdims=True)).sum(1)).sum() + logw.max(1).sum()
+        w = np.exp(logw - logw.max(1, keepdims=True))
+        w /= w.sum(1, keepdims=True)
+        nk = np.maximum(w.sum(0), 1e-8)
+        new_mu = (w[:, :, None] * points[:, None, :]).sum(0) / nk[:, None]
+        diff2 = points[:, None, :] - new_mu[None]
+        sigma = (
+            np.einsum("nk,nkd,nke->kde", w, diff2, diff2) / nk[:, None, None]
+            + 1e-4 * np.eye(d)
+        )
+        alpha = nk / n
+        mu = new_mu
+        if abs(ll - prev_ll) < tol * max(1.0, abs(prev_ll)):
+            break
+        prev_ll = ll
+    return alpha, mu, sigma, ll, it

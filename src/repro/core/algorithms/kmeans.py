@@ -1,0 +1,114 @@
+"""K-Means (paper §3.1.3, Fig. 6) — one MapReduce per assignment step.
+
+The mapper assigns a point to its nearest centre and emits
+``(centre, [x…, 1])`` — per-centre sums and counts accumulate in one dense
+``[K, dim+1]`` target (small fixed key range).  The refinement step is serial,
+exactly as in the paper.  Centres are threaded via ``env``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core import DistVector, distribute, map_reduce
+
+
+def assign_mapper(i, x, emit, centers):
+    d2 = jnp.sum((centers - x[None, :]) ** 2, axis=1)
+    c = jnp.argmin(d2)
+    emit(c, jnp.concatenate([x, jnp.ones((1,), x.dtype)]))
+
+
+@dataclasses.dataclass
+class KMeansResult:
+    centers: np.ndarray
+    iterations: int
+    converged: bool
+    inertia: float
+    shuffle_bytes_per_iter: int
+
+
+def kmeans(
+    points: np.ndarray | DistVector,
+    k: int,
+    *,
+    init_centers: np.ndarray | None = None,
+    tol: float = 1e-4,
+    max_iters: int = 50,
+    mesh: Mesh | None = None,
+    engine: str = "eager",
+    wire: str = "none",
+    seed: int = 0,
+) -> KMeansResult:
+    if isinstance(points, DistVector):
+        pts_v = points
+        dim = points.data.shape[1]
+    else:
+        pts_v = distribute(points.astype(np.float32), mesh) if mesh else distribute(
+            points.astype(np.float32)
+        )
+        dim = points.shape[1]
+    if init_centers is None:
+        rng = np.random.RandomState(seed)
+        init_centers = np.asarray(pts_v.data)[
+            rng.choice(min(len(pts_v), 4096), k, replace=False)
+        ]
+    centers = jnp.asarray(init_centers, jnp.float32)
+
+    it, converged, stats = 0, False, None
+    for it in range(1, max_iters + 1):
+        sums, stats = map_reduce(
+            pts_v, assign_mapper, "sum", jnp.zeros((k, dim + 1), jnp.float32),
+            mesh=mesh, engine=engine, wire=wire, env=centers, return_stats=True,
+        )
+        counts = jnp.maximum(sums[:, dim:], 1.0)
+        new_centers = sums[:, :dim] / counts  # serial refinement step
+        move = float(jnp.max(jnp.sum((new_centers - centers) ** 2, axis=1)))
+        centers = new_centers
+        if move < tol * tol:
+            converged = True
+            break
+
+    # Final inertia via one more MapReduce (dense [1] target).
+    def inertia_mapper(i, x, emit, c):
+        d2 = jnp.sum((c - x[None, :]) ** 2, axis=1)
+        emit(0, jnp.min(d2))
+
+    inertia = map_reduce(
+        pts_v, inertia_mapper, "sum", jnp.zeros((1,), jnp.float32),
+        mesh=mesh, engine=engine, env=centers,
+    )[0]
+    fs = stats.finalize() if stats is not None else None
+    return KMeansResult(
+        centers=np.asarray(centers),
+        iterations=it,
+        converged=converged,
+        inertia=float(inertia),
+        shuffle_bytes_per_iter=fs.shuffle_payload_bytes if fs else 0,
+    )
+
+
+def kmeans_reference(
+    points: np.ndarray, init_centers: np.ndarray, tol: float = 1e-4,
+    max_iters: int = 50,
+) -> tuple[np.ndarray, int]:
+    """numpy oracle (same init, same convergence rule)."""
+    centers = init_centers.astype(np.float64).copy()
+    k = centers.shape[0]
+    for it in range(1, max_iters + 1):
+        d2 = ((points[:, None, :] - centers[None, :, :]) ** 2).sum(-1)
+        assign = d2.argmin(1)
+        new = np.stack(
+            [
+                points[assign == j].mean(0) if (assign == j).any() else centers[j]
+                for j in range(k)
+            ]
+        )
+        move = ((new - centers) ** 2).sum(1).max()
+        centers = new
+        if move < tol * tol:
+            break
+    return centers.astype(np.float32), it

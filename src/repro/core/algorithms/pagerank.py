@@ -1,0 +1,120 @@
+"""PageRank (paper §3.1.2, Fig. 5) — three MapReduce ops per iteration.
+
+Exactly the paper's decomposition:
+
+  MR1  total score of all sinks               (dense [1] target, "sum")
+  MR2  new scores from Eq. 1                  (dense [N] target, "sum")
+  MR3  max |Δscore| for the convergence test  (dense [1] target, "max")
+
+Links are stored distributedly (DistVector of [E, 2] edges); scores are a
+dense array threaded through ``env`` so one compiled executable serves every
+iteration.  The paper's Eq. 1 writes the damping constant as d = 0.15; the
+conventional damping is 0.85 — ``damping`` is a parameter (default 0.85) and
+the benchmark reports both conventions.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core import DistRange, DistVector, distribute, map_reduce
+
+
+def sink_mapper(p, emit, env):
+    scores, deg = env
+    emit(0, jnp.where(deg[p] == 0, scores[p], 0.0))
+
+
+def contrib_mapper(i, edge, emit, env):
+    scores, deg = env
+    src, dst = edge[0], edge[1]
+    emit(dst, scores[src] / jnp.maximum(deg[src], 1).astype(scores.dtype))
+
+
+def delta_mapper(p, emit, env):
+    old, new = env
+    emit(0, jnp.abs(new[p] - old[p]))
+
+
+@dataclasses.dataclass
+class PageRankResult:
+    scores: np.ndarray
+    iterations: int
+    converged: bool
+    shuffle_bytes_per_iter: int
+    pairs_shipped_per_iter: int
+
+
+def pagerank(
+    edges: np.ndarray,
+    n_pages: int,
+    *,
+    damping: float = 0.85,
+    tol: float = 1e-5,
+    max_iters: int = 100,
+    mesh: Mesh | None = None,
+    engine: str = "eager",
+    wire: str = "none",
+) -> PageRankResult:
+    edges_v = distribute(edges.astype(np.int32), mesh) if mesh else distribute(
+        edges.astype(np.int32)
+    )
+    deg = jnp.asarray(
+        np.bincount(edges[:, 0], minlength=n_pages).astype(np.int32)
+    )
+    pages = DistRange(0, n_pages, 1)
+    scores = jnp.full((n_pages,), 1.0 / n_pages, jnp.float32)
+    d = damping
+
+    it, converged = 0, False
+    stats2 = None
+    for it in range(1, max_iters + 1):
+        sink_total = map_reduce(
+            pages, sink_mapper, "sum", jnp.zeros((1,), jnp.float32),
+            mesh=mesh, engine=engine, env=(scores, deg),
+        )[0]
+        incoming, stats2 = map_reduce(
+            edges_v, contrib_mapper, "sum", jnp.zeros((n_pages,), jnp.float32),
+            mesh=mesh, engine=engine, wire=wire, env=(scores, deg),
+            return_stats=True,
+        )
+        new_scores = (1.0 - d) / n_pages + d * (incoming + sink_total / n_pages)
+        delta = map_reduce(
+            pages, delta_mapper, "max", jnp.zeros((1,), jnp.float32),
+            mesh=mesh, engine=engine, env=(scores, new_scores),
+        )[0]
+        scores = new_scores
+        if float(delta) < tol:
+            converged = True
+            break
+
+    fs = stats2.finalize() if stats2 is not None else None
+    return PageRankResult(
+        scores=np.asarray(scores),
+        iterations=it,
+        converged=converged,
+        shuffle_bytes_per_iter=fs.shuffle_payload_bytes if fs else 0,
+        pairs_shipped_per_iter=fs.pairs_shipped if fs else 0,
+    )
+
+
+def pagerank_reference(
+    edges: np.ndarray, n_pages: int, damping: float = 0.85,
+    tol: float = 1e-5, max_iters: int = 100,
+) -> np.ndarray:
+    """Dense numpy oracle for tests."""
+    deg = np.bincount(edges[:, 0], minlength=n_pages)
+    scores = np.full(n_pages, 1.0 / n_pages, np.float64)
+    for _ in range(max_iters):
+        sink_total = scores[deg == 0].sum()
+        incoming = np.zeros(n_pages)
+        np.add.at(incoming, edges[:, 1], scores[edges[:, 0]] / np.maximum(deg[edges[:, 0]], 1))
+        new = (1 - damping) / n_pages + damping * (incoming + sink_total / n_pages)
+        if np.abs(new - scores).max() < tol:
+            scores = new
+            break
+        scores = new
+    return scores.astype(np.float32)

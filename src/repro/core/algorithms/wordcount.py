@@ -1,0 +1,62 @@
+"""Word frequency count (paper §3.1.1, Fig. 4, Appendix A.1).
+
+Input lines arrive as fixed-width int32 token-id rows (padding = -1), i.e. the
+output of ``data.synthetic.zipf_corpus`` or ``data.text.load_and_tokenize``.
+The mapper emits one ``(word_id, 1)`` pair per live token — a batched emit, the
+TPU shape of the paper's per-word ``emit(word, 1)`` loop.  Target is a
+``DistHashMap`` keyed by word id.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core import (
+    DistHashMap,
+    distribute,
+    make_dist_hashmap,
+    map_reduce,
+)
+
+
+def wordcount_mapper(i, tokens, emit):
+    emit(tokens, 1, mask=tokens >= 0)
+
+
+def wordcount(
+    lines: np.ndarray,
+    *,
+    mesh: Mesh | None = None,
+    engine: str = "eager",
+    capacity_per_shard: int | None = None,
+    return_stats: bool = False,
+):
+    """Count token occurrences; returns a DistHashMap (and optional stats)."""
+    n_tokens_bound = int(lines.shape[0]) * int(lines.shape[1])
+    vocab_bound = int(lines.max()) + 1 if lines.size else 1
+    if capacity_per_shard is None:
+        capacity_per_shard = max(64, 4 * vocab_bound)
+    lines_v = distribute(lines, mesh) if mesh else distribute(lines)
+    hm = make_dist_hashmap(
+        mesh or _default_mesh(), capacity_per_shard, (), jnp.int32, "sum"
+    )
+    return map_reduce(
+        lines_v,
+        wordcount_mapper,
+        "sum",
+        hm,
+        mesh=mesh,
+        engine=engine,
+        return_stats=return_stats,
+    )
+
+
+def _default_mesh():
+    from repro.core.containers import data_mesh
+
+    return data_mesh()
+
+
+def counts_dict(hm: DistHashMap) -> dict[int, int]:
+    return {k: int(v) for k, v in hm.to_dict().items()}

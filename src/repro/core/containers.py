@@ -1,0 +1,390 @@
+"""Blaze distributed containers, adapted to SPMD JAX.
+
+The paper's three containers map onto sharded ``jax.Array``s:
+
+* ``DistRange``   — start/stop/step only; local values are synthesised from
+                    ``iota`` + the device's mesh coordinate (no storage, as in
+                    the paper).
+* ``DistVector``  — an array sharded on axis 0 over the ``data`` mesh axis,
+                    with ``foreach``, ``topk`` (O(n + k log k) time, O(k·shards)
+                    wire bytes), and ``distribute``/``collect`` conversions.
+* ``DistHashMap`` — a fixed-capacity open-addressing (linear probing) table
+                    per shard.  XLA needs static shapes, so the dynamic C++
+                    hash map becomes a capacity-bounded table with fully
+                    vectorised round-based probing (see ``hashmap_insert``).
+
+Everything here is pure-functional: containers are pytrees, and all mutation
+returns new containers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.reducers import Reducer, get_reducer
+
+Array = jax.Array
+
+EMPTY_KEY = np.iinfo(np.int32).min  # open-addressing "slot free" sentinel
+DATA_AXIS = "data"
+
+
+# ---------------------------------------------------------------------------
+# Mesh helpers
+# ---------------------------------------------------------------------------
+
+
+def data_mesh(n_devices: int | None = None) -> Mesh:
+    """A 1-D mesh over (up to) all visible devices, axis name ``data``."""
+    devs = jax.devices()
+    if n_devices is not None:
+        devs = devs[:n_devices]
+    return Mesh(np.asarray(devs), (DATA_AXIS,))
+
+
+def _nshards(mesh: Mesh) -> int:
+    return mesh.shape[DATA_AXIS]
+
+
+# ---------------------------------------------------------------------------
+# Hashing (splitmix32 finaliser — cheap, good avalanche, uint32-wrap native)
+# ---------------------------------------------------------------------------
+
+
+def hash32(x: Array) -> Array:
+    """Vectorised splitmix32-style integer hash → uint32."""
+    x = x.astype(jnp.uint32)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    return x ^ (x >> 16)
+
+
+def shard_of_key(keys: Array, n_shards: int) -> Array:
+    """Ownership partition: which shard owns each key (high bits of the hash)."""
+    return (hash32(keys) >> 16) % jnp.uint32(n_shards)
+
+
+# ---------------------------------------------------------------------------
+# Eager local combine: sort + segmented scan, first-class (paper §2.3.1)
+# ---------------------------------------------------------------------------
+
+
+def unique_combine(
+    keys: Array, vals: Array, mask: Array, reducer: Reducer
+) -> tuple[Array, Array, Array]:
+    """Combine duplicate keys locally; returns same-length (keys, vals, valid).
+
+    Sorts by key, runs a segmented inclusive scan with the reducer's combine,
+    and keeps only the last element of each run.  Masked-out or duplicate
+    slots come back with ``key == EMPTY_KEY`` and ``valid == False``.  This is
+    the device-local *eager reduction* primitive: it is applied before any
+    bytes go on the wire.
+    """
+    n = keys.shape[0]
+    if n == 0:
+        return keys, vals, mask
+    # Push masked entries to the end by sorting on (masked, key).
+    sort_key = jnp.where(mask, keys, jnp.iinfo(jnp.int32).max)
+    order = jnp.argsort(sort_key)
+    skeys = jnp.take(sort_key, order)
+    svals = jnp.take(vals, order, axis=0)
+    smask = jnp.take(mask, order)
+
+    starts = jnp.concatenate([jnp.ones((1,), bool), skeys[1:] != skeys[:-1]])
+
+    def op(a, b):
+        av, af = a
+        bv, bf = b
+        bcast = bf.reshape(bf.shape + (1,) * (av.ndim - bf.ndim))
+        return jnp.where(bcast, bv, reducer.combine(av, bv)), af | bf
+
+    scanned, _ = jax.lax.associative_scan(op, (svals, starts), axis=0)
+    is_last = jnp.concatenate([skeys[1:] != skeys[:-1], jnp.ones((1,), bool)])
+    valid = is_last & smask
+    out_keys = jnp.where(valid, skeys, EMPTY_KEY)
+    ident = reducer.identity(vals.dtype)
+    vb = valid.reshape(valid.shape + (1,) * (svals.ndim - 1))
+    out_vals = jnp.where(vb, scanned, ident)
+    return out_keys, out_vals, valid
+
+
+# ---------------------------------------------------------------------------
+# DistHashMap: static-capacity open addressing with round-based probing
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class HashTable:
+    """One shard's table. ``keys[C]`` int32 (EMPTY_KEY = free), ``vals[C, ...]``."""
+
+    keys: Array
+    vals: Array
+    overflow: Array  # scalar int32: #pairs dropped because probing exhausted
+
+    @property
+    def capacity(self) -> int:
+        return self.keys.shape[0]
+
+
+def make_table(capacity: int, val_shape: tuple, val_dtype, reducer: Reducer) -> HashTable:
+    return HashTable(
+        keys=jnp.full((capacity,), EMPTY_KEY, jnp.int32),
+        vals=jnp.full((capacity,) + tuple(val_shape), reducer.identity(val_dtype), val_dtype),
+        overflow=jnp.zeros((), jnp.int32),
+    )
+
+
+def hashmap_insert(
+    table: HashTable,
+    keys: Array,
+    vals: Array,
+    valid: Array,
+    reducer: Reducer,
+    max_probes: int = 16,
+) -> HashTable:
+    """Insert/merge a batch of pairs with *unique* keys into the table.
+
+    Vectorised linear probing, one scatter round per probe distance:
+
+      round r:  slot_i = (h_i + r) mod C for every unplaced pair i
+        1. pairs whose key already sits at slot_i deposit (gather-combine-set,
+           safe because batch keys are unique: ≤1 pair matches a slot),
+        2. pairs whose slot is FREE race to claim it via scatter-max on the
+           hashed key (deterministic winner); winners deposit next round
+           re-check (their key is now at the slot),
+        3. losers continue to round r+1.
+
+    Callers must pre-combine duplicates (``unique_combine``) — that is the
+    eager-reduction invariant, so it is free by construction.
+    """
+    cap = table.capacity
+    h = (hash32(keys) % jnp.uint32(cap)).astype(jnp.int32)
+    tkeys, tvals = table.keys, table.vals
+    active = valid
+
+    def round_body(r, state):
+        tkeys, tvals, active = state
+        slot = ((h + r) % cap).astype(jnp.int32)
+        slot_key = jnp.take(tkeys, slot)
+
+        # (2) claim free slots: scatter-max of (key ^ sign) — any deterministic
+        # tie-break works; we use max of the raw key with EMPTY_KEY as floor.
+        want = active & (slot_key == EMPTY_KEY)
+        claim = jnp.full((cap,), EMPTY_KEY, jnp.int32)
+        claim = claim.at[jnp.where(want, slot, cap)].max(
+            jnp.where(want, keys, EMPTY_KEY), mode="drop"
+        )
+        tkeys = jnp.where(claim != EMPTY_KEY, claim, tkeys)
+
+        # (1)+(2) deposit where our key is now resident at our slot.
+        slot_key = jnp.take(tkeys, slot)
+        deposit = active & (slot_key == keys)
+        cur = jnp.take(tvals, slot, axis=0)
+        merged = reducer.combine(cur, vals)
+        db = deposit.reshape(deposit.shape + (1,) * (vals.ndim - 1))
+        new_at_slot = jnp.where(db, merged, cur)
+        tvals = tvals.at[jnp.where(deposit, slot, cap)].set(new_at_slot, mode="drop")
+
+        active = active & ~deposit
+        return tkeys, tvals, active
+
+    tkeys, tvals, active = jax.lax.fori_loop(
+        0, max_probes, round_body, (tkeys, tvals, active)
+    )
+    overflow = table.overflow + jnp.sum(active).astype(jnp.int32)
+    return HashTable(tkeys, tvals, overflow)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DistHashMap:
+    """Distributed hash map: one ``HashTable`` shard per device on ``data``.
+
+    ``table.keys``/``table.vals`` have a leading [n_shards] dim sharded over
+    the data axis.  Key ownership: ``shard_of_key(k, n_shards)``.
+    """
+
+    table: HashTable
+    reducer_name: str = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def capacity_per_shard(self) -> int:
+        return self.table.keys.shape[-1]
+
+    @property
+    def n_shards(self) -> int:
+        return self.table.keys.shape[0]
+
+    def to_dict(self) -> dict[int, np.ndarray]:
+        """Host-side materialisation (the paper's ``collect``)."""
+        keys = np.asarray(jax.device_get(self.table.keys)).reshape(-1)
+        vals = np.asarray(jax.device_get(self.table.vals))
+        vals = vals.reshape((-1,) + vals.shape[2:])
+        live = keys != EMPTY_KEY
+        return {int(k): vals[i] for i, k in enumerate(keys) if live[i]}
+
+    def size(self) -> int:
+        keys = np.asarray(jax.device_get(self.table.keys))
+        return int((keys != EMPTY_KEY).sum())
+
+    def total_overflow(self) -> int:
+        return int(np.asarray(jax.device_get(self.table.overflow)).sum())
+
+
+def make_dist_hashmap(
+    mesh: Mesh,
+    capacity_per_shard: int,
+    val_shape: tuple = (),
+    val_dtype=jnp.float32,
+    reducer: str | Reducer = "sum",
+) -> DistHashMap:
+    red = get_reducer(reducer)
+    n = _nshards(mesh)
+    sharding = NamedSharding(mesh, P(DATA_AXIS))
+    keys = jax.device_put(
+        jnp.full((n, capacity_per_shard), EMPTY_KEY, jnp.int32), sharding
+    )
+    vals = jax.device_put(
+        jnp.full(
+            (n, capacity_per_shard) + tuple(val_shape),
+            red.identity(val_dtype),
+            val_dtype,
+        ),
+        sharding,
+    )
+    overflow = jax.device_put(jnp.zeros((n,), jnp.int32), sharding)
+    return DistHashMap(
+        HashTable(keys, vals, overflow), reducer_name=red.name
+    )
+
+
+# ---------------------------------------------------------------------------
+# DistRange / DistVector
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DistRange:
+    """start/stop/step — no storage; shards synthesise their local subrange."""
+
+    start: int = dataclasses.field(metadata=dict(static=True))
+    stop: int = dataclasses.field(metadata=dict(static=True))
+    step: int = dataclasses.field(metadata=dict(static=True))
+
+    def __len__(self) -> int:
+        return max(0, -(-(self.stop - self.start) // self.step))
+
+    def local_values(self, shard_idx: Array, n_shards: int) -> tuple[Array, Array]:
+        """(values, valid) for this shard: contiguous block partitioning."""
+        n = len(self)
+        per = -(-n // n_shards)
+        local_i = jnp.arange(per) + shard_idx * per
+        valid = local_i < n
+        vals = self.start + local_i * self.step
+        return vals.astype(jnp.int32), valid
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DistVector:
+    """Array sharded on axis 0 across ``data``; ``n`` true (pre-pad) length."""
+
+    data: Array
+    n: int = dataclasses.field(metadata=dict(static=True))
+
+    def __len__(self) -> int:
+        return self.n
+
+    def local_mask(self, shard_idx: Array, n_shards: int) -> Array:
+        per = self.data.shape[0] // n_shards
+        idx = jnp.arange(per) + shard_idx * per
+        return idx < self.n
+
+
+def distribute(x: np.ndarray | Array, mesh: Mesh | None = None) -> DistVector:
+    """Paper's ``distribute``: host array → DistVector (pads to shard multiple)."""
+    mesh = mesh or data_mesh()
+    x = np.asarray(x)
+    n = x.shape[0]
+    shards = _nshards(mesh)
+    pad = (-n) % shards
+    if pad:
+        x = np.concatenate([x, np.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
+    arr = jax.device_put(x, NamedSharding(mesh, P(DATA_AXIS)))
+    return DistVector(arr, n)
+
+
+def collect(v: DistVector) -> np.ndarray:
+    """Paper's ``collect``: DistVector → host array (drops padding)."""
+    return np.asarray(jax.device_get(v.data))[: v.n]
+
+
+_FOREACH_CACHE: dict = {}
+
+
+def foreach(v: DistVector, fn: Callable, env=None) -> DistVector:
+    """Apply ``fn`` to each element in parallel (may mutate the element).
+
+    ``fn(x)`` or ``fn(x, env)`` — iteration-varying state goes through ``env``
+    so a single compiled executable serves every iteration (same contract as
+    ``map_reduce``).
+    """
+    env_sig = "|".join(
+        f"{getattr(x, 'shape', ())}{getattr(x, 'dtype', type(x))}"
+        for x in jax.tree.leaves(env)
+    )
+    key = (fn, v.data.shape, str(v.data.dtype), env is None, env_sig)
+    if key not in _FOREACH_CACHE:
+        if env is None:
+            _FOREACH_CACHE[key] = jax.jit(lambda d, e: jax.vmap(fn)(d))
+        else:
+            _FOREACH_CACHE[key] = jax.jit(
+                lambda d, e: jax.vmap(lambda x: fn(x, e))(d)
+            )
+    out = _FOREACH_CACHE[key](v.data, env)
+    return DistVector(out, v.n)
+
+
+def topk(
+    v: DistVector,
+    k: int,
+    score_fn: Callable[[Array], Array] | None = None,
+    mesh: Mesh | None = None,
+) -> np.ndarray:
+    """Paper's DistVector.topk: local top-k per shard, then top-k of candidates.
+
+    O(n + k log k) work and O(k · n_shards) wire bytes — the shuffle moves only
+    locally-selected candidates, never the full vector (eager reduction again,
+    with ``top_k`` as the monoid).
+    """
+    mesh = mesh or data_mesh()
+    shards = _nshards(mesh)
+    kk = min(k, v.data.shape[0] // shards)
+
+    @jax.jit
+    def _local(data, nvalid):
+        def per_shard(x, base):
+            scores = jax.vmap(score_fn)(x) if score_fn else x.astype(jnp.float32)
+            idx_in = jnp.arange(x.shape[0]) + base
+            scores = jnp.where(idx_in < nvalid, scores, -jnp.inf)
+            s, i = jax.lax.top_k(scores, kk)
+            return s, jnp.take(x, i, axis=0)
+
+        per = data.shape[0] // shards
+        xs = data.reshape((shards, per) + data.shape[1:])
+        bases = jnp.arange(shards) * per
+        return jax.vmap(per_shard)(xs, bases)
+
+    s, cand = _local(v.data, v.n)  # [shards, kk], [shards, kk, ...]
+    s = np.asarray(jax.device_get(s)).reshape(-1)
+    cand = np.asarray(jax.device_get(cand))
+    cand = cand.reshape((-1,) + cand.shape[2:])
+    order = np.argsort(-s)[:k]
+    return cand[order]

@@ -1,0 +1,171 @@
+"""Built-in and custom reducers (commutative monoids) for Blaze MapReduce.
+
+The paper ships ``"sum"``, ``"prod"``, ``"min"``, ``"max"`` as built-in reducers
+selectable by name, plus user-supplied reduce functions.  On TPU a reducer must
+additionally expose:
+
+* ``identity(dtype)``      — the monoid identity, used to initialise dense
+                             accumulators and to pad masked-out emits,
+* ``combine(a, b)``        — elementwise merge of two partials (jnp),
+* ``segment(vals, ids, n)``— reduce-by-key into a dense ``[n, ...]`` accumulator
+                             (the eager-reduction primitive),
+* ``collective(x, axis)``  — the matching mesh collective (``psum`` & friends),
+
+so the same user-visible name drives the thread-local (VMEM), device-local
+(HBM) and cross-device (ICI/DCN) levels of the reduction tree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Reducer:
+    """A commutative monoid usable at every level of the reduction tree."""
+
+    name: str
+    identity_fn: Callable[[Any], Array]
+    combine: Callable[[Array, Array], Array]
+    segment: Callable[[Array, Array, int], Array]
+    collective: Callable[[Array, str], Array]
+    # fused whole-axis reduction (jnp.sum/min/…) for the static-key fast
+    # path (§2.3.3: no id arrays when the key is known at trace time);
+    # None → fall back to the segment path
+    axis_reduce: Callable[..., Array] | None = None
+
+    def identity(self, dtype) -> Array:
+        return self.identity_fn(dtype)
+
+    def tree_combine(self, a, b):
+        return jax.tree.map(self.combine, a, b)
+
+
+def _seg_sum(vals: Array, ids: Array, n: int) -> Array:
+    return jax.ops.segment_sum(vals, ids, num_segments=n)
+
+
+def _seg_prod(vals: Array, ids: Array, n: int) -> Array:
+    return jax.ops.segment_prod(vals, ids, num_segments=n)
+
+
+def _seg_min(vals: Array, ids: Array, n: int) -> Array:
+    return jax.ops.segment_min(vals, ids, num_segments=n)
+
+
+def _seg_max(vals: Array, ids: Array, n: int) -> Array:
+    return jax.ops.segment_max(vals, ids, num_segments=n)
+
+
+def _minval(dtype) -> Array:
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.asarray(-jnp.inf, dtype)
+    return jnp.asarray(jnp.iinfo(dtype).min, dtype)
+
+
+def _maxval(dtype) -> Array:
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.asarray(jnp.inf, dtype)
+    return jnp.asarray(jnp.iinfo(dtype).max, dtype)
+
+
+SUM = Reducer(
+    name="sum",
+    identity_fn=lambda dt: jnp.asarray(0, dt),
+    combine=jnp.add,
+    segment=_seg_sum,
+    collective=lambda x, ax: jax.lax.psum(x, ax),
+    axis_reduce=jnp.sum,
+)
+
+PROD = Reducer(
+    name="prod",
+    identity_fn=lambda dt: jnp.asarray(1, dt),
+    combine=jnp.multiply,
+    segment=_seg_prod,
+    collective=lambda x, ax: jnp.exp(jax.lax.psum(jnp.log(x), ax)),
+    axis_reduce=jnp.prod,
+)
+
+MIN = Reducer(
+    name="min",
+    identity_fn=_maxval,
+    combine=jnp.minimum,
+    segment=_seg_min,
+    collective=lambda x, ax: jax.lax.pmin(x, ax),
+    axis_reduce=jnp.min,
+)
+
+MAX = Reducer(
+    name="max",
+    identity_fn=_minval,
+    combine=jnp.maximum,
+    segment=_seg_max,
+    collective=lambda x, ax: jax.lax.pmax(x, ax),
+    axis_reduce=jnp.max,
+)
+
+_BUILTIN: dict[str, Reducer] = {r.name: r for r in (SUM, PROD, MIN, MAX)}
+
+
+def custom_reducer(
+    name: str,
+    combine: Callable[[Array, Array], Array],
+    identity_fn: Callable[[Any], Array],
+) -> Reducer:
+    """Build a reducer from a user combine fn (the paper's custom-reducer API).
+
+    The segment / collective levels are synthesised from ``combine`` via an
+    associative scan over sorted keys and an ``all_gather`` + fold — correct for
+    any commutative monoid, at the cost of not using the fused psum fast path.
+    """
+
+    def _segment(vals: Array, ids: Array, n: int) -> Array:
+        order = jnp.argsort(ids)
+        svals, sids = jnp.take(vals, order, axis=0), jnp.take(ids, order)
+        # Segmented inclusive scan with ``combine``: reset at segment starts.
+        starts = jnp.concatenate([jnp.ones((1,), bool), sids[1:] != sids[:-1]])
+
+        def op(a, b):
+            av, af = a
+            bv, bf = b
+            return jnp.where(bf, bv, combine(av, bv)), af | bf
+
+        scanned, _ = jax.lax.associative_scan(op, (svals, starts), axis=0)
+        # Last element of each segment holds its total.
+        is_last = jnp.concatenate([sids[1:] != sids[:-1], jnp.ones((1,), bool)])
+        ident = identity_fn(vals.dtype)
+        out = jnp.full((n,) + vals.shape[1:], ident, vals.dtype)
+        safe_ids = jnp.where(is_last, sids, n)  # drop non-last into the void
+        return out.at[safe_ids].set(scanned, mode="drop")
+
+    def _collective(x: Array, axis: str) -> Array:
+        gathered = jax.lax.all_gather(x, axis)  # [n_dev, ...]
+
+        def fold(carry, nxt):
+            return combine(carry, nxt), None
+
+        first, rest = gathered[0], gathered[1:]
+        out, _ = jax.lax.scan(fold, first, rest)
+        return out
+
+    return Reducer(name, identity_fn, combine, _segment, _collective)
+
+
+def get_reducer(reducer: str | Reducer) -> Reducer:
+    """Resolve a reducer by name (paper API: pass ``"sum"`` etc.) or instance."""
+    if isinstance(reducer, Reducer):
+        return reducer
+    try:
+        return _BUILTIN[reducer]
+    except KeyError:
+        raise ValueError(
+            f"unknown reducer {reducer!r}; built-ins: {sorted(_BUILTIN)}"
+        ) from None

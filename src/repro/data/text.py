@@ -1,0 +1,42 @@
+"""Text loading + tokenization — the paper's ``load_file`` utility.
+
+``load_file(path)`` reads a text file into fixed-width rows of int32 word ids
+(padding = −1) ready for ``distribute`` + the word-count mapper, plus the
+id→word vocabulary for decoding results — the TPU-static analogue of the
+paper's "distributed vector of lines".  Words are interned on the host
+(first-seen order), so ids are dense and the DistHashMap stays small.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def tokenize_lines(
+    lines: list[str], *, max_words_per_line: int | None = None
+) -> tuple[np.ndarray, dict[int, str]]:
+    vocab: dict[str, int] = {}
+    toks: list[list[int]] = []
+    for line in lines:
+        row = []
+        for w in line.split():
+            w = w.strip().lower()
+            if not w:
+                continue
+            if w not in vocab:
+                vocab[w] = len(vocab)
+            row.append(vocab[w])
+        toks.append(row)
+    width = max_words_per_line or max((len(r) for r in toks), default=1)
+    out = np.full((len(toks), max(width, 1)), -1, np.int32)
+    for i, r in enumerate(toks):
+        out[i, : min(len(r), width)] = r[:width]
+    return out, {i: w for w, i in vocab.items()}
+
+
+def load_file(
+    path: str, *, max_words_per_line: int | None = None
+) -> tuple[np.ndarray, dict[int, str]]:
+    """Paper's ``blaze::util::load_file``: text file → (token rows, vocab)."""
+    with open(path, "r", errors="replace") as f:
+        lines = [ln for ln in f.read().splitlines() if ln.strip()]
+    return tokenize_lines(lines, max_words_per_line=max_words_per_line)

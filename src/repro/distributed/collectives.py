@@ -1,0 +1,65 @@
+"""Compressed collectives — the fast-serialization analogue on the wire.
+
+Used by the shard_map data-parallel training path and the MapReduce engine.
+``compressed_psum`` narrows the payload (bf16, or int8 with a shared scale)
+before the ring reduce; ``error_feedback`` keeps iterative algorithms unbiased
+by re-injecting this round's quantisation error next round.
+
+XLA exposes no int8 all-reduce, so the int8 mode reduces in int32 over the
+int8 lattice — numerically identical to an int8 wire; stats report the int8
+byte count a native lowering would move (see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def compressed_psum(x: Array, axis: str, *, wire: str = "none") -> Array:
+    if wire == "none":
+        return jax.lax.psum(x, axis)
+    if wire == "bf16":
+        return jax.lax.psum(x.astype(jnp.bfloat16), axis).astype(x.dtype)
+    if wire == "int8":
+        absmax = jax.lax.pmax(jnp.max(jnp.abs(x.astype(jnp.float32))), axis)
+        scale = jnp.maximum(absmax / 127.0, 1e-30)
+        q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+        s = jax.lax.psum(q.astype(jnp.int32), axis)
+        return (s.astype(jnp.float32) * scale).astype(x.dtype)
+    raise ValueError(f"unknown wire {wire!r}")
+
+
+def psum_with_feedback(
+    x: Array, residual: Array, axis: str, *, wire: str
+) -> tuple[Array, Array]:
+    """(reduced, new_residual): error feedback around the lossy reduce."""
+    target = x.astype(jnp.float32) + residual
+    reduced = compressed_psum(target, axis, wire=wire)
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis)
+    # per-device view of what the wire delivered for *this* shard's input
+    recovered = reduced / n  # mean contribution proxy
+    new_residual = target - recovered * 0.0  # see note below
+    # NOTE: exact per-addend feedback requires echoing each device's own
+    # quantised value; with a shared scale, quantisation is deterministic,
+    # so we recompute it locally instead of echoing:
+    if wire == "int8":
+        absmax = jax.lax.pmax(jnp.max(jnp.abs(target)), axis)
+        scale = jnp.maximum(absmax / 127.0, 1e-30)
+        q = jnp.clip(jnp.round(target / scale), -127, 127)
+        new_residual = target - q * scale
+    elif wire == "bf16":
+        new_residual = target - target.astype(jnp.bfloat16).astype(jnp.float32)
+    else:
+        new_residual = jnp.zeros_like(target)
+    return reduced, new_residual
+
+
+def wire_bytes(x: Array, wire: str) -> int:
+    """Payload bytes one ring pass moves for this tensor."""
+    n = 1
+    for d in x.shape:
+        n *= d
+    per = {"none": x.dtype.itemsize, "bf16": 2, "int8": 1}[wire]
+    return n * per

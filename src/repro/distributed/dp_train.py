@@ -1,0 +1,78 @@
+"""Explicit data-parallel training with compressed gradient all-reduce.
+
+The GSPMD path (launch/train, dryrun) reduces gradients implicitly; this
+module is the *explicit* Blaze gradient path — shard_map over the data axis
+with ``psum_with_feedback`` on every gradient leaf:
+
+  map    = per-shard backward pass                (the mapper)
+  reduce = compressed psum (bf16 / int8 + shared scale)   (fast serialization)
+  key    = parameter index (dense, positional)    (small fixed key range)
+  error feedback residuals keep SGD/Adam unbiased over steps.
+
+Used by tests/benchmarks to show convergence parity between exact and
+compressed wires, and to count the wire bytes saved.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed.collectives import psum_with_feedback, wire_bytes
+from repro.optim.adamw import AdamW
+
+
+def make_dp_train_step(
+    loss_fn: Callable,  # loss_fn(params, inputs, labels) → scalar (per-shard mean)
+    optimizer: AdamW,
+    mesh: Mesh,
+    *,
+    wire: str = "none",
+) -> Callable:
+    """Returns step(params, opt_state, residuals, batch) → (..., loss).
+
+    params/opt_state replicated; batch sharded on axis 0 over "data";
+    residuals: pytree like params (f32) carrying quantisation error.
+    """
+
+    def shard_fn(params, opt_state, residuals, inputs, labels):
+        loss, grads = jax.value_and_grad(loss_fn)(params, inputs, labels)
+        n = jax.lax.psum(jnp.ones(()), "data")
+        loss = jax.lax.psum(loss, "data") / n
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_r = jax.tree_util.tree_flatten(residuals)[0]
+        red, new_r = [], []
+        for g, r in zip(flat_g, flat_r):
+            gr, rr = psum_with_feedback(
+                g.astype(jnp.float32) / n, r, "data", wire=wire
+            )
+            red.append(gr.astype(g.dtype))
+            new_r.append(rr)
+        grads = jax.tree_util.tree_unflatten(treedef, red)
+        residuals = jax.tree_util.tree_unflatten(treedef, new_r)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        return params, opt_state, residuals, loss
+
+    rep = P()
+    dp = P("data")
+    fn = shard_map(
+        shard_fn,
+        mesh=mesh,
+        in_specs=(rep, rep, rep, dp, dp),
+        out_specs=(rep, rep, rep, rep),
+        check_vma=False,
+    )
+    return jax.jit(lambda p, o, r, b: fn(p, o, r, b["inputs"], b["labels"]))
+
+
+def init_residuals(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def grad_wire_bytes(params, wire: str) -> int:
+    """Bytes one gradient reduce moves per device under ``wire``."""
+    return sum(wire_bytes(p, wire) for p in jax.tree.leaves(params))

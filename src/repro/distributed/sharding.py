@@ -1,0 +1,316 @@
+"""Sharding policy: parameter / optimizer / batch / cache PartitionSpecs.
+
+Scheme (designed for 1000+ nodes; see DESIGN.md §3):
+
+* parameters — FSDP-shard the "reduction" dim over the data(+pod) axes and
+  TP-shard the "parallel" dim over model: wq/wk/wv/w_gate/w_up ``(fsdp, model)``,
+  wo/w_down ``(model, fsdp)``, embed ``(model, fsdp)`` (vocab over model),
+  MoE experts ``(None, fsdp, model)`` (E small; d/d_ff carry the sharding);
+* optimizer state mirrors parameters;
+* batch — tokens over the dp axes;
+* caches — batch over dp when divisible, else sequence over dp; KV heads over
+  model when divisible, else sequence takes model too (context-parallel
+  layout for the B=1 half-million-token cell).
+
+Every axis application is guarded by ``_fit``: a dim only takes a mesh axis
+whose size divides it — so the same policy serves full configs, reduced smoke
+configs, and both mesh shapes without special-casing.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import model as M
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshInfo:
+    mesh: Mesh
+    fsdp: tuple[str, ...]  # ("data",) or ("pod", "data")
+    model: str = "model"
+
+    @property
+    def model_size(self) -> int:
+        return self.mesh.shape[self.model]
+
+    @property
+    def dp_size(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self.fsdp]))
+
+    def axis_size(self, axes) -> int:
+        if axes is None:
+            return 1
+        if isinstance(axes, str):
+            return self.mesh.shape[axes]
+        return int(np.prod([self.mesh.shape[a] for a in axes]))
+
+
+def make_mesh_info(mesh: Mesh) -> MeshInfo:
+    fsdp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    return MeshInfo(mesh=mesh, fsdp=fsdp)
+
+
+def _fit(spec_axes: tuple, shape: tuple, mi: MeshInfo) -> P:
+    """Drop axes that don't divide their dim (or don't exist in the mesh)."""
+    out = []
+    for dim, ax in zip(shape, spec_axes):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        axes = tuple(a for a in axes if a in mi.mesh.axis_names)
+        size = mi.axis_size(axes) if axes else 1
+        if size > 1 and dim % size == 0:
+            out.append(axes[0] if len(axes) == 1 else axes)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+_COL = "col"  # (fsdp, model): d_in → fsdp, d_out → model
+_ROW = "row"  # (model, fsdp)
+_REP = "rep"
+
+_PARAM_RULES: dict[tuple[str, str], str] = {
+    # (parent, key) → layout; "*" matches any parent
+    ("*", "embed"): "embed",
+    ("*", "lm_head"): _COL,
+    ("attn", "wq"): _COL,
+    ("attn", "wk"): _COL,
+    ("attn", "wv"): _COL,
+    ("attn", "wo"): _ROW,
+    ("mlp", "w_gate"): _COL,
+    ("mlp", "w_up"): _COL,
+    ("mlp", "w_down"): _ROW,
+    ("moe", "router"): "router",
+    ("moe", "w_gate"): "expert_col",
+    ("moe", "w_up"): "expert_col",
+    ("moe", "w_down"): "expert_row",
+    ("mamba", "in_proj"): _COL,
+    ("mamba", "out_proj"): _ROW,
+    ("mamba", "conv_w"): "conv",
+    ("mamba", "conv_b"): "vec_model",
+    ("tm", "wr"): _COL,
+    ("tm", "wk"): _COL,
+    ("tm", "wv"): _COL,
+    ("tm", "wg"): _COL,
+    ("tm", "wo"): _ROW,
+    ("tm", "mix_w1"): "col_rep",
+    ("cm", "wk"): _COL,
+    ("cm", "wv"): _ROW,
+    ("cm", "wr"): _COL,
+}
+
+
+def _path_keys(path) -> list[str]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+    return out
+
+
+def param_pspecs(cfg: ArchConfig, param_shapes, mi: MeshInfo, *, serving: bool = False):
+    """PartitionSpec pytree matching ``model.init``'s parameter tree.
+
+    ``serving=True`` drops the FSDP dim (params replicated over data, TP over
+    model): decode steps then never all-gather weights — inference holds
+    params resident, the ZeRO sharding is a training-side trick.
+    """
+    FS, MD = (None, mi.model) if serving else (mi.fsdp, mi.model)
+
+    def one(path, leaf):
+        keys = _path_keys(path)
+        key = keys[-1] if keys else ""
+        parent = keys[-2] if len(keys) > 1 else ""
+        stacked = keys and keys[0] == "stages"
+        shape = leaf.shape
+        core = shape[1:] if stacked else shape
+
+        rule = _PARAM_RULES.get((parent, key)) or _PARAM_RULES.get(("*", key))
+        if rule == "embed":
+            axes = (MD, FS)
+        elif rule == _COL:
+            axes = (FS, MD)
+        elif rule == _ROW:
+            axes = (MD, FS)
+        elif rule == "router":
+            axes = (FS, None)
+        elif rule == "expert_col":
+            axes = (None, FS, MD)
+        elif rule == "expert_row":
+            axes = (None, MD, FS)
+        elif rule == "conv":
+            axes = (None, MD)
+        elif rule == "vec_model":
+            axes = (MD,)
+        elif rule == "col_rep":
+            axes = (FS, None)
+        else:
+            axes = (None,) * len(core)
+        axes = tuple(axes[: len(core)]) + (None,) * (len(core) - len(axes))
+        spec = _fit(axes, core, mi)
+        if stacked:
+            spec = P(*((None,) + tuple(spec)))
+        return spec
+
+    return jax.tree_util.tree_map_with_path(one, param_shapes)
+
+
+def opt_pspecs(param_specs, opt_state_shapes):
+    """Optimizer moments mirror parameter sharding; scalars replicated."""
+
+    def one(path, leaf):
+        keys = _path_keys(path)
+        if keys and keys[0] in ("m", "v", "residual"):
+            sub = keys[1:]
+            node = param_specs
+            try:
+                for k in sub:
+                    if isinstance(node, (list, tuple)):
+                        node = node[int(k)]
+                    elif isinstance(node, dict):
+                        node = node[k]
+                    else:
+                        node = getattr(node, k)
+                if isinstance(node, P):
+                    return node
+            except (KeyError, IndexError, AttributeError, ValueError):
+                pass
+        return P()
+
+    return jax.tree_util.tree_map_with_path(one, opt_state_shapes)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache
+# ---------------------------------------------------------------------------
+
+
+def batch_pspecs(cfg: ArchConfig, batch_shapes, mi: MeshInfo):
+    def one(leaf):
+        return _fit((mi.fsdp,) + (None,) * (len(leaf.shape) - 1), leaf.shape, mi)
+
+    return jax.tree.map(one, batch_shapes)
+
+
+def cache_pspecs(
+    cfg: ArchConfig, batch: int, max_len: int, mi: MeshInfo, kind: str = "decode"
+):
+    """Spec pytree parallel to ``model.make_caches(..., spec=True)``.
+
+    KV layout policy (when kv-heads don't divide the model axis):
+    * decode — shard **d_head**: the per-token cache update and the PV matmul
+      stay device-local; only per-chunk logit partial-sums (q_len=1 → tiny)
+      cross the wire.  (Sequence-sharded caches all-gather the entire cache
+      every token: 170 GiB/step for gemma2 — the measured baseline.)
+    * prefill — shard sequence: with q_len=S the dh-sharded layout would psum
+      a [B,H,bq,bk] tile per block pair, which is far worse than one
+      seq-gather; prefill→decode hand-off does one cache reshard (recorded in
+      EXPERIMENTS.md §Perf).
+    """
+    FS, MD = mi.fsdp, mi.model
+    b_ok = batch % mi.dp_size == 0
+    heads_ok = cfg.n_kv_heads % mi.model_size == 0
+    dh_ok = cfg.d_head % mi.model_size == 0
+
+    b_ax = FS if b_ok else None
+    use_dh = (not heads_ok) and dh_ok and kind == "decode"
+    # sequence picks up whatever batch/heads leave unused
+    s_axes = []
+    if not b_ok:
+        s_axes.extend(FS)
+    if not heads_ok and not use_dh:
+        s_axes.append(MD)
+    s_ax = tuple(s_axes) if s_axes else None
+    h_ax = MD if heads_ok else None
+    dh_ax = MD if use_dh else None
+
+    def kv_spec(kind_):
+        shape = (batch, max_len, cfg.n_kv_heads, cfg.d_head)
+        return M.A.KVCache(
+            k=_fit((b_ax, s_ax, h_ax, dh_ax), shape, mi),
+            v=_fit((b_ax, s_ax, h_ax, dh_ax), shape, mi),
+        )
+
+    def mamba_spec():
+        d_inner, h, conv_dim = M.SSM._dims(cfg)
+        return M.SSM.MambaCache(
+            conv=_fit((b_ax, None, MD), (batch, cfg.conv_width - 1, conv_dim), mi),
+            h=_fit((b_ax, MD, None, None), (batch, h, cfg.ssm_head_dim, cfg.ssm_state), mi),
+        )
+
+    def rwkv_spec():
+        d = cfg.d_model
+        h = d // cfg.rwkv_head_dim
+        return M.RW.RWKVCache(
+            shift_tm=_fit((b_ax, MD), (batch, d), mi),
+            shift_cm=_fit((b_ax, MD), (batch, d), mi),
+            state=_fit((b_ax, MD, None, None), (batch, h, cfg.rwkv_head_dim, cfg.rwkv_head_dim), mi),
+        )
+
+    def block_spec(kind):
+        if kind in M._ATTN_KINDS:
+            return kv_spec(kind)
+        if kind == M.MAMBA2:
+            return mamba_spec()
+        return rwkv_spec()
+
+    def prepend_none(spec_tree):
+        return jax.tree.map(
+            lambda s: P(*((None,) + tuple(s))), spec_tree,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
+    return {
+        "stages": [prepend_none(block_spec(k)) for k in cfg.stage_pattern],
+        "tail": [block_spec(k) for k in cfg.tail_pattern],
+    }
+
+
+def constrain(x, *axes):
+    """Sharding-constrain ``x`` if a mesh is active and every axis divides.
+
+    ``axes`` — one entry per dim: None, an axis name, or a tuple of names.
+    Outside a mesh context (unit tests, CPU runs) this is a no-op, so model
+    code can annotate unconditionally.
+    """
+    am = jax.sharding.get_abstract_mesh()
+    if am is None or not am.axis_names:
+        return x
+    fitted = []
+    for dim, ax in zip(x.shape, axes):
+        if ax is None:
+            fitted.append(None)
+            continue
+        names = (ax,) if isinstance(ax, str) else tuple(ax)
+        names = tuple(a for a in names if a in am.axis_names)
+        size = int(np.prod([am.shape[a] for a in names])) if names else 1
+        if size > 1 and dim % size == 0:
+            fitted.append(names[0] if len(names) == 1 else names)
+        else:
+            fitted.append(None)
+    if all(f is None for f in fitted):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*fitted))
+
+
+def named(tree, mi: MeshInfo):
+    """P pytree → NamedSharding pytree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mi.mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,158 @@
+"""Fused flash attention for TPU (Pallas), covering every attention variant in
+the assigned architecture pool:
+
+* causal / bidirectional
+* GQA (kv-head broadcast by index-map, no materialised repeat)
+* sliding window (mistral/gemma2 local layers) — out-of-window KV blocks are
+  skipped as whole blocks (predicated), the in-window diagonal is masked
+* logit soft-capping (gemma2)
+* decode (Sq=1..8 with a long KV cache) — same kernel, bq = Sq
+
+Streaming-softmax accumulation runs across the LAST grid axis (TPU grids are
+sequential over trailing axes) with running (m, l, acc) in VMEM scratch.
+BlockSpecs tile HBM→VMEM as (1, 1, bq, D) q-tiles against (1, 1, bk, D)
+kv-tiles; with bq=bk=512 and D=128 the working set is
+(512·128·4)·4 ≈ 1.0 MB + the 512×512 f32 logits tile ≈ 1 MB — comfortably
+inside the ~16 MB VMEM budget, with the matmul dims MXU-aligned (≥128).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale, causal, window, softcap, bq, bk, sq_true, skv_true, q_offset, nk,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # Block-level relevance: positions are absolute (q_offset for decode).
+    q_start = iq * bq + q_offset
+    q_end = q_start + bq - 1
+    k_start = ik * bk
+    k_end = k_start + bk - 1
+
+    relevant = k_start < skv_true
+    if causal:
+        relevant &= k_start <= q_end
+    if window is not None:
+        relevant &= k_end > q_start - window
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # [bq, D]
+        k = k_ref[0, 0].astype(jnp.float32)  # [bk, D]
+        v = v_ref[0, 0].astype(jnp.float32)  # [bk, D]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # [bq, bk]
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos < skv_true
+        mask &= qpos < sq_true + q_offset
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]  # [bq, 1]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+        m_scr[...] = m_new
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "softcap", "scale", "block_q", "block_k",
+        "q_offset", "interpret",
+    ),
+)
+def flash_attention(
+    q: jax.Array,  # [B, Hq, Sq, D]
+    k: jax.Array,  # [B, Hkv, Skv, D]
+    v: jax.Array,  # [B, Hkv, Skv, D]
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float = 0.0,
+    scale: float | None = None,
+    q_offset: int | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    assert hq % hkv == 0, (hq, hkv)
+    rep = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    off = (skv - sq) if q_offset is None else q_offset
+
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    sq_pad = -(-sq // bq) * bq
+    skv_pad = -(-skv // bk) * bk
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, sq_pad - sq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, skv_pad - skv), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, skv_pad - skv), (0, 0)))
+    nq, nk = sq_pad // bq, skv_pad // bk
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale, causal=causal, window=window, softcap=softcap,
+        bq=bq, bk=bk, sq_true=sq, skv_true=skv, q_offset=off, nk=nk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, iq, ik: (b_, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, iq, ik, rep=rep: (b_, h // rep, ik, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, iq, ik, rep=rep: (b_, h // rep, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b_, h, iq, ik: (b_, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq_pad, d), q.dtype),
+        scratch_shapes=[
+            _vmem((bq, 1), jnp.float32),
+            _vmem((bq, 1), jnp.float32),
+            _vmem((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :, :sq]
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

@@ -1,0 +1,443 @@
+"""Public kernel wrappers with backend dispatch.
+
+Three tiers per op:
+
+* ``impl="pallas"``       — the Pallas TPU kernel (``interpret=True`` on CPU);
+* ``impl="chunked"``      — a pure-jnp blocked formulation with the same
+                            O(memory) profile as the kernel.  This is what the
+                            models lower in the multi-pod dry-run: no S²
+                            buffer, scan-structured so XLA can schedule it;
+* ``impl="ref"``          — the naive oracle (tests only).
+
+``impl="auto"`` resolves to pallas on TPU and chunked elsewhere.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as R
+
+Array = jax.Array
+
+
+def _auto() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "chunked"
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def attention(
+    q: Array, k: Array, v: Array, *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float = 0.0,
+    scale: float | None = None,
+    q_offset: int | None = None,
+    impl: str = "auto",
+    block_q: int = 256,
+    block_k: int = 512,
+    shard_hint: str | None = None,
+) -> Array:
+    impl = _auto() if impl == "auto" else impl
+    if impl == "pallas":
+        from repro.kernels.flash_attention import flash_attention
+
+        return flash_attention(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            scale=scale, q_offset=q_offset, block_q=block_q, block_k=block_k,
+            interpret=jax.default_backend() != "tpu",
+        )
+    if impl == "ref":
+        return R.attention_ref(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            q_offset=q_offset, scale=scale,
+        )
+    return attention_chunked(
+        q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,
+        q_offset=q_offset, block_q=block_q, block_k=block_k,
+        shard_hint=shard_hint,
+    )
+
+
+def attention_chunked(
+    q: Array,  # [B, Hq, Sq, D]
+    k: Array,  # [B, Hkv, Skv, D]
+    v: Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float = 0.0,
+    scale: float | None = None,
+    q_offset: int | None = None,
+    block_q: int = 256,
+    block_k: int = 512,
+    shard_hint: str | None = None,  # None | "heads" | "dh"
+) -> Array:
+    """Online-softmax attention, scan over q-blocks × kv-blocks.
+
+    Peak live intermediate is one [B, H_local, bq, bk] f32 logits tile —
+    flash-attention's memory profile in pure jnp, so 32k/500k contexts lower
+    without any S² buffer.
+    """
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    rep = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    off = (skv - sq) if q_offset is None else q_offset
+
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    sq_pad = -(-sq // bq) * bq
+    skv_pad = -(-skv // bk) * bk
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, sq_pad - sq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, skv_pad - skv), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, skv_pad - skv), (0, 0)))
+    nq, nk = sq_pad // bq, skv_pad // bk
+
+    # [nk, B, Hkv, bk, D] — scan operand; [nq, B, Hq, bq, D] — outer scan.
+    k_chunks = kp.reshape(b, hkv, nk, bk, d).transpose(2, 0, 1, 3, 4)
+    v_chunks = vp.reshape(b, hkv, nk, bk, d).transpose(2, 0, 1, 3, 4)
+    q_chunks = qp.reshape(b, hq, nq, bq, d).transpose(2, 0, 1, 3, 4)
+
+    dp = ("pod", "data")
+    if shard_hint is not None:
+        from repro.distributed.sharding import constrain as _c
+
+        ax = (
+            (None, dp, "model", None, None)
+            if shard_hint == "heads"
+            else (None, dp, None, None, "model")
+        )
+        k_chunks = _c(k_chunks, *ax)
+        v_chunks = _c(v_chunks, *ax)
+        q_chunks = _c(q_chunks, *ax)
+
+    def q_step(_, q_blk_idx):
+        q_blk, iq = q_blk_idx  # [B, Hq, bq, D], scalar
+        q_start = iq * bq + off
+
+        @functools.partial(jax.checkpoint, policy=None)
+        def kv_step(carry, kv_blk):
+            m, l, acc = carry
+            k_blk, v_blk, ik = kv_blk
+            k_start = ik * bk
+            # keep operands in model dtype; accumulate in f32 via the matmul
+            # (a wholesale .astype(f32) gets hoisted out of the scan by LICM
+            # and materialises an f32 copy of the entire K/V stream)
+            kb = jnp.repeat(k_blk, rep, axis=1)
+            vb = jnp.repeat(v_blk, rep, axis=1)
+            if shard_hint is not None:
+                from repro.distributed.sharding import constrain as _c
+
+                ax = (
+                    (dp, "model", None, None)
+                    if shard_hint == "heads"
+                    else (dp, None, None, "model")
+                )
+                kb = _c(kb, *ax)
+                vb = _c(vb, *ax)
+            s = jnp.einsum(
+                "bhqd,bhkd->bhqk", q_blk, kb,
+                preferred_element_type=jnp.float32,
+            ) * scale
+            if shard_hint == "dh":
+                # scores are dh-contracted partial-sums: replicate over model
+                from repro.distributed.sharding import constrain as _c
+
+                s = _c(s, dp, None, None, None)
+            if softcap > 0.0:
+                s = softcap * jnp.tanh(s / softcap)
+            qpos = q_start + jnp.arange(bq)[:, None]
+            kpos = k_start + jnp.arange(bk)[None, :]
+            mask = kpos < skv
+            if causal:
+                mask &= kpos <= qpos
+            if window is not None:
+                mask &= kpos > qpos - window
+            s = jnp.where(mask[None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(q.dtype), vb,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, hq, bq), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, hq, bq), jnp.float32)
+        a0 = jnp.zeros((b, hq, bq, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (k_chunks, v_chunks, jnp.arange(nk))
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    # remat on both scan bodies: the backward recomputes the logits tiles
+    # instead of saving one [B, H, bq, bk] f32 tile per (iq, ik) pair —
+    # the flash-attention memory profile, forwards AND backwards.
+    q_step = jax.checkpoint(q_step, policy=None)
+    _, outs = jax.lax.scan(q_step, None, (q_chunks, jnp.arange(nq)))
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(b, hq, sq_pad, d)
+    return out[:, :, :sq]
+
+
+# ---------------------------------------------------------------------------
+# segment_reduce / kmeans_assign
+# ---------------------------------------------------------------------------
+
+
+def segment_reduce(ids, vals, num_segments, *, impl="auto", block_n=1024):
+    impl = _auto() if impl == "auto" else impl
+    if impl == "pallas":
+        from repro.kernels.segment_reduce import segment_reduce as sr
+
+        return sr(
+            ids, vals, num_segments, block_n=block_n,
+            interpret=jax.default_backend() != "tpu",
+        )
+    return R.segment_reduce_ref(ids, vals, num_segments)
+
+
+def kmeans_assign(points, centers, *, impl="auto", block_n=1024):
+    impl = _auto() if impl == "auto" else impl
+    if impl == "pallas":
+        from repro.kernels.kmeans_assign import kmeans_assign as ka
+
+        return ka(
+            points, centers, block_n=block_n,
+            interpret=jax.default_backend() != "tpu",
+        )
+    return R.kmeans_assign_ref(points, centers)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD — chunked (matmul-form) implementation
+# ---------------------------------------------------------------------------
+
+
+def ssd(
+    x: Array, dt: Array, a: Array, b: Array, c: Array, *,
+    init_state: Array | None = None,
+    chunk: int = 128,
+    impl: str = "auto",
+) -> tuple[Array, Array]:
+    impl = _auto() if impl == "auto" else impl
+    if impl == "pallas":
+        try:
+            from repro.kernels.ssd_scan import ssd_scan
+
+            return ssd_scan(
+                x, dt, a, b, c, init_state=init_state, chunk=chunk,
+                interpret=jax.default_backend() != "tpu",
+            )
+        except ImportError:
+            pass
+    if impl == "ref":
+        return R.ssd_ref(x, dt, a, b, c, init_state=init_state)
+    return ssd_chunked(x, dt, a, b, c, init_state=init_state, chunk=chunk)
+
+
+def ssd_chunked(
+    x: Array,  # [B, S, H, P]
+    dt: Array,  # [B, S, H]
+    a: Array,  # [H] (negative)
+    b: Array,  # [B, S, G, N]
+    c: Array,  # [B, S, G, N]
+    *,
+    init_state: Array | None = None,
+    chunk: int = 128,
+) -> tuple[Array, Array]:
+    """Mamba-2 SSD in chunked matmul form (the TPU-native formulation):
+
+    intra-chunk  Y₁[t] = Σ_{s≤t} exp(Δ_t − Δ_s) (C_t·B_s) dt_s x_s   (MXU)
+    inter-chunk  Y₂[t] = exp(Δ_t) C_t·h_prev ;  h carried by a scan over chunks
+    """
+    B, S, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    rep = H // G
+    L = min(chunk, S)
+    S_pad = -(-S // L) * L
+    pad = S_pad - S
+    xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    dtp = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))  # padded dt=0 → decay 1, input 0
+    bp = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    cp = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nch = S_pad // L
+
+    bb = jnp.repeat(bp, rep, axis=2)  # [B, S, H, N]
+    cc = jnp.repeat(cp, rep, axis=2)
+
+    # SSD is embarrassingly parallel over heads: pin the H axis to the model
+    # mesh axis through the chunk reshape (which would otherwise lose the
+    # sequence sharding and replicate every chunked operand).
+    from repro.distributed.sharding import constrain as _constrain
+
+    def chunk_view(t):  # [B, S, ...] → [nch, B, L, ...]
+        out = t.reshape((B, nch, L) + t.shape[2:]).transpose(
+            (1, 0, 2) + tuple(range(3, t.ndim + 1))
+        )
+        if out.ndim >= 4:  # [nch, B, L, H, ...]: H → model
+            spec = (None, ("pod", "data"), None, "model") + (None,) * (out.ndim - 4)
+            out = _constrain(out, *spec)
+        return out
+
+    xs = (
+        chunk_view(xp).astype(jnp.float32),
+        chunk_view(dtp).astype(jnp.float32),
+        chunk_view(bb).astype(jnp.float32),
+        chunk_view(cc).astype(jnp.float32),
+    )
+    h0 = (
+        jnp.zeros((B, H, P, N), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+    af = a.astype(jnp.float32)
+
+    def step(h, inp):
+        xc, dtc, bc, cchunk = inp  # [B,L,H,P], [B,L,H], [B,L,H,N], [B,L,H,N]
+        adt = af[None, None, :] * dtc  # [B,L,H] (negative)
+        cum = jnp.cumsum(adt, axis=1)  # Δ_t  [B,L,H]
+        total = cum[:, -1]  # [B,H]
+        # intra-chunk: M[t,s] = exp(Δ_t − Δ_s)·(C_t·B_s), s ≤ t
+        cb = jnp.einsum("blhn,bshn->bhls", cchunk, bc)  # [B,H,L,L]
+        # exponent clamped at 0: upper-triangle (s > t) entries would be
+        # exp(+large) = inf before the mask (inf · 0 = NaN); valid entries
+        # always have non-positive exponent (cum is non-increasing).
+        dec = jnp.exp(
+            jnp.minimum(
+                cum.transpose(0, 2, 1)[:, :, :, None]
+                - cum.transpose(0, 2, 1)[:, :, None, :],
+                0.0,
+            )
+        )  # [B,H,L,L]
+        tri = jnp.tril(jnp.ones((L, L), jnp.float32))
+        m = cb * dec * tri[None, None]
+        dx = dtc[..., None] * xc  # [B,L,H,P]
+        y_intra = jnp.einsum("bhls,bshp->blhp", m, dx)
+        # inter-chunk: read previous state
+        y_inter = jnp.einsum(
+            "blhn,bhpn,blh->blhp", cchunk, h, jnp.exp(cum)
+        )
+        # state update: h' = exp(total)·h + Σ_s exp(total − Δ_s) dx_s ⊗ B_s
+        sdec = jnp.exp(total[:, None, :] - cum)  # [B,L,H]
+        h_new = h * jnp.exp(total)[..., None, None] + jnp.einsum(
+            "blhp,blhn,blh->bhpn", dx, bc, sdec
+        )
+        return h_new, (y_intra + y_inter)
+
+    hT, ys = jax.lax.scan(step, h0, xs)  # ys [nch, B, L, H, P]
+    ys = _constrain(ys, None, ("pod", "data"), None, "model", None)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S_pad, H, P)[:, :S]
+    return y.astype(x.dtype), hT
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 — chunked implementation
+# ---------------------------------------------------------------------------
+
+
+def rwkv6(
+    r: Array, k: Array, v: Array, w: Array, u: Array, *,
+    init_state: Array | None = None,
+    chunk: int = 64,
+    impl: str = "auto",
+) -> tuple[Array, Array]:
+    impl = _auto() if impl == "auto" else impl
+    if impl == "pallas":
+        try:
+            from repro.kernels.rwkv6_scan import rwkv6_scan
+
+            return rwkv6_scan(
+                r, k, v, w, u, init_state=init_state, chunk=chunk,
+                interpret=jax.default_backend() != "tpu",
+            )
+        except ImportError:
+            pass
+    if impl == "ref":
+        return R.rwkv6_ref(r, k, v, w, u, init_state=init_state)
+    return rwkv6_chunked(r, k, v, w, u, init_state=init_state, chunk=chunk)
+
+
+def rwkv6_chunked(
+    r: Array,  # [B, S, H, K]
+    k: Array,  # [B, S, H, K]
+    v: Array,  # [B, S, H, V]
+    w: Array,  # [B, S, H, K] decay in (0, 1)
+    u: Array,  # [H, K] bonus
+    *,
+    init_state: Array | None = None,
+    chunk: int = 64,
+) -> tuple[Array, Array]:
+    """RWKV-6 wkv in chunked form.  Per chunk (log-space cumulative decay λ):
+
+    out_t = r_t·(Λ_t ∘ S_prev) + Σ_{s<t} (r_t ∘ Λ_t/Λ_{s+1})·k_s v_s
+            + (r_t ∘ u)·k_t v_t
+    """
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    L = min(chunk, S)
+    S_pad = -(-S // L) * L
+    pad = S_pad - S
+
+    def padt(t):
+        return jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+
+    rp, kp, vp = padt(r), padt(k), padt(v)
+    wp = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+    nch = S_pad // L
+
+    def chunk_view(t):
+        return t.reshape((B, nch, L) + t.shape[2:]).transpose(
+            (1, 0, 2) + tuple(range(3, t.ndim + 1))
+        ).astype(jnp.float32)
+
+    xs = (chunk_view(rp), chunk_view(kp), chunk_view(vp), chunk_view(wp))
+    s0 = (
+        jnp.zeros((B, H, K, V), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+    uf = u.astype(jnp.float32)
+
+    def step(s, inp):
+        rc, kc, vc, wc = inp  # [B,L,H,K] ×3, [B,L,H,V] for vc
+        # Per-step decay floored at e^(−88/L): contributions that decay
+        # below f32 range within one chunk underflow to 0 either way, and
+        # the floor keeps the factored exp(±λ) terms finite (no inf·0).
+        logw = jnp.maximum(jnp.log(jnp.maximum(wc, 1e-30)), -88.0 / L)
+        lam = jnp.cumsum(logw, axis=1)  # λ_t = Σ_{s≤t} log w_s
+        # inter-chunk: out_t += (r_t ∘ exp(λ_{t-1}))·S_prev   (λ up to t−1)
+        lam_prev = lam - logw  # λ_{t-1}
+        r_dec = rc * jnp.exp(lam_prev)
+        out = jnp.einsum("blhk,bhkv->blhv", r_dec, s)
+        # intra-chunk, strictly-lower-triangular pairs (s < t):
+        # decay from s+1 .. t−1+1 = exp(λ_{t-1} − λ_s)
+        q_t = rc * jnp.exp(lam_prev)  # [B,L,H,K]
+        k_s = kc * jnp.exp(-lam)  # [B,L,H,K]
+        scores = jnp.einsum("blhk,bshk->bhls", q_t, k_s)  # [B,H,L,L]
+        tri = jnp.tril(jnp.ones((L, L), jnp.float32), k=-1)
+        out = out + jnp.einsum("bhls,bshv->blhv", scores * tri[None, None], vc)
+        # diagonal bonus term
+        diag = jnp.einsum("blhk,blhk->blh", rc * uf[None, None], kc)
+        out = out + diag[..., None] * vc
+        # state update: S' = (Π w) ∘ S + Σ_s exp(λ_L − λ_s) k_s v_sᵀ
+        lam_tot = lam[:, -1]  # [B,H,K]
+        k_dec = kc * jnp.exp(lam_tot[:, None] - lam)  # [B,L,H,K]
+        s = s * jnp.exp(lam_tot)[..., None] + jnp.einsum(
+            "blhk,blhv->bhkv", k_dec, vc
+        )
+        return s, out
+
+    sT, ys = jax.lax.scan(step, s0, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S_pad, H, V)[:, :S]
+    return y.astype(v.dtype), sT

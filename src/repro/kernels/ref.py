@@ -1,0 +1,176 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth: small, obviously-correct, O(n²)
+where that is the clearest formulation.  Tests sweep shapes/dtypes and
+``assert_allclose`` kernels (run under ``interpret=True`` on CPU) against
+these.  They are NOT the implementations models use at scale — see
+``kernels.ops`` for the dispatching wrappers and the chunked jnp paths.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# segment_reduce — the eager-reduction combiner (paper §2.3.1/§2.3.3)
+# ---------------------------------------------------------------------------
+
+
+def segment_reduce_ref(ids: Array, vals: Array, num_segments: int) -> Array:
+    """Sum ``vals`` rows into ``num_segments`` dense buckets; ids<0 dropped."""
+    safe = jnp.where(ids >= 0, ids, num_segments)
+    return jax.ops.segment_sum(vals, safe, num_segments=num_segments + 1)[
+        :num_segments
+    ]
+
+
+# ---------------------------------------------------------------------------
+# attention — full-materialisation oracle with every masking mode we support
+# ---------------------------------------------------------------------------
+
+
+def attention_ref(
+    q: Array,  # [B, Hq, Sq, D]
+    k: Array,  # [B, Hkv, Skv, D]
+    v: Array,  # [B, Hkv, Skv, D]
+    *,
+    causal: bool = True,
+    window: int | None = None,  # sliding window size (None = full)
+    softcap: float = 0.0,  # gemma2-style logit soft-capping (0 = off)
+    q_offset: int | None = None,  # absolute position of q[0] (decode: Skv-Sq)
+    scale: float | None = None,
+) -> Array:
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    rep = hq // hkv
+    kk = jnp.repeat(k, rep, axis=1)
+    vv = jnp.repeat(v, rep, axis=1)
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * scale
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    off = skv - sq if q_offset is None else q_offset
+    qpos = jnp.arange(sq)[:, None] + off
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32)).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# kmeans_assign — fused assignment + per-cluster statistics
+# ---------------------------------------------------------------------------
+
+
+def kmeans_assign_ref(points: Array, centers: Array) -> tuple[Array, Array]:
+    """Returns (assignments [N], stats [K, D+1]) — per-cluster Σx and count."""
+    d2 = (
+        jnp.sum(points**2, 1, keepdims=True)
+        - 2.0 * points @ centers.T
+        + jnp.sum(centers**2, 1)[None, :]
+    )
+    assign = jnp.argmin(d2, axis=1)
+    k = centers.shape[0]
+    onehot = jax.nn.one_hot(assign, k, dtype=points.dtype)  # [N, K]
+    sums = onehot.T @ points  # [K, D]
+    counts = jnp.sum(onehot, axis=0)[:, None]  # [K, 1]
+    return assign, jnp.concatenate([sums, counts], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD — naive per-step recurrence oracle
+# ---------------------------------------------------------------------------
+
+
+def ssd_ref(
+    x: Array,  # [B, S, H, P]   (P = head dim)
+    dt: Array,  # [B, S, H]      (softplus-activated step size)
+    a: Array,  # [H]            (negative decay rate, A = -exp(a_log))
+    b: Array,  # [B, S, G, N]   (input matrix, G groups broadcast over H)
+    c: Array,  # [B, S, G, N]   (output matrix)
+    *,
+    init_state: Array | None = None,  # [B, H, P, N]
+) -> tuple[Array, Array]:
+    """y[t] = C_t · h_t,  h_t = exp(A·dt_t)·h_{t-1} + dt_t · B_t x_tᵀ."""
+    B, S, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    rep = H // G
+    bb = jnp.repeat(b, rep, axis=2)  # [B, S, H, N]
+    cc = jnp.repeat(c, rep, axis=2)
+    decay = jnp.exp(a[None, None, :] * dt)  # [B, S, H]
+    h0 = (
+        jnp.zeros((B, H, P, N), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+
+    def step(h, inp):
+        xt, dtt, dct, bt, ct = inp  # [B,H,P],[B,H],[B,H],[B,H,N],[B,H,N]
+        dx = (dtt[..., None] * xt).astype(jnp.float32)  # [B,H,P]
+        h = h * dct[..., None, None] + dx[..., :, None] * bt[..., None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", h, ct.astype(jnp.float32))
+        return h, y
+
+    xs = (
+        x.transpose(1, 0, 2, 3),
+        dt.transpose(1, 0, 2),
+        decay.transpose(1, 0, 2),
+        bb.transpose(1, 0, 2, 3),
+        cc.transpose(1, 0, 2, 3),
+    )
+    hT, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), hT
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 — naive per-step recurrence oracle
+# ---------------------------------------------------------------------------
+
+
+def rwkv6_ref(
+    r: Array,  # [B, S, H, K]   receptance
+    k: Array,  # [B, S, H, K]   key
+    v: Array,  # [B, S, H, V]   value
+    w: Array,  # [B, S, H, K]   data-dependent decay, in (0, 1)
+    u: Array,  # [H, K]         bonus for the current token
+    *,
+    init_state: Array | None = None,  # [B, H, K, V]
+) -> tuple[Array, Array]:
+    """out_t = r_t · (S_{t-1} + u ⊙ k_t v_tᵀ);  S_t = diag(w_t) S_{t-1} + k_t v_tᵀ."""
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    s0 = (
+        jnp.zeros((B, H, K, V), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # [B,H,K],[B,H,K],[B,H,V],[B,H,K]
+        kv = kt.astype(jnp.float32)[..., :, None] * vt.astype(jnp.float32)[..., None, :]
+        out = jnp.einsum(
+            "bhk,bhkv->bhv", rt.astype(jnp.float32),
+            s + u.astype(jnp.float32)[None, :, :, None] * kv,
+        )
+        s = s * wt.astype(jnp.float32)[..., :, None] + kv
+        return s, out
+
+    xs = (
+        r.transpose(1, 0, 2, 3),
+        k.transpose(1, 0, 2, 3),
+        v.transpose(1, 0, 2, 3),
+        w.transpose(1, 0, 2, 3),
+    )
+    sT, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(v.dtype), sT

@@ -1,0 +1,128 @@
+"""Pallas RWKV-6 wkv kernel: chunked recurrence with VMEM-resident state.
+
+Grid = (B·H, S/L); the [K, V] state stays in VMEM scratch across chunks.
+Per chunk: log-space cumulative decay (VPU), factored intra-chunk scores
+(two MXU matmuls), diagonal bonus, and a decayed outer-product state update
+(MXU) — same decomposition as ``kernels.ops.rwkv6_chunked``, which is the
+oracle-checked reference for this kernel.
+
+Training-path kernel (zero initial state); decode uses the chunked-jnp path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rwkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, sout_ref, s_scr,
+                  *, L, K, V, nch):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    r = r_ref[0, :, 0].astype(jnp.float32)  # [L, K]
+    k = k_ref[0, :, 0].astype(jnp.float32)
+    v = v_ref[0, :, 0].astype(jnp.float32)  # [L, V]
+    w = w_ref[0, :, 0].astype(jnp.float32)  # [L, K]
+    u = u_ref[0].astype(jnp.float32)  # [K]
+
+    logw = jnp.maximum(jnp.log(jnp.maximum(w, 1e-30)), -88.0 / L)
+    lam = jnp.cumsum(logw, axis=0)  # [L, K]
+    lam_prev = lam - logw
+    s = s_scr[...]  # [K, V]
+
+    # inter-chunk + intra-chunk (strict lower triangle) + diagonal bonus
+    r_dec = r * jnp.exp(lam_prev)  # [L, K]
+    out = jax.lax.dot_general(
+        r_dec, s, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [L, V]
+    k_dec = k * jnp.exp(-lam)  # [L, K]
+    scores = jax.lax.dot_general(
+        r_dec, k_dec, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [L, L]
+    li = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    scores = scores * (si < li).astype(jnp.float32)
+    out += jax.lax.dot_general(
+        scores, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    diag = jnp.sum(r * u[None, :] * k, axis=1)  # [L]
+    out += diag[:, None] * v
+    y_ref[0, :, 0] = out.astype(y_ref.dtype)
+
+    # state: S' = (Π w) ∘ S + Σ_s exp(λ_L − λ_s) k_s v_sᵀ
+    lam_tot = lam[L - 1]  # [K]
+    k_up = k * jnp.exp(lam_tot[None, :] - lam)  # [L, K]
+    upd = jax.lax.dot_general(
+        k_up, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [K, V]
+    s_scr[...] = s * jnp.exp(lam_tot)[:, None] + upd
+
+    @pl.when(ic == nch - 1)
+    def _emit():
+        sout_ref[0, 0] = s_scr[...].astype(sout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan(
+    r: jax.Array,  # [B, S, H, K]
+    k: jax.Array,
+    v: jax.Array,  # [B, S, H, V]
+    w: jax.Array,  # [B, S, H, K]
+    u: jax.Array,  # [H, K]
+    *,
+    init_state=None,
+    chunk: int = 64,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    if init_state is not None:
+        raise NotImplementedError("kernel covers the zero-init training path")
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    L = min(chunk, S)
+    S_pad = -(-S // L) * L
+    pad = S_pad - S
+
+    def padt(t, cval=0.0):
+        return jnp.pad(
+            t, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=cval
+        )
+
+    rp, kp, vp = padt(r), padt(k), padt(v)
+    wp = padt(w, 1.0)
+    nch = S_pad // L
+
+    kernel = functools.partial(_rwkv6_kernel, L=L, K=K, V=V, nch=nch)
+    spec_in = pl.BlockSpec((1, L, 1, K), lambda bh, ic, H=H: (bh // H, ic, bh % H, 0))
+    spec_v = pl.BlockSpec((1, L, 1, V), lambda bh, ic, H=H: (bh // H, ic, bh % H, 0))
+    y, sT = pl.pallas_call(
+        kernel,
+        grid=(B * H, nch),
+        in_specs=[
+            spec_in, spec_in, spec_v, spec_in,
+            pl.BlockSpec((1, K), lambda bh, ic, H=H: (bh % H, 0)),
+        ],
+        out_specs=[
+            spec_v,
+            pl.BlockSpec((1, 1, K, V), lambda bh, ic, H=H: (bh // H, bh % H, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S_pad, H, V), v.dtype),
+            jax.ShapeDtypeStruct((B, H, K, V), jnp.float32),
+        ],
+        scratch_shapes=[_vmem((K, V), jnp.float32)],
+        interpret=interpret,
+    )(rp, kp, vp, wp, u)
+    return y[:, :S], sT
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

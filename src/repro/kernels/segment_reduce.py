@@ -1,0 +1,69 @@
+"""Pallas segment-reduce: the eager-reduction combiner as a TPU kernel.
+
+Reduces a stream of (id, value-row) pairs into a dense ``[K, V]`` accumulator
+that lives in VMEM for the whole pass — the TPU shape of the paper's
+*thread-local cache for a small fixed key range* (§2.3.3).  The scatter-add is
+expressed as a one-hot matmul so the MXU does the reduction:
+
+    onehot[bn, K] = (ids[:, None] == iota_K)   →   acc += onehotᵀ @ vals
+
+Grid iterates over pair-blocks (sequential on TPU); the output BlockSpec maps
+every step to the same ``[K, V]`` tile, so the accumulator never leaves VMEM
+between steps.  Negative ids are dropped (masked lanes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _segment_reduce_kernel(ids_ref, vals_ref, out_ref, *, k, bn):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    ids = ids_ref[...]  # [bn]
+    vals = vals_ref[...].astype(jnp.float32)  # [bn, V]
+    iota_k = jax.lax.broadcasted_iota(jnp.int32, (bn, k), 1)
+    onehot = (ids[:, None] == iota_k).astype(jnp.float32)  # [bn, K]
+    partial = jax.lax.dot_general(
+        onehot, vals, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [K, V]
+    out_ref[...] += partial.astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_segments", "block_n", "interpret")
+)
+def segment_reduce(
+    ids: jax.Array,  # [N] int32, <0 = dropped
+    vals: jax.Array,  # [N, V]
+    num_segments: int,
+    *,
+    block_n: int = 1024,
+    interpret: bool = True,
+) -> jax.Array:
+    n, v = vals.shape
+    bn = min(block_n, n)
+    n_pad = -(-n // bn) * bn
+    ids_p = jnp.pad(ids, (0, n_pad - n), constant_values=-1)
+    vals_p = jnp.pad(vals, ((0, n_pad - n), (0, 0)))
+
+    kernel = functools.partial(_segment_reduce_kernel, k=num_segments, bn=bn)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_pad // bn,),
+        in_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn, v), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((num_segments, v), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_segments, v), jnp.float32),
+        interpret=interpret,
+    )(ids_p, vals_p)

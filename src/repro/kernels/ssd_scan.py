@@ -1,0 +1,131 @@
+"""Pallas Mamba-2 SSD kernel: chunked scan with VMEM-resident state.
+
+Grid = (B·H, S/L): the chunk axis is the trailing (sequential) grid dim, so
+the [P, N] state lives in VMEM scratch across the whole sequence — HBM sees
+each input exactly once and the state never spills.  Per chunk the work is
+three MXU matmuls (C·Bᵀ, M·X, Xᵀ·B) over an (L, L) tile plus VPU cumsums —
+the TPU-native formulation of the SSD block decomposition.
+
+Training-path kernel (zero initial state); the decode path (init_state
+carry) uses the chunked-jnp formulation in ``kernels.ops``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(
+    x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref, state_scr,
+    *, L, P, N, nch,
+):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, :, 0].astype(jnp.float32)  # [L, P]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)  # [L]
+    a = a_ref[0]  # scalar
+    b = b_ref[0, :, 0].astype(jnp.float32)  # [L, N]
+    c = c_ref[0, :, 0].astype(jnp.float32)  # [L, N]
+
+    adt = a * dt  # [L] (negative)
+    cum = jnp.cumsum(adt)  # Δ_l
+    total = cum[L - 1]
+
+    # intra-chunk: M[l,s] = exp(Δ_l − Δ_s)·(C_l·B_s), s ≤ l
+    cb = jax.lax.dot_general(
+        c, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [L, L]
+    dec = jnp.exp(jnp.minimum(cum[:, None] - cum[None, :], 0.0))
+    li = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    m = cb * dec * (si <= li).astype(jnp.float32)
+    dx = dt[:, None] * x  # [L, P]
+    y = jax.lax.dot_general(
+        m, dx, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    # inter-chunk: exp(Δ_l)·C_l·h_prevᵀ
+    h = state_scr[...]  # [P, N]
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        c, h, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    y_ref[0, :, 0] = y.astype(y_ref.dtype)
+
+    # state update: h' = exp(total)·h + Σ_s exp(total − Δ_s)·dx_s ⊗ B_s
+    sdec = jnp.exp(total - cum)  # [L]
+    upd = jax.lax.dot_general(
+        dx * sdec[:, None], b, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [P, N]
+    state_scr[...] = h * jnp.exp(total) + upd
+
+    @pl.when(ic == nch - 1)
+    def _emit_state():
+        hout_ref[0, 0] = state_scr[...].astype(hout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: jax.Array,  # [B, S, H, P]
+    dt: jax.Array,  # [B, S, H]
+    a: jax.Array,  # [H]
+    b: jax.Array,  # [B, S, G, N]
+    c: jax.Array,  # [B, S, G, N]
+    *,
+    init_state=None,
+    chunk: int = 128,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    if init_state is not None:
+        raise NotImplementedError("kernel covers the zero-init training path")
+    B, S, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    rep = H // G
+    L = min(chunk, S)
+    S_pad = -(-S // L) * L
+    pad = S_pad - S
+    xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    dtp = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    bp = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    cp = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nch = S_pad // L
+
+    kernel = functools.partial(_ssd_kernel, L=L, P=P, N=N, nch=nch)
+    y, hT = pl.pallas_call(
+        kernel,
+        grid=(B * H, nch),
+        in_specs=[
+            pl.BlockSpec((1, L, 1, P), lambda bh, ic, H=H: (bh // H, ic, bh % H, 0)),
+            pl.BlockSpec((1, L, 1), lambda bh, ic, H=H: (bh // H, ic, bh % H)),
+            pl.BlockSpec((1,), lambda bh, ic, H=H: (bh % H,)),
+            pl.BlockSpec(
+                (1, L, 1, N), lambda bh, ic, H=H, rep=rep: (bh // H, ic, (bh % H) // rep, 0)
+            ),
+            pl.BlockSpec(
+                (1, L, 1, N), lambda bh, ic, H=H, rep=rep: (bh // H, ic, (bh % H) // rep, 0)
+            ),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L, 1, P), lambda bh, ic, H=H: (bh // H, ic, bh % H, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda bh, ic, H=H: (bh // H, bh % H, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S_pad, H, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[_vmem((P, N), jnp.float32)],
+        interpret=interpret,
+    )(xp, dtp, a.astype(jnp.float32), bp, cp)
+    return y[:, :S], hT
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

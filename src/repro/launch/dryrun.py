@@ -1,0 +1,371 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST precede every other import (jax locks the device
+count at first backend init): the dry-run — and only the dry-run — sees 512
+placeholder CPU devices so ``jax.make_mesh`` can build the production meshes.
+
+Per cell this lowers the REAL program (train_step including the AdamW update,
+or prefill / decode serve steps with full caches) from ShapeDtypeStruct
+stand-ins (zero allocation), compiles it under GSPMD, and records:
+
+* ``compiled.memory_analysis()``  — per-device bytes (proves it fits HBM),
+* ``compiled.cost_analysis()``    — HLO FLOPs / bytes accessed,
+* collective payload bytes by op kind, parsed from the compiled HLO
+  (while-loop bodies are attributed with their known trip counts),
+* compile wall-time, HLO op histogram.
+
+Results stream to ``results/dryrun/<cell>.json`` as they finish, so a crashed
+sweep resumes where it left off (``--force`` recomputes).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod both]
+  PYTHONPATH=src python -m repro.launch.dryrun --arch X --shape Y --unroll  # roofline-grade counts
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeSpec, cells, get_arch, list_archs
+from repro.distributed import sharding as SH
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.optim.adamw import AdamW
+from repro.runtime.train_loop import make_train_step
+
+RESULTS_DIR = "results/dryrun"
+
+# dtype → wire bytes for collective accounting
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(\w+)\[([\d,]*)\][^=]*?\b"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        if cfg.embed_inputs:
+            inputs = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        else:
+            inputs = jax.ShapeDtypeStruct((b, s, cfg.d_model), cfg.cdtype)
+        return {
+            "inputs": inputs,
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+    if shape.kind == "prefill":
+        if cfg.embed_inputs:
+            inputs = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        else:
+            inputs = jax.ShapeDtypeStruct((b, s, cfg.d_model), cfg.cdtype)
+        return {
+            "inputs": inputs,
+            "caches": M.make_caches(cfg, b, s, spec=True),
+        }
+    # decode: one new token against a cache of seq_len
+    if cfg.embed_inputs:
+        inputs = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    else:
+        inputs = jax.ShapeDtypeStruct((b, 1, cfg.d_model), cfg.cdtype)
+    return {
+        "inputs": inputs,
+        "caches": M.make_caches(cfg, b, s, spec=True),
+        "cache_len": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def parse_collectives(hlo_text: str, trip_counts: dict[str, int]) -> dict:
+    """Sum collective payload bytes from compiled HLO.
+
+    Ops inside a while-loop body computation are multiplied by that loop's
+    trip count; ``trip_counts`` maps substrings of computation names (or
+    "default") to multipliers.  We use the known structural trip counts
+    (stage scan, loss chunks, attention chunks) supplied by the caller.
+    """
+    by_kind: dict[str, float] = {}
+    count = 0
+    # split into computations: lines like "%name (param: ...) -> ... {"
+    comp = "default"
+    comp_mult = 1
+    for line in hlo_text.splitlines():
+        m_comp = re.match(r"\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*\([^)]*\)\s*->", line)
+        if m_comp:
+            comp = m_comp.group(1)
+            comp_mult = 1
+            for frag, mult in trip_counts.items():
+                if frag != "default" and frag in comp:
+                    comp_mult = mult
+                    break
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        nbytes = _DTYPE_BYTES.get(dtype, 4)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        by_kind[kind] = by_kind.get(kind, 0.0) + float(n * nbytes * comp_mult)
+        count += 1
+    by_kind["n_collective_ops"] = count
+    return by_kind
+
+
+def analytic_flops(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """MODEL_FLOPS: 6·N·D (train) / 2·N·D (fwd-only), MoE-active-aware,
+    plus attention score/PV FLOPs (not in 6ND)."""
+    params = param_counts(cfg)
+    n_active = params["active"]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        base = 6 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        base = 2 * n_active * tokens
+    else:
+        tokens = shape.global_batch  # one token each
+        base = 2 * n_active * tokens
+
+    # attention score+PV term: 2·2·Hq·dh·Sq·Skv_eff per layer per batch elem
+    attn = 0
+    mult = 3 if shape.kind == "train" else 1
+    for kind in cfg.stage_pattern * cfg.n_stages + cfg.tail_pattern:
+        if kind not in M._ATTN_KINDS:
+            continue
+        local = kind in ("attn_local", "attn_local_moe")
+        s_q = 1 if shape.is_decode else shape.seq_len
+        s_kv = shape.seq_len
+        if local and cfg.window:
+            s_kv = min(s_kv, cfg.window)
+        if not shape.is_decode and not (local and cfg.window):
+            s_kv_eff = s_kv / 2  # causal half
+        else:
+            s_kv_eff = s_kv
+        attn += (
+            4 * cfg.n_heads * cfg.d_head * s_q * s_kv_eff * shape.global_batch
+        ) * mult
+    return {"model_flops": float(base), "attn_flops": float(attn),
+            "total": float(base + attn)}
+
+
+def param_counts(cfg: ArchConfig) -> dict:
+    shapes = jax.eval_shape(lambda k: M.init(k, cfg), jax.random.PRNGKey(0))
+    total = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes))
+    active = M.active_param_count(shapes, cfg)
+    return {"total": total, "active": active}
+
+
+def build_cell(cfg, shape, mesh, *, unroll=False, opt_moment_dtype=None,
+               remat_policy="full"):
+    """Returns (jitted fn lowered-ready, example args, trip_counts)."""
+    mi = SH.make_mesh_info(mesh)
+    pshapes = jax.eval_shape(lambda k: M.init(k, cfg), jax.random.PRNGKey(0))
+    # decode: TP-only (weights resident, no per-step FSDP gathers) whenever
+    # the TP-sharded copy fits HBM; giant MoE configs keep FSDP (EP is the
+    # recorded follow-up)
+    n_param_bytes = sum(
+        int(np.prod(x.shape)) * x.dtype.itemsize
+        for x in jax.tree.leaves(pshapes)
+    )
+    serving = (
+        shape.kind == "decode"
+        and n_param_bytes / mi.model_size < 12 * 2**30
+    )
+    pspecs = SH.param_pspecs(cfg, pshapes, mi, serving=serving)
+    pshard = SH.named(pspecs, mi)
+    par = M.ParallelCfg(dispatch_groups=mi.dp_size)
+    specs = input_specs(cfg, shape)
+    scan_layers = not unroll
+
+    trip = {"default": 1}
+    if scan_layers:
+        trip["while"] = cfg.n_stages  # best-effort attribution
+
+    if shape.kind == "train":
+        if opt_moment_dtype is None:
+            opt_moment_dtype = "bfloat16" if param_counts(cfg)["total"] > 3e10 else "float32"
+        opt = AdamW(lr=1e-4, moment_dtype=opt_moment_dtype)
+        oshapes = jax.eval_shape(opt.init, pshapes)
+        ospecs = SH.opt_pspecs(pspecs, oshapes)
+        oshard = SH.named(ospecs, mi)
+        bspecs = SH.batch_pspecs(cfg, specs, mi)
+        bshard = SH.named(bspecs, mi)
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: M.loss_fn(
+                    p, cfg, batch["inputs"], batch["labels"], par=par,
+                    remat=True, remat_policy=remat_policy,
+                    scan_layers=scan_layers,
+                )
+            )(params)
+            params, opt_state = opt.update(grads, opt_state, params)
+            return params, opt_state, loss
+
+        fn = jax.jit(
+            train_step,
+            in_shardings=(pshard, oshard, bshard),
+            out_shardings=(pshard, oshard, SH.named(jax.sharding.PartitionSpec(), mi)),
+        )
+        args = (pshapes, oshapes, specs)
+        return fn, args, trip
+
+    cspecs = SH.cache_pspecs(
+        cfg, shape.global_batch, shape.seq_len, mi, kind=shape.kind
+    )
+    cshard = SH.named(cspecs, mi)
+    in_shard = SH.named(SH.batch_pspecs(cfg, specs["inputs"], mi), mi)
+    P = jax.sharding.PartitionSpec
+    logits_shard = SH.named(P(mi.fsdp if shape.global_batch % mi.dp_size == 0 else None, "model"), mi)
+
+    if shape.kind == "prefill":
+
+        def prefill_step(params, inputs, caches):
+            return M.prefill(params, cfg, inputs, caches, par=par)
+
+        fn = jax.jit(
+            prefill_step,
+            in_shardings=(pshard, in_shard, cshard),
+            out_shardings=(logits_shard, cshard),
+        )
+        args = (pshapes, specs["inputs"], specs["caches"])
+        return fn, args, trip
+
+    def serve_step(params, inputs, caches, cache_len):
+        return M.decode_step(params, cfg, inputs, caches, cache_len, par=par)
+
+    fn = jax.jit(
+        serve_step,
+        in_shardings=(pshard, in_shard, cshard, SH.named(P(), mi)),
+        out_shardings=(logits_shard, cshard),
+    )
+    args = (pshapes, specs["inputs"], specs["caches"], specs["cache_len"])
+    return fn, args, trip
+
+
+def run_cell(
+    arch: str, shape_name: str, *, multi_pod: bool, unroll: bool = False,
+    variant: str = "baseline", out_dir: str = RESULTS_DIR, force: bool = False,
+) -> dict:
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    cell_id = f"{arch}_{shape_name}_{mesh_tag}_{variant}" + ("_unroll" if unroll else "")
+    os.makedirs(out_dir, exist_ok=True)
+    out_path = os.path.join(out_dir, cell_id + ".json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_tag,
+        "variant": variant, "unroll": unroll, "ok": False,
+    }
+    t_start = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        fn, args, trip = build_cell(cfg, shape, mesh, unroll=unroll)
+        with jax.set_mesh(mesh):
+            t0 = time.time()
+            lowered = fn.lower(*args)
+            rec["lower_s"] = time.time() - t0
+            t0 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = time.time() - t0
+
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_bytes_per_device": int(
+                ma.argument_size_in_bytes
+                + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes
+                - ma.alias_size_in_bytes
+            ),
+        }
+        ca = compiled.cost_analysis() or {}
+        rec["cost"] = {
+            "hlo_flops_per_device": float(ca.get("flops", -1)),
+            "hlo_bytes_per_device": float(ca.get("bytes accessed", -1)),
+        }
+        txt = compiled.as_text()
+        rec["collectives"] = parse_collectives(txt, trip)
+        rec["hlo_bytes_len"] = len(txt)
+        rec["params"] = param_counts(cfg)
+        rec["analytic_flops"] = analytic_flops(cfg, shape)
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = time.time() - t_start
+
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    status = "OK" if rec["ok"] else "FAIL"
+    mem = rec.get("memory", {}).get("peak_bytes_per_device", 0) / 2**30
+    print(
+        f"[dryrun] {cell_id}: {status} "
+        f"(lower {rec.get('lower_s', 0):.0f}s compile {rec.get('compile_s', 0):.0f}s "
+        f"peak {mem:.2f} GiB/dev)",
+        flush=True,
+    )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--unroll", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    pods = {"single": [False], "multi": [True], "both": [False, True]}[args.multi_pod]
+
+    n_ok = n_fail = 0
+    for arch in archs:
+        cfg = get_arch(arch)
+        shape_list = (
+            [SHAPES[args.shape]] if args.shape else cells(cfg)
+        )
+        for shape in shape_list:
+            if shape.name == "long_500k" and not cfg.supports_long_context:
+                continue
+            for mp in pods:
+                rec = run_cell(
+                    arch, shape.name, multi_pod=mp, unroll=args.unroll,
+                    variant=args.variant, out_dir=args.out, force=args.force,
+                )
+                n_ok += rec["ok"]
+                n_fail += not rec["ok"]
+    print(f"[dryrun] done: {n_ok} ok, {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

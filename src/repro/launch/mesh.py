@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module never touches
+jax device state (jax locks the device count on first backend init, and the
+dry-run must set XLA_FLAGS before that).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single-pod (256 chips) or 2×16×16 two-pod (512 chips) mesh."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def fsdp_axes(mesh) -> tuple[str, ...]:
+    """Parameter-sharding (FSDP/ZeRO) axes: data, plus pod when present."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """Batch-sharding axes (same as FSDP axes in this framework)."""
+    return fsdp_axes(mesh)

@@ -1,0 +1,68 @@
+"""Training launcher.
+
+Laptop-scale real run (reduced config) or cluster-scale structure (full
+config under the production mesh — the dry-run proves that path compiles).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --steps 200 \\
+      --batch 8 --seq 128 --ckpt-dir /tmp/ckpt [--reduced]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs.base import get_arch
+from repro.data.pipeline import TokenPipeline
+from repro.optim.adamw import AdamW, warmup_cosine
+from repro.runtime.train_loop import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    pipe = TokenPipeline(cfg, batch=args.batch, seq_len=args.seq, seed=args.seed)
+    opt = AdamW(lr=warmup_cosine(args.lr, args.steps // 10, args.steps))
+    res = train(
+        cfg,
+        steps=args.steps,
+        batch=args.batch,
+        seq_len=args.seq,
+        pipeline=pipe,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every,
+        optimizer=opt,
+        grad_accum=args.grad_accum,
+        seed=args.seed,
+    )
+    print(
+        json.dumps(
+            {
+                "arch": cfg.name,
+                "steps": res.final_step,
+                "loss_first": res.losses[0],
+                "loss_last": res.losses[-1],
+                "restarts": res.restarts,
+                "straggler": res.straggler,
+            },
+            indent=1,
+        )
+    )
+
+
+if __name__ == "__main__":
+    main()

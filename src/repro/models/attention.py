@@ -1,0 +1,152 @@
+"""Attention block: GQA/MHA with RoPE / M-RoPE, qk-norm, softcap, SWA, KV cache.
+
+The attention math runs through ``kernels.ops.attention`` — the Pallas flash
+kernel on TPU, the chunked online-softmax jnp path elsewhere (identical
+memory profile, no S² buffer, so 32k/500k contexts lower cleanly).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops
+from repro.models.layers import (
+    apply_mrope,
+    apply_rope,
+    dense_init,
+    rmsnorm,
+    rmsnorm_init,
+)
+
+Array = jax.Array
+
+
+class KVCache(NamedTuple):
+    k: Array  # [B, S_max, Hkv, Dh]
+    v: Array  # [B, S_max, Hkv, Dh]
+
+
+def attn_init(key, cfg: ArchConfig) -> dict:
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, hq * dh, cfg.pdtype),
+        "wk": dense_init(ks[1], d, hkv * dh, cfg.pdtype),
+        "wv": dense_init(ks[2], d, hkv * dh, cfg.pdtype),
+        "wo": dense_init(ks[3], hq * dh, d, cfg.pdtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(dh, cfg.pdtype)
+        p["k_norm"] = rmsnorm_init(dh, cfg.pdtype)
+    return p
+
+
+def attn_apply(
+    params: dict,
+    cfg: ArchConfig,
+    x: Array,  # [B, S, d]
+    positions: Array,  # [B, S] or [3, B, S] for M-RoPE
+    *,
+    local: bool = False,
+    cache: KVCache | None = None,
+    cache_len: Array | int | None = None,
+    attn_impl: str = "auto",
+) -> tuple[Array, KVCache | None]:
+    b, s, d = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+
+    from repro.distributed.sharding import constrain
+
+    dp = ("pod", "data")
+    q = (x @ params["wq"]).reshape(b, s, hq, dh)
+    k = (x @ params["wk"]).reshape(b, s, hkv, dh)
+    v = (x @ params["wv"]).reshape(b, s, hkv, dh)
+
+    # Layout policy must match the KV-cache policy (sharding.cache_pspecs):
+    # decode with kv-heads that don't divide the model axis uses a
+    # d_head-sharded cache, so q/k/v align on d_head (the QK^T contraction
+    # then partial-psums tiny [B,H,1,bk] tiles instead of resharding the
+    # whole cache every chunk).  Everywhere else: TP over heads — the seq
+    # all-gather then moves small per-head tensors, never an f32 residual.
+    am = jax.sharding.get_abstract_mesh()
+    msize = am.shape.get("model", 1) if am is not None and am.axis_names else 1
+    decode_like = cache is not None and s <= 8
+    if decode_like and msize > 1 and hkv % msize != 0 and dh % msize == 0:
+        shard_hint = "dh"
+        q = constrain(q, dp, None, None, "model")
+        k = constrain(k, dp, None, None, "model")
+        v = constrain(v, dp, None, None, "model")
+    else:
+        shard_hint = "heads" if msize > 1 and hq % msize == 0 else None
+        q = constrain(q, dp, None, "model", None)
+        k = constrain(k, dp, None, "model", None)
+        v = constrain(v, dp, None, "model", None)
+
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+
+    if cfg.mrope_sections is not None:
+        q = apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        # Decode/chunked-prefill: write new K/V at cache_len, attend over cache.
+        idx = jnp.asarray(cache_len, jnp.int32)
+        ck = jax.lax.dynamic_update_slice(
+            cache.k, k.astype(cache.k.dtype), (0, idx, 0, 0)
+        )
+        cv = jax.lax.dynamic_update_slice(
+            cache.v, v.astype(cache.v.dtype), (0, idx, 0, 0)
+        )
+        new_cache = KVCache(ck, cv)
+        k_all, v_all = ck, cv
+        q_offset = idx
+        if local and cfg.window is not None and ck.shape[1] > cfg.window + s:
+            # Decode/short-step fast path: only the last `window + s` cache
+            # rows can be in-window — slice them so compute is O(window),
+            # not O(cache).  Positions shift consistently via q_offset.
+            sw = cfg.window + s
+            start = jnp.clip(idx + s - sw, 0, ck.shape[1] - sw)
+            k_all = jax.lax.dynamic_slice_in_dim(ck, start, sw, axis=1)
+            v_all = jax.lax.dynamic_slice_in_dim(cv, start, sw, axis=1)
+            q_offset = idx - start
+    else:
+        k_all, v_all = k, v
+        q_offset = 0
+
+    window = cfg.window if local else None
+    out = ops.attention(
+        q.transpose(0, 2, 1, 3),
+        k_all.transpose(0, 2, 1, 3),
+        v_all.transpose(0, 2, 1, 3),
+        causal=True,
+        window=window,
+        softcap=cfg.attn_softcap,
+        q_offset=q_offset,
+        impl=attn_impl,
+        shard_hint=shard_hint,
+    )  # [B, Hq, S, Dh]
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, hq * dh)
+    return (out @ params["wo"]).astype(x.dtype), new_cache
+
+
+def make_cache(cfg: ArchConfig, batch: int, max_len: int) -> KVCache:
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.d_head)
+    return KVCache(
+        k=jnp.zeros(shape, cfg.cdtype), v=jnp.zeros(shape, cfg.cdtype)
+    )
+
+
+def cache_spec(cfg: ArchConfig, batch: int, max_len: int) -> KVCache:
+    """ShapeDtypeStruct stand-in (dry-run input_specs)."""
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.d_head)
+    sds = jax.ShapeDtypeStruct(shape, cfg.cdtype)
+    return KVCache(k=sds, v=sds)

@@ -1,0 +1,115 @@
+"""Shared model layers: norms, rotary embeddings (incl. M-RoPE), init helpers.
+
+Models are pure-functional: parameters are nested dicts of jax arrays; every
+layer is an ``init(key, ...) -> params`` + ``apply(params, x, ...)`` pair.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Initialisers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> Array:
+    scale = (1.0 / d_in) ** 0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.zeros((d,), dtype)}
+
+
+def rmsnorm(params: dict, x: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    return (normed * (1.0 + params["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings — standard and M-RoPE (qwen2-vl)
+# ---------------------------------------------------------------------------
+
+
+def _rope_freqs(d_head: int, theta: float) -> Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, d_head // 2, dtype=jnp.float32) / (d_head // 2))
+    )
+
+
+def apply_rope(
+    x: Array,  # [B, S, H, D]
+    positions: Array,  # [B, S] int32
+    theta: float = 10_000.0,
+) -> Array:
+    d = x.shape[-1]
+    freqs = _rope_freqs(d, theta)  # [D/2]
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # [B, S, D/2]
+    cos = jnp.cos(angles)[:, :, None, :]  # [B, S, 1, D/2]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: Array,  # [B, S, H, D]
+    positions: Array,  # [3, B, S] int32 — (t, h, w) triples
+    sections: tuple[int, ...],  # per-axis rotary dims, sums to D/2
+    theta: float = 10_000.0,
+) -> Array:
+    """Qwen2-VL multimodal RoPE: the D/2 rotary dim pairs are split into
+    sections, each rotated by a different position coordinate."""
+    d = x.shape[-1]
+    half = d // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = _rope_freqs(d, theta)  # [D/2]
+    # Select which positional axis drives each frequency slot (static).
+    import numpy as np
+
+    axis_of_slot = jnp.asarray(
+        np.repeat(np.arange(len(sections)), np.asarray(sections))
+    )  # [D/2]
+    pos_per_slot = jnp.take(
+        positions.astype(jnp.float32), axis_of_slot, axis=0
+    )  # [D/2, B, S]
+    angles = jnp.moveaxis(pos_per_slot, 0, -1) * freqs  # [B, S, D/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU — the pool's default FFN)
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d, d_ff, dtype),
+        "w_up": dense_init(k2, d, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d, dtype),
+    }
+
+
+def mlp(params: dict, x: Array) -> Array:
+    gate = jax.nn.silu(x @ params["w_gate"])
+    return ((gate * (x @ params["w_up"])) @ params["w_down"]).astype(x.dtype)

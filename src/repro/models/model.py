@@ -1,0 +1,488 @@
+"""Model assembly for the architecture pool: blocks → stages → scan → LM.
+
+One scan step = one *stage* (the arch's repeating layer pattern), so an
+81-layer hybrid lowers as an 11-step scan over a 7-slot stage + a 4-slot tail
+— compact HLO at any depth.  zamba2's shared attention block is a closure
+constant (one param set, many applications), scanned caches stay per-slot.
+
+Public entry points:
+  init(key, cfg)                                  → params
+  forward(params, cfg, tokens|embeds, ...)        → hidden [B, S, d]
+  logits_fn / loss_fn (chunked over S — no [B, S, V] peak)
+  prefill(...) / decode_step(...)                 → serving path with caches
+  make_caches / cache_specs                       → cache pytrees (alloc/SDS)
+  param_count / active_param_count                → 6·N·D roofline terms
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import (
+    ATTN,
+    ATTN_LOCAL,
+    ATTN_LOCAL_MOE,
+    ATTN_MOE,
+    MAMBA2,
+    RWKV6,
+    SHARED_ATTN,
+    ArchConfig,
+)
+from repro.models import attention as A
+from repro.models import moe as MOE
+from repro.models import rwkv as RW
+from repro.models import ssm as SSM
+from repro.models.layers import embed_init, dense_init, mlp, mlp_init, rmsnorm, rmsnorm_init
+
+Array = jax.Array
+
+_ATTN_KINDS = (ATTN, ATTN_LOCAL, ATTN_MOE, ATTN_LOCAL_MOE, SHARED_ATTN)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelCfg:
+    """Model-visible parallel info (dispatch grouping for MoE)."""
+
+    dispatch_groups: int = 1
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def block_init(key, cfg: ArchConfig, kind: str) -> dict:
+    ks = jax.random.split(key, 3)
+    if kind in (ATTN, ATTN_LOCAL, SHARED_ATTN):
+        return {
+            "ln1": rmsnorm_init(cfg.d_model, cfg.pdtype),
+            "attn": A.attn_init(ks[0], cfg),
+            "ln2": rmsnorm_init(cfg.d_model, cfg.pdtype),
+            "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.pdtype),
+        }
+    if kind in (ATTN_MOE, ATTN_LOCAL_MOE):
+        return {
+            "ln1": rmsnorm_init(cfg.d_model, cfg.pdtype),
+            "attn": A.attn_init(ks[0], cfg),
+            "ln2": rmsnorm_init(cfg.d_model, cfg.pdtype),
+            "moe": MOE.moe_init(ks[1], cfg),
+        }
+    if kind == MAMBA2:
+        return {
+            "ln1": rmsnorm_init(cfg.d_model, cfg.pdtype),
+            "mamba": SSM.mamba_init(ks[0], cfg),
+        }
+    if kind == RWKV6:
+        return {
+            "ln1": rmsnorm_init(cfg.d_model, cfg.pdtype),
+            "ln2": rmsnorm_init(cfg.d_model, cfg.pdtype),
+            "rwkv": RW.rwkv_init(ks[0], cfg),
+        }
+    raise ValueError(kind)
+
+
+def block_apply(
+    params: dict,
+    cfg: ArchConfig,
+    kind: str,
+    h: Array,
+    positions: Array,
+    *,
+    cache: Any = None,
+    cache_len: Any = None,
+    par: ParallelCfg = ParallelCfg(),
+    attn_impl: str = "auto",
+):
+    """Returns (h, new_cache, aux)."""
+    from repro.distributed.sharding import constrain
+
+    def norm_sp(ln, x):
+        # keep the f32 internals of the norm in the sequence-sharded domain;
+        # any gather the next op needs then moves bf16, not f32
+        return constrain(
+            rmsnorm(ln, x), ("pod", "data"), "model", None
+        )
+
+    def out_sp(x):
+        # constrain block outputs back to sequence-sharded BEFORE the
+        # residual add: the row-parallel matmul's partial-sum then lowers to
+        # reduce-scatter (1/model_size the wire bytes of an all-reduce)
+        return constrain(x, ("pod", "data"), "model", None)
+
+    aux = jnp.zeros((), jnp.float32)
+    if kind in _ATTN_KINDS:
+        local = kind in (ATTN_LOCAL, ATTN_LOCAL_MOE)
+        a_out, new_kv = A.attn_apply(
+            params["attn"], cfg, norm_sp(params["ln1"], h), positions,
+            local=local, cache=cache, cache_len=cache_len, attn_impl=attn_impl,
+        )
+        h = h + out_sp(a_out)
+        if kind in (ATTN_MOE, ATTN_LOCAL_MOE):
+            m_out, aux = MOE.moe_apply(
+                params["moe"], cfg, norm_sp(params["ln2"], h),
+                dispatch_groups=par.dispatch_groups,
+            )
+        else:
+            m_out = mlp(params["mlp"], norm_sp(params["ln2"], h))
+        return h + out_sp(m_out), new_kv, aux
+    if kind == MAMBA2:
+        m_out, new_cache = SSM.mamba_apply(
+            params["mamba"], cfg, norm_sp(params["ln1"], h), cache=cache
+        )
+        return h + out_sp(m_out), new_cache, aux
+    if kind == RWKV6:
+        tm_out, shift_tm, state = RW.time_mix(
+            params["rwkv"]["tm"], cfg, norm_sp(params["ln1"], h),
+            cache,
+        )
+        h = h + out_sp(tm_out)
+        cm_out, shift_cm = RW.channel_mix(
+            params["rwkv"]["cm"], cfg, norm_sp(params["ln2"], h),
+            cache,
+        )
+        h = h + out_sp(cm_out)
+        new_cache = (
+            RW.RWKVCache(shift_tm, shift_cm, state) if cache is not None else None
+        )
+        return h, new_cache, aux
+    raise ValueError(kind)
+
+
+def _block_cache(cfg: ArchConfig, kind: str, batch: int, max_len: int, spec: bool):
+    if kind in _ATTN_KINDS:
+        # NOTE: local (SWA) layers allocate the full max_len buffer in the
+        # baseline; a window-sized ring buffer is a recorded hillclimb.
+        return (
+            A.cache_spec(cfg, batch, max_len)
+            if spec
+            else A.make_cache(cfg, batch, max_len)
+        )
+    if kind == MAMBA2:
+        c = SSM.make_mamba_cache(cfg, batch)
+    elif kind == RWKV6:
+        c = RW.make_rwkv_cache(cfg, batch)
+    else:
+        raise ValueError(kind)
+    if spec:
+        return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), c)
+    return c
+
+
+def make_caches(cfg: ArchConfig, batch: int, max_len: int, *, spec: bool = False):
+    """Cache pytree: {"stages": per-slot stacked [n_stages, ...], "tail": [...]}"""
+
+    def stacked(kind):
+        one = _block_cache(cfg, kind, batch, max_len, spec)
+        if spec:
+            return jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((cfg.n_stages,) + s.shape, s.dtype),
+                one,
+            )
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.n_stages,) + x.shape), one
+        )
+
+    return {
+        "stages": [stacked(kind) for kind in cfg.stage_pattern],
+        "tail": [
+            _block_cache(cfg, kind, batch, max_len, spec)
+            for kind in cfg.tail_pattern
+        ],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Model init / forward
+# ---------------------------------------------------------------------------
+
+
+def init(key, cfg: ArchConfig) -> dict:
+    n_slots = len(cfg.stage_pattern)
+    keys = jax.random.split(key, cfg.n_stages * n_slots + len(cfg.tail_pattern) + 4)
+    ki = iter(range(len(keys)))
+
+    has_shared = SHARED_ATTN in cfg.stage_pattern + cfg.tail_pattern
+
+    def stage_params():
+        out = []
+        for si in range(cfg.n_stages):
+            slots = {}
+            for j, kind in enumerate(cfg.stage_pattern):
+                if kind == SHARED_ATTN:
+                    continue  # shared params live outside the scan
+                slots[f"slot{j}"] = block_init(keys[next(ki)], cfg, kind)
+            out.append(slots)
+        # stack over stages
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *out)
+
+    params: dict = {"stages": stage_params()}
+    if has_shared:
+        params["shared_attn"] = block_init(keys[next(ki)], cfg, SHARED_ATTN)
+    params["tail"] = [
+        block_init(keys[next(ki)], cfg, kind) for kind in cfg.tail_pattern
+    ]
+    params["embed"] = embed_init(keys[next(ki)], cfg.vocab, cfg.d_model, cfg.pdtype)
+    params["final_norm"] = rmsnorm_init(cfg.d_model, cfg.pdtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[next(ki)], cfg.d_model, cfg.vocab, cfg.pdtype)
+    return params
+
+
+def forward(
+    params: dict,
+    cfg: ArchConfig,
+    inputs: Array,  # tokens [B, S] int32, or embeds [B, S, d] if not embed_inputs
+    *,
+    positions: Array | None = None,
+    caches: Any = None,
+    cache_len: Any = None,
+    par: ParallelCfg = ParallelCfg(),
+    attn_impl: str = "auto",
+    remat: bool = False,
+    remat_policy: str = "full",  # "full" | "dots"
+    scan_layers: bool = True,
+):
+    """Returns (hidden [B, S, d], new_caches, aux).
+
+    ``scan_layers=False`` unrolls the stage loop (python loop over stage
+    indices) — bigger HLO, but ``cost_analysis``/collective counts then
+    reflect every layer (scan bodies are counted once), which the roofline
+    pass needs.
+    """
+    if cfg.embed_inputs:
+        from repro.distributed.sharding import constrain as _c
+
+        # vocab-sharded embedding gather produces a partial-sum; reshard the
+        # small bf16 result to (dp, seq/model) immediately so the psum runs
+        # at [B/dp, S, d] rather than full-batch f32
+        h = jnp.take(params["embed"], inputs, axis=0).astype(cfg.cdtype)
+        h = _c(h, ("pod", "data"), "model", None)
+    else:
+        h = inputs.astype(cfg.cdtype)
+    b, s = h.shape[0], h.shape[1]
+
+    if positions is None:
+        base = jnp.arange(s, dtype=jnp.int32)[None, :] + (
+            0 if cache_len is None else jnp.asarray(cache_len, jnp.int32)
+        )
+        base = jnp.broadcast_to(base, (b, s))
+        if cfg.mrope_sections is not None:
+            positions = jnp.broadcast_to(base[None], (3, b, s))
+        else:
+            positions = base
+
+    shared = params.get("shared_attn")
+    use_cache = caches is not None
+
+    from repro.distributed.sharding import constrain
+
+    # Sequence-parallel residual stream: the per-stage saved activation (the
+    # remat boundary) is sharded over (dp, model) — for a 64×d6144 model this
+    # is the difference between 51 GiB and 3.2 GiB of checkpointed carries.
+    def sp(h):
+        return constrain(h, ("pod", "data"), "model", None)
+
+    h = sp(h)
+
+    def run_slots(h, slot_params, slot_caches):
+        new_caches, aux_total = [], jnp.zeros((), jnp.float32)
+        for j, kind in enumerate(cfg.stage_pattern):
+            p = shared if kind == SHARED_ATTN else slot_params[f"slot{j}"]
+            c = slot_caches[j] if use_cache else None
+            h, nc, aux = block_apply(
+                p, cfg, kind, h, positions,
+                cache=c, cache_len=cache_len, par=par, attn_impl=attn_impl,
+            )
+            h = sp(h)
+            new_caches.append(nc)
+            aux_total = aux_total + aux
+        return h, new_caches, aux_total
+
+    if remat:
+        policy = (
+            jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            if remat_policy == "dots"
+            else None
+        )
+        run_slots = jax.checkpoint(run_slots, policy=policy)
+
+    if use_cache:
+        # caches["stages"]: list (per slot) of stacked [n_stages, ...] pytrees
+        def stage_fn(carry, xs):
+            h, aux = carry
+            slot_params, slot_caches = xs
+            h, new_caches, aux_s = run_slots(h, slot_params, slot_caches)
+            return (h, aux + aux_s), new_caches
+
+        if scan_layers:
+            (h, aux), new_stage_caches = jax.lax.scan(
+                stage_fn,
+                (h, jnp.zeros((), jnp.float32)),
+                (params["stages"], caches["stages"]),
+            )
+        else:
+            aux = jnp.zeros((), jnp.float32)
+            per_stage_caches = []
+            for i in range(cfg.n_stages):
+                xs_i = jax.tree.map(
+                    lambda x: x[i], (params["stages"], caches["stages"])
+                )
+                (h, aux), nc = stage_fn((h, aux), xs_i)
+                per_stage_caches.append(nc)
+            new_stage_caches = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *per_stage_caches
+            )
+        new_tail = []
+        for tp, kind, tc in zip(params["tail"], cfg.tail_pattern, caches["tail"]):
+            h, nc, aux_t = block_apply(
+                tp, cfg, kind, h, positions,
+                cache=tc, cache_len=cache_len, par=par, attn_impl=attn_impl,
+            )
+            new_tail.append(nc)
+            aux = aux + aux_t
+        new_caches = {"stages": new_stage_caches, "tail": new_tail}
+    else:
+
+        def stage_fn(carry, slot_params):
+            h, aux = carry
+            h, _, aux_s = run_slots(h, slot_params, None)
+            return (h, aux + aux_s), None
+
+        if scan_layers:
+            (h, aux), _ = jax.lax.scan(
+                stage_fn, (h, jnp.zeros((), jnp.float32)), params["stages"]
+            )
+        else:
+            aux = jnp.zeros((), jnp.float32)
+            for i in range(cfg.n_stages):
+                sp_i = jax.tree.map(lambda x: x[i], params["stages"])
+                (h, aux), _ = stage_fn((h, aux), sp_i)
+        for tp, kind in zip(params["tail"], cfg.tail_pattern):
+            h, _, aux_t = block_apply(
+                tp, cfg, kind, h, positions, par=par, attn_impl=attn_impl
+            )
+            aux = aux + aux_t
+        new_caches = None
+
+    h = rmsnorm(params["final_norm"], h)
+    return h, new_caches, aux
+
+
+def _head_matrix(params: dict, cfg: ArchConfig) -> Array:
+    if cfg.tie_embeddings:
+        return params["embed"].T  # [d, V]
+    return params["lm_head"]
+
+
+def logits_fn(params: dict, cfg: ArchConfig, hidden: Array) -> Array:
+    logits = hidden.astype(jnp.float32) @ _head_matrix(params, cfg).astype(jnp.float32)
+    if cfg.final_softcap > 0:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits
+
+
+def loss_fn(
+    params: dict,
+    cfg: ArchConfig,
+    inputs: Array,
+    labels: Array,  # [B, S] int32
+    *,
+    par: ParallelCfg = ParallelCfg(),
+    aux_coef: float = 0.01,
+    remat: bool = True,
+    remat_policy: str = "full",
+    loss_chunk: int = 512,
+    scan_layers: bool = True,
+) -> Array:
+    hidden, _, aux = forward(
+        params, cfg, inputs, par=par, remat=remat, remat_policy=remat_policy,
+        scan_layers=scan_layers,
+    )
+    b, s, d = hidden.shape
+    w = _head_matrix(params, cfg)
+
+    # Chunked softmax-xent over the sequence: peak live logits are
+    # [B, chunk, V] instead of [B, S, V].
+    c = min(loss_chunk, s)
+    s_pad = -(-s // c) * c
+    hp = jnp.pad(hidden, ((0, 0), (0, s_pad - s), (0, 0)))
+    lp = jnp.pad(labels, ((0, 0), (0, s_pad - s)), constant_values=-1)
+    h_chunks = hp.reshape(b, s_pad // c, c, d).transpose(1, 0, 2, 3)
+    l_chunks = lp.reshape(b, s_pad // c, c).transpose(1, 0, 2)
+
+    def chunk_loss(carry, hc_lc):
+        hc, lc = hc_lc
+        logits = hc.astype(jnp.float32) @ w.astype(jnp.float32)
+        if cfg.final_softcap > 0:
+            logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1
+        )[..., 0]
+        valid = lc >= 0
+        nll = jnp.where(valid, lse - gold, 0.0)
+        return (carry[0] + nll.sum(), carry[1] + valid.sum()), None
+
+    (total, count), _ = jax.lax.scan(
+        chunk_loss, (jnp.zeros(()), jnp.zeros((), jnp.int32)), (h_chunks, l_chunks)
+    )
+    return total / jnp.maximum(count, 1) + aux_coef * aux
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def prefill(
+    params, cfg: ArchConfig, inputs: Array, caches, *,
+    par: ParallelCfg = ParallelCfg(), attn_impl: str = "auto",
+):
+    """Populate caches from a prompt; returns (last-token logits, caches)."""
+    hidden, caches, _ = forward(
+        params, cfg, inputs, caches=caches, cache_len=0, par=par,
+        attn_impl=attn_impl,
+    )
+    logits = logits_fn(params, cfg, hidden[:, -1:])
+    return logits[:, 0], caches
+
+
+def decode_step(
+    params, cfg: ArchConfig, inputs: Array, caches, cache_len, *,
+    par: ParallelCfg = ParallelCfg(), attn_impl: str = "auto",
+):
+    """One token for every sequence.  inputs: [B, 1] tokens or [B, 1, d]."""
+    hidden, caches, _ = forward(
+        params, cfg, inputs, caches=caches, cache_len=cache_len, par=par,
+        attn_impl=attn_impl,
+    )
+    logits = logits_fn(params, cfg, hidden[:, -1:])
+    return logits[:, 0], caches
+
+
+# ---------------------------------------------------------------------------
+# Accounting
+# ---------------------------------------------------------------------------
+
+
+def param_count(params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+
+
+def active_param_count(params, cfg: ArchConfig) -> int:
+    """MoE-aware: experts contribute top_k/E of their params (6·N_active·D)."""
+    total = 0
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    for path, leaf in flat:
+        n = int(np.prod(leaf.shape))
+        if any("moe" in str(p) for p in path) and any(
+            str(getattr(p, "key", "")) in ("w_gate", "w_up", "w_down") for p in path
+        ):
+            n = n * cfg.top_k // max(cfg.n_experts, 1)
+        total += n
+    return total

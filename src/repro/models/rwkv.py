@@ -1,0 +1,129 @@
+"""RWKV-6 "Finch" block: time-mix (wkv recurrence with data-dependent decay)
++ channel-mix, both with token-shift.
+
+The wkv recurrence runs through ``kernels.ops.rwkv6`` (chunked matmul form).
+Data-dependent components (the ddlerp token-shift interpolators and the decay
+``w``) use the paper's low-rank adapters.  Decode carries an ``RWKVCache``:
+two token-shift rows + the [B, H, K, V] wkv state — O(1) per-token state.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops
+from repro.models.layers import dense_init, rmsnorm, rmsnorm_init
+
+Array = jax.Array
+
+_LORA = 32  # low-rank width for the ddlerp / decay adapters
+_MIX = 5  # r, k, v, w, g token-shift lanes
+
+
+class RWKVCache(NamedTuple):
+    shift_tm: Array  # [B, d]   last token entering time-mix
+    shift_cm: Array  # [B, d]   last token entering channel-mix
+    state: Array  # [B, H, K, V] wkv state
+
+
+def rwkv_init(key, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    hk = cfg.rwkv_head_dim
+    h = d // hk
+    ks = jax.random.split(key, 12)
+    return {
+        "tm": {
+            "mix_base": jnp.zeros((_MIX, d), cfg.pdtype),
+            "mix_w1": dense_init(ks[0], d, _MIX * _LORA, cfg.pdtype),
+            "mix_w2": (
+                jax.random.normal(ks[1], (_MIX, _LORA, d), jnp.float32) * 0.02
+            ).astype(cfg.pdtype),
+            "wr": dense_init(ks[2], d, d, cfg.pdtype),
+            "wk": dense_init(ks[3], d, d, cfg.pdtype),
+            "wv": dense_init(ks[4], d, d, cfg.pdtype),
+            "wg": dense_init(ks[5], d, d, cfg.pdtype),
+            "w0": jnp.full((d,), -6.0, jnp.float32),  # decay bias (slow decay)
+            "w_lora1": dense_init(ks[6], d, _LORA, cfg.pdtype),
+            "w_lora2": dense_init(ks[7], _LORA, d, cfg.pdtype),
+            "u": (jax.random.normal(ks[8], (h, hk), jnp.float32) * 0.1),
+            "ln_x": rmsnorm_init(d, cfg.pdtype),
+            "wo": dense_init(ks[9], d, d, cfg.pdtype),
+        },
+        "cm": {
+            "mix_k": jnp.zeros((d,), cfg.pdtype),
+            "mix_r": jnp.zeros((d,), cfg.pdtype),
+            "wk": dense_init(ks[10], d, cfg.d_ff, cfg.pdtype),
+            "wv": dense_init(ks[11], cfg.d_ff, d, cfg.pdtype),
+            "wr": dense_init(ks[0], d, d, cfg.pdtype),
+        },
+    }
+
+
+def _token_shift(x: Array, last: Array | None) -> Array:
+    """shift(x)[t] = x[t-1]; position 0 takes ``last`` (decode) or zeros."""
+    first = (
+        jnp.zeros_like(x[:, :1]) if last is None else last[:, None].astype(x.dtype)
+    )
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def time_mix(
+    p: dict, cfg: ArchConfig, x: Array, cache: RWKVCache | None
+) -> tuple[Array, Array, Array]:
+    """Returns (out, new_shift_row, new_state)."""
+    b, s, d = x.shape
+    hk = cfg.rwkv_head_dim
+    h = d // hk
+    sx = _token_shift(x, cache.shift_tm if cache is not None else None)
+    delta = sx - x
+
+    # ddlerp: per-lane data-dependent interpolation between x and shift(x)
+    base = x + delta * p["mix_base"][0][None, None]  # shared first-stage mix
+    lora = jnp.tanh(base @ p["mix_w1"]).reshape(b, s, _MIX, _LORA)
+    dyn = jnp.einsum("bsml,mld->bsmd", lora, p["mix_w2"].astype(x.dtype))
+    mixed = (
+        x[:, :, None] + delta[:, :, None] * (p["mix_base"][None, None] + dyn)
+    )  # [B, S, 5, d]
+    xr, xk, xv, xw, xg = [mixed[:, :, i] for i in range(_MIX)]
+
+    r = (xr @ p["wr"]).reshape(b, s, h, hk)
+    k = (xk @ p["wk"]).reshape(b, s, h, hk)
+    v = (xv @ p["wv"]).reshape(b, s, h, hk)
+    g = xg @ p["wg"]
+    # data-dependent decay w ∈ (0, 1): exp(−exp(w0 + lora(xw)))
+    wlog = p["w0"][None, None] + jnp.tanh(xw @ p["w_lora1"]) @ p["w_lora2"]
+    w = jnp.exp(-jnp.exp(wlog.astype(jnp.float32))).reshape(b, s, h, hk)
+
+    state0 = cache.state if cache is not None else None
+    y, state = ops.rwkv6(r, k, v, w, p["u"], init_state=state0, impl="chunked")
+    y = y.reshape(b, s, d)
+    y = rmsnorm(p["ln_x"], y) * jax.nn.silu(g)
+    out = (y @ p["wo"]).astype(x.dtype)
+    return out, x[:, -1], state
+
+
+def channel_mix(
+    p: dict, cfg: ArchConfig, x: Array, cache: RWKVCache | None
+) -> tuple[Array, Array]:
+    sx = _token_shift(x, cache.shift_cm if cache is not None else None)
+    delta = sx - x
+    xk = x + delta * p["mix_k"][None, None]
+    xr = x + delta * p["mix_r"][None, None]
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    kv = k @ p["wv"]
+    out = (jax.nn.sigmoid(xr @ p["wr"]) * kv).astype(x.dtype)
+    return out, x[:, -1]
+
+
+def make_rwkv_cache(cfg: ArchConfig, batch: int) -> RWKVCache:
+    d = cfg.d_model
+    hk = cfg.rwkv_head_dim
+    h = d // hk
+    return RWKVCache(
+        shift_tm=jnp.zeros((batch, d), cfg.cdtype),
+        shift_cm=jnp.zeros((batch, d), cfg.cdtype),
+        state=jnp.zeros((batch, h, hk, hk), jnp.float32),
+    )

@@ -1,0 +1,120 @@
+"""Mamba-2 block (zamba2's SSM component).
+
+in_proj → split (z gate | xBC | dt) → causal depthwise conv on xBC → SSD
+(chunked matmul form via ``kernels.ops.ssd``) → gated RMSNorm → out_proj.
+
+Decode carries a ``MambaCache``: the conv tail (last ``conv_width−1`` xBC
+rows) and the SSD state ``[B, H, P, N]`` — O(1) per-token state, which is why
+the hybrid runs the 500k-context cell.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops
+from repro.models.layers import dense_init, rmsnorm, rmsnorm_init
+
+Array = jax.Array
+
+
+class MambaCache(NamedTuple):
+    conv: Array  # [B, conv_width-1, conv_dim]
+    h: Array  # [B, H, P, N]
+
+
+def _dims(cfg: ArchConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    conv_dim = d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return d_inner, n_heads, conv_dim
+
+
+def mamba_init(key, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    d_inner, h, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    d_proj = 2 * d_inner + 2 * cfg.ssm_groups * cfg.ssm_state + h
+    return {
+        "in_proj": dense_init(ks[0], d, d_proj, cfg.pdtype),
+        "conv_w": (
+            jax.random.normal(ks[1], (cfg.conv_width, conv_dim), jnp.float32)
+            * (1.0 / cfg.conv_width) ** 0.5
+        ).astype(cfg.pdtype),
+        "conv_b": jnp.zeros((conv_dim,), cfg.pdtype),
+        "a_log": jnp.log(
+            jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)
+        ),  # A = −exp(a_log) ∈ [−16, −1]
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm": rmsnorm_init(d_inner, cfg.pdtype),
+        "out_proj": dense_init(ks[3], d_inner, d, cfg.pdtype),
+    }
+
+
+def _causal_conv(xbc: Array, w: Array, b: Array, tail: Array | None) -> tuple[Array, Array]:
+    """Depthwise causal conv along S.  Returns (out [B,S,C], new tail)."""
+    cw = w.shape[0]
+    hist = (
+        jnp.zeros((xbc.shape[0], cw - 1, xbc.shape[2]), xbc.dtype)
+        if tail is None
+        else tail.astype(xbc.dtype)
+    )
+    full = jnp.concatenate([hist, xbc], axis=1)  # [B, S+cw-1, C]
+    # windowed dot: out[t] = Σ_j w[j]·full[t+j]
+    out = sum(
+        full[:, j : j + xbc.shape[1]] * w[j][None, None, :] for j in range(cw)
+    )
+    new_tail = full[:, -(cw - 1) :] if cw > 1 else full[:, :0]
+    return jax.nn.silu(out + b[None, None, :]), new_tail
+
+
+def mamba_apply(
+    params: dict,
+    cfg: ArchConfig,
+    x: Array,  # [B, S, d]
+    *,
+    cache: MambaCache | None = None,
+) -> tuple[Array, MambaCache | None]:
+    b, s, d = x.shape
+    d_inner, h, conv_dim = _dims(cfg)
+    g, n, p = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_head_dim
+
+    proj = x @ params["in_proj"]  # [B, S, d_proj]
+    z, xbc, dt = jnp.split(proj, [d_inner, d_inner + conv_dim], axis=-1)
+
+    conv_tail = cache.conv if cache is not None else None
+    xbc, new_tail = _causal_conv(xbc, params["conv_w"], params["conv_b"], conv_tail)
+
+    xs, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + g * n], axis=-1)
+    xs = xs.reshape(b, s, h, p)
+    bmat = bmat.reshape(b, s, g, n)
+    cmat = cmat.reshape(b, s, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,S,H]
+    a = -jnp.exp(params["a_log"])  # [H]
+
+    init_h = cache.h if cache is not None else None
+    y, h_new = ops.ssd(
+        xs, dt, a, bmat, cmat, init_state=init_h,
+        impl="chunked",
+    )  # [B, S, H, P]
+    y = y + params["d_skip"][None, None, :, None] * xs
+    y = y.reshape(b, s, d_inner)
+    y = rmsnorm(params["norm"], y) * jax.nn.silu(z)
+    out = (y @ params["out_proj"]).astype(x.dtype)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = MambaCache(conv=new_tail.astype(cache.conv.dtype), h=h_new)
+    return out, new_cache
+
+
+def make_mamba_cache(cfg: ArchConfig, batch: int) -> MambaCache:
+    d_inner, h, conv_dim = _dims(cfg)
+    return MambaCache(
+        conv=jnp.zeros((batch, cfg.conv_width - 1, conv_dim), cfg.cdtype),
+        h=jnp.zeros((batch, h, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+    )

@@ -1,0 +1,82 @@
+"""AdamW with configurable moment dtype (ZeRO-sharded via the param policy).
+
+Moments stored in bf16 for the giant configs (grok-1's 314 B params would not
+fit fp32 m/v on a single pod) — the optimizer-state version of the paper's
+fast-serialization byte-narrowing, with the same error profile as 8-bit Adam
+variants.  State is a plain dict pytree so the checkpoint manager and the
+sharding policy treat it like any other tree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[Array], Array] | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    moment_dtype: str = "float32"
+
+    def init(self, params) -> dict:
+        mdt = jnp.dtype(self.moment_dtype)
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def _lr(self, step: Array) -> Array:
+        if callable(self.lr):
+            return self.lr(step)
+        return jnp.asarray(self.lr, jnp.float32)
+
+    def update(self, grads, state, params):
+        """Returns (new_params, new_state)."""
+        step = state["step"] + 1
+        lr = self._lr(step)
+        b1, b2 = self.b1, self.b2
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+        mdt = jnp.dtype(self.moment_dtype)
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            mf = m.astype(jnp.float32) * b1 + gf * (1 - b1)
+            vf = v.astype(jnp.float32) * b2 + gf * gf * (1 - b2)
+            mhat = mf / c1
+            vhat = vf / c2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if p.ndim >= 2:  # decay matrices only (norms/bias excluded)
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            return new_p, mf.astype(mdt), vf.astype(mdt)
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v, "step": step}
+
+
+def warmup_cosine(
+    peak: float, warmup_steps: int, total_steps: int, floor: float = 0.1
+) -> Callable[[Array], Array]:
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup_steps, 1)
+        frac = jnp.clip(
+            (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = peak * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return sched

@@ -1,0 +1,166 @@
+"""Per-architecture smoke tests (reduced configs, CPU): one forward/train
+step asserting output shapes + no NaNs, decode-vs-forward consistency, and a
+short training run that actually reduces loss."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES, cells, get_arch, list_archs
+from repro.models import model as M
+
+KEY = jax.random.PRNGKey(0)
+ALL_ARCHS = list_archs()
+
+
+def _inputs(cfg, b, s):
+    if cfg.embed_inputs:
+        return jax.random.randint(KEY, (b, s), 0, cfg.vocab, dtype=jnp.int32)
+    return jax.random.normal(KEY, (b, s, cfg.d_model), jnp.float32)
+
+
+def test_pool_complete():
+    assert len(ALL_ARCHS) == 10
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_forward_and_loss(arch):
+    cfg = get_arch(arch).reduced()
+    params = M.init(KEY, cfg)
+    b, s = 2, 24
+    x = _inputs(cfg, b, s)
+    hidden, _, aux = M.forward(params, cfg, x)
+    assert hidden.shape == (b, s, cfg.d_model)
+    assert bool(jnp.isfinite(hidden).all()), "NaN in hidden states"
+    labels = jax.random.randint(KEY, (b, s), 0, cfg.vocab)
+    loss = M.loss_fn(params, cfg, x, labels, remat=False)
+    assert np.isfinite(float(loss))
+    # remat path gives the same loss
+    loss_r = M.loss_fn(params, cfg, x, labels, remat=True)
+    assert abs(float(loss) - float(loss_r)) < 1e-4
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_grad_finite(arch):
+    cfg = get_arch(arch).reduced()
+    params = M.init(KEY, cfg)
+    x = _inputs(cfg, 2, 16)
+    labels = jax.random.randint(KEY, (2, 16), 0, cfg.vocab)
+    g = jax.grad(lambda p: M.loss_fn(p, cfg, x, labels, remat=True))(params)
+    norms = [float(jnp.sum(y.astype(jnp.float32) ** 2)) for y in jax.tree.leaves(g)]
+    assert all(np.isfinite(n) for n in norms)
+    assert sum(norms) > 0
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_decode_matches_forward(arch):
+    cfg = get_arch(arch).reduced()
+    params = M.init(KEY, cfg)
+    x = _inputs(cfg, 2, 12)
+    hid, _, _ = M.forward(params, cfg, x)
+    full = M.logits_fn(params, cfg, hid[:, -1:])[:, 0]
+    caches = M.make_caches(cfg, 2, 16)
+    _, caches = M.prefill(params, cfg, x[:, :11], caches)
+    step, _ = M.decode_step(params, cfg, x[:, 11:12], caches, 11)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(step), atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_multi_token_decode_chain(arch):
+    """Greedy 4-step decode equals teacher-forced forward logits."""
+    cfg = get_arch(arch).reduced()
+    params = M.init(KEY, cfg)
+    x = _inputs(cfg, 1, 12)
+    hid, _, _ = M.forward(params, cfg, x)
+    caches = M.make_caches(cfg, 1, 16)
+    _, caches = M.prefill(params, cfg, x[:, :8], caches)
+    for i in range(8, 12):
+        step, caches = M.decode_step(params, cfg, x[:, i : i + 1], caches, i)
+    full = M.logits_fn(params, cfg, hid[:, -1:])[:, 0]
+    np.testing.assert_allclose(np.asarray(full), np.asarray(step), atol=3e-3)
+
+
+def test_scan_vs_unroll_same_loss():
+    cfg = get_arch("gemma2-9b").reduced()
+    params = M.init(KEY, cfg)
+    x = _inputs(cfg, 2, 16)
+    labels = jax.random.randint(KEY, (2, 16), 0, cfg.vocab)
+    l1 = M.loss_fn(params, cfg, x, labels, scan_layers=True, remat=False)
+    l2 = M.loss_fn(params, cfg, x, labels, scan_layers=False, remat=False)
+    assert abs(float(l1) - float(l2)) < 1e-5
+
+
+def test_zamba2_shared_attention_is_shared():
+    """All SHARED_ATTN applications read the same parameter tensors."""
+    cfg = get_arch("zamba2-7b").reduced()
+    params = M.init(KEY, cfg)
+    assert "shared_attn" in params
+    # stage params must NOT contain per-stage attention weights
+    stage_keys = set(params["stages"][ "slot0"].keys()) if isinstance(
+        params["stages"], dict
+    ) else None
+    flat = jax.tree_util.tree_flatten_with_path(params["stages"])[0]
+    assert not any("attn" in str(p) for p, _ in flat)
+
+
+def test_moe_dispatch_group_invariance():
+    cfg = get_arch("mixtral-8x22b").reduced()
+    params = M.init(KEY, cfg)
+    x = _inputs(cfg, 2, 12)
+    h1, _, _ = M.forward(params, cfg, x, par=M.ParallelCfg(dispatch_groups=1))
+    h2, _, _ = M.forward(params, cfg, x, par=M.ParallelCfg(dispatch_groups=2))
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-5)
+
+
+def test_training_reduces_loss():
+    import tempfile
+
+    from repro.data.pipeline import TokenPipeline
+    from repro.optim.adamw import AdamW
+    from repro.runtime.train_loop import train
+
+    cfg = get_arch("qwen3-0.6b").reduced()
+    pipe = TokenPipeline(cfg, batch=4, seq_len=16)
+    with tempfile.TemporaryDirectory() as d:
+        res = train(
+            cfg, steps=25, batch=4, seq_len=16, pipeline=pipe, ckpt_dir=d,
+            ckpt_every=10, optimizer=AdamW(lr=1e-3),
+        )
+    assert res.losses[-1] < res.losses[0]
+
+
+def test_training_restart_resumes_not_restarts():
+    import tempfile
+
+    from repro.data.pipeline import TokenPipeline
+    from repro.runtime.train_loop import train
+
+    cfg = get_arch("qwen3-0.6b").reduced()
+    pipe = TokenPipeline(cfg, batch=2, seq_len=8)
+    with tempfile.TemporaryDirectory() as d:
+        res = train(
+            cfg, steps=20, batch=2, seq_len=8, pipeline=pipe, ckpt_dir=d,
+            ckpt_every=5, crash_at_step=12,
+        )
+    assert res.restarts == 1
+    assert res.final_step == 20
+    # resumed from step 10 (last ckpt), not from scratch: 12 + (20-10)
+    assert res.steps_run == 12 + 10
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_cells_assignment(arch):
+    cfg = get_arch(arch)
+    names = [s.name for s in cells(cfg)]
+    assert ("long_500k" in names) == cfg.supports_long_context
+    assert {"train_4k", "prefill_32k", "decode_32k"} <= set(names)
+
+
+def test_40_cells_total():
+    total = sum(len(cells(get_arch(a))) for a in ALL_ARCHS)
+    # 10 archs × 3 universal shapes + 3 long-context archs = 33 baseline
+    # cells; the harness's "40 cells" count includes the long_500k row for
+    # every arch — non-eligible ones are recorded as documented skips.
+    assert total == 33
+    eligible = [a for a in ALL_ARCHS if get_arch(a).supports_long_context]
+    assert sorted(eligible) == ["mixtral-8x22b", "rwkv6-1.6b", "zamba2-7b"]

@@ -1,0 +1,138 @@
+"""Multi-device correctness: these tests spawn a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the main test process
+must keep seeing 1 device, per the harness contract) and assert that the
+engine produces identical results on a real 8-shard mesh."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, env=env,
+        timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_mapreduce_8dev_matches_oracle():
+    res = _run(
+        """
+import json, numpy as np, jax, jax.numpy as jnp
+from repro.core import data_mesh, distribute, make_dist_hashmap, map_reduce
+import collections
+assert len(jax.devices()) == 8
+mesh = data_mesh()
+words = np.random.RandomState(0).randint(0, 100, 5000).astype(np.int32)
+wv = distribute(words, mesh)
+def m(i, w, emit): emit(w, 1)
+out = {}
+for engine in ("eager", "naive"):
+    hm = make_dist_hashmap(mesh, 1024, (), jnp.int32, "sum")
+    hm2, st = map_reduce(wv, m, "sum", hm, mesh=mesh, engine=engine, return_stats=True)
+    d = hm2.to_dict()
+    ref = collections.Counter(words.tolist())
+    out[engine] = {
+        "correct": all(int(d.get(k, 0)) == c for k, c in ref.items()) and len(d) == len(ref),
+        "overflow": hm2.total_overflow(),
+        "shipped": int(st.finalize().pairs_shipped),
+        "emitted": int(st.finalize().pairs_emitted),
+    }
+print(json.dumps(out))
+"""
+    )
+    assert res["eager"]["correct"] and res["naive"]["correct"]
+    assert res["eager"]["overflow"] == 0
+    # eager reduction ships (far) fewer pairs than it emits on 8 shards
+    assert res["eager"]["shipped"] < res["eager"]["emitted"]
+    assert res["eager"]["shipped"] <= res["naive"]["shipped"]
+
+
+def test_pagerank_8dev_matches_reference():
+    res = _run(
+        """
+import json, numpy as np, jax
+from repro.core import data_mesh
+from repro.core.algorithms import pagerank, pagerank_reference
+from repro.data.synthetic import rmat_edges
+mesh = data_mesh()
+edges = rmat_edges(7, 8, seed=2)
+res = pagerank(edges, 128, tol=1e-7, max_iters=80, mesh=mesh)
+ref = pagerank_reference(edges, 128, tol=1e-7, max_iters=80)
+err = float(np.abs(res.scores - ref).max() / ref.max())
+print(json.dumps({"err": err, "iters": res.iterations}))
+"""
+    )
+    assert res["err"] < 1e-4
+
+
+def test_compressed_psum_8dev():
+    res = _run(
+        """
+import json, numpy as np, jax, jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+from repro.core.containers import data_mesh
+from repro.distributed.collectives import compressed_psum
+mesh = data_mesh()
+x = jnp.asarray(np.random.RandomState(0).randn(8, 128).astype(np.float32))
+out = {}
+for wire in ("none", "bf16", "int8"):
+    f = shard_map(lambda v: compressed_psum(v[0], "data", wire=wire)[None],
+                  mesh=mesh, in_specs=P("data"), out_specs=P("data"), check_vma=False)
+    got = jax.jit(f)(x)
+    exact = np.asarray(x).sum(0)
+    out[wire] = float(np.abs(np.asarray(got)[0] - exact).max() / np.abs(exact).max())
+print(json.dumps(out))
+"""
+    )
+    assert res["none"] < 1e-6
+    assert res["bf16"] < 0.05
+    assert res["int8"] < 0.05
+
+
+def test_sharded_train_step_8dev():
+    """A reduced model trains under a (2 data, 4 model) mesh with the
+    production sharding policy — loss finite and decreasing."""
+    res = _run(
+        """
+import json, numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.configs.base import get_arch
+from repro.distributed import sharding as SH
+from repro.models import model as M
+from repro.optim.adamw import AdamW
+import dataclasses
+cfg = dataclasses.replace(get_arch("qwen3-0.6b").reduced(), d_model=64, d_ff=128)
+mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+mi = SH.make_mesh_info(mesh)
+params = M.init(jax.random.PRNGKey(0), cfg)
+pspecs = SH.param_pspecs(cfg, params, mi)
+params = jax.device_put(params, SH.named(pspecs, mi))
+opt = AdamW(lr=1e-3)
+ostate = opt.init(params)
+def step(p, o, x, y):
+    loss, g = jax.value_and_grad(lambda q: M.loss_fn(q, cfg, x, y, remat=True))(p)
+    p, o = opt.update(g, o, p)
+    return p, o, loss
+with jax.set_mesh(mesh):
+    jstep = jax.jit(step)
+    rng = np.random.RandomState(0)
+    losses = []
+    for i in range(8):
+        x = jnp.asarray(rng.randint(0, cfg.vocab, (4, 16)), jnp.int32)
+        params, ostate, loss = jstep(params, ostate, x, x)
+        losses.append(float(loss))
+print(json.dumps({"first": losses[0], "last": losses[-1]}))
+"""
+    )
+    assert res["last"] < res["first"]

@@ -1,0 +1,160 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import get_reducer
+from repro.core.containers import (
+    EMPTY_KEY,
+    hashmap_insert,
+    make_table,
+    unique_combine,
+)
+from repro.core.mapreduce import bucket_by_dest
+from repro.core.serialization import (
+    blaze_decode_pairs,
+    blaze_encode_pairs,
+    dequantize,
+    message_sizes,
+    protobuf_encode_pairs,
+    quantize,
+    quantize_with_feedback,
+    varint_decode,
+    varint_encode,
+)
+
+SMALL = settings(max_examples=40, deadline=None)
+
+
+@SMALL
+@given(st.integers(min_value=-(2**63), max_value=2**63 - 1))
+def test_varint_roundtrip(v):
+    buf = varint_encode(v)
+    out, pos = varint_decode(buf, 0)
+    assert out == v and pos == len(buf)
+
+
+@SMALL
+@given(
+    st.lists(st.integers(min_value=0, max_value=2**31 - 1), min_size=1, max_size=64)
+)
+def test_blaze_pairs_roundtrip_and_smaller_than_protobuf(keys):
+    k = np.asarray(keys, np.int64)
+    v = np.ones_like(k)
+    buf = blaze_encode_pairs(k, v)
+    k2, v2 = blaze_decode_pairs(buf, len(k))
+    assert (k2 == k).all() and (v2 == v).all()
+    sizes = message_sizes(k, v)
+    # tag-free format always saves exactly 2 bytes/pair vs protobuf
+    assert sizes["protobuf_bytes"] - sizes["blaze_bytes"] == 2 * len(k)
+
+
+@SMALL
+@given(
+    st.lists(
+        st.floats(min_value=-100, max_value=100, allow_nan=False),
+        min_size=1, max_size=128,
+    ),
+    st.sampled_from(["bf16", "int8"]),
+)
+def test_quantize_bounded_error(vals, mode):
+    x = jnp.asarray(np.asarray(vals, np.float32))
+    q = quantize(x, mode, block=32)
+    back = dequantize(q, x)
+    scale = float(jnp.max(jnp.abs(x))) or 1.0
+    tol = 0.01 if mode == "bf16" else 1.0 / 127.0
+    assert float(jnp.max(jnp.abs(back - x))) <= tol * scale + 1e-6
+
+
+@SMALL
+@given(st.integers(min_value=1, max_value=200))
+def test_error_feedback_unbiased_over_time(n):
+    """Sum of dequantised values + final residual == sum of true values."""
+    rng = np.random.RandomState(n)
+    xs = rng.randn(8, 16).astype(np.float32)
+    resid = jnp.zeros((16,), jnp.float32)
+    total_sent = jnp.zeros((16,), jnp.float32)
+    for i in range(8):
+        q, resid = quantize_with_feedback(jnp.asarray(xs[i]), resid, "int8", block=16)
+        total_sent = total_sent + dequantize(q, total_sent)
+    np.testing.assert_allclose(
+        np.asarray(total_sent + resid), xs.sum(0), rtol=1e-4, atol=1e-4
+    )
+
+
+@SMALL
+@given(
+    st.lists(st.integers(min_value=0, max_value=30), min_size=1, max_size=100),
+    st.sampled_from(["sum", "min", "max"]),
+)
+def test_unique_combine_equals_dict_semantics(keys, red_name):
+    red = get_reducer(red_name)
+    rng = np.random.RandomState(42)
+    k = jnp.asarray(np.asarray(keys, np.int32))
+    v = jnp.asarray(rng.rand(len(keys)).astype(np.float32))
+    mask = jnp.ones(len(keys), bool)
+    ok, ov, valid = unique_combine(k, v, mask, red)
+    got = {int(a): float(b) for a, b, m in zip(ok, ov, valid) if m}
+    import collections
+
+    want: dict = {}
+    fn = {"sum": lambda a, b: a + b, "min": min, "max": max}[red_name]
+    for kk, vv in zip(keys, np.asarray(v)):
+        want[kk] = fn(want[kk], float(vv)) if kk in want else float(vv)
+    assert set(got) == set(want)
+    for kk in want:
+        assert abs(got[kk] - want[kk]) < 1e-4
+
+
+@SMALL
+@given(
+    st.lists(st.integers(min_value=0, max_value=1000), min_size=1, max_size=80,
+             unique=True),
+    st.integers(min_value=4, max_value=8),
+)
+def test_hashmap_insert_equals_dict(keys, logcap):
+    red = get_reducer("sum")
+    cap = 2**logcap
+    t = make_table(cap, (), jnp.float32, red)
+    k = jnp.asarray(np.asarray(keys, np.int32))
+    v = jnp.ones((len(keys),), jnp.float32)
+    t = hashmap_insert(t, k, v, jnp.ones(len(keys), bool), red, max_probes=cap)
+    live = {int(a): float(b) for a, b in zip(t.keys, t.vals) if a != EMPTY_KEY}
+    if len(keys) <= cap:
+        assert int(t.overflow) == 0
+        assert live == {kk: 1.0 for kk in keys}
+
+
+@SMALL
+@given(
+    st.integers(min_value=1, max_value=64),
+    st.integers(min_value=1, max_value=8),
+)
+def test_bucket_by_dest_conserves_pairs(n, n_dest):
+    rng = np.random.RandomState(n * 7 + n_dest)
+    keys = jnp.asarray(rng.randint(0, 1000, n).astype(np.int32))
+    vals = jnp.asarray(rng.rand(n).astype(np.float32))
+    valid = jnp.asarray(rng.rand(n) > 0.3)
+    cap = n  # enough for everything
+    bk, bv, dropped = bucket_by_dest(keys, vals, valid, n_dest, cap, 0.0)
+    assert int(dropped) == 0
+    live = np.asarray(bk).reshape(-1)
+    assert (live != EMPTY_KEY).sum() == int(np.asarray(valid).sum())
+    # value conservation
+    total_in = float(np.asarray(vals)[np.asarray(valid)].sum())
+    total_out = float(np.asarray(bv).reshape(-1)[live != EMPTY_KEY].sum())
+    assert abs(total_in - total_out) < 1e-4
+
+
+@SMALL
+@given(st.integers(min_value=2, max_value=100), st.integers(min_value=1, max_value=20))
+def test_topk_matches_sort(n, k):
+    from repro.core import distribute, topk
+
+    rng = np.random.RandomState(n * 31 + k)
+    x = rng.randn(n).astype(np.float32)
+    v = distribute(x)
+    got = np.sort(topk(v, min(k, n)))[::-1]
+    want = np.sort(x)[::-1][: min(k, n)]
+    np.testing.assert_allclose(got, want, atol=1e-6)

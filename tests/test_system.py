@@ -1,0 +1,102 @@
+"""End-to-end behaviour tests: the paper's five applications + π, each
+validated against an independent numpy oracle, on both engines."""
+import collections
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import data_mesh, distribute, make_dist_hashmap, map_reduce
+from repro.core.algorithms import (
+    counts_dict,
+    estimate_pi,
+    estimate_pi_handrolled,
+    gmm_em,
+    gmm_em_reference,
+    kmeans,
+    kmeans_reference,
+    knn,
+    knn_full_sort,
+    pagerank,
+    pagerank_reference,
+    wordcount,
+)
+from repro.data.synthetic import cluster_points, rmat_edges, zipf_corpus
+
+
+def test_pi_close():
+    pi = estimate_pi(200_000)
+    assert abs(pi - np.pi) < 0.02
+
+
+def test_pi_engines_agree():
+    assert estimate_pi(50_000, engine="eager") == estimate_pi(50_000, engine="naive")
+
+
+def test_pi_handrolled_matches_mapreduce():
+    assert abs(estimate_pi(50_000) - estimate_pi_handrolled(50_000)) < 1e-9
+
+
+@pytest.mark.parametrize("engine", ["eager", "naive"])
+def test_wordcount_exact(engine):
+    lines, true_counts = zipf_corpus(400, 12, 800, seed=3)
+    hm = wordcount(lines, engine=engine)
+    got = counts_dict(hm)
+    want = {i: int(c) for i, c in enumerate(true_counts) if c}
+    assert got == want
+    assert hm.total_overflow() == 0
+
+
+@pytest.mark.parametrize("engine", ["eager", "naive"])
+def test_pagerank_matches_reference(engine):
+    edges = rmat_edges(7, 8, seed=1)
+    n = 128
+    res = pagerank(edges, n, tol=1e-7, max_iters=100, engine=engine)
+    ref = pagerank_reference(edges, n, tol=1e-7, max_iters=100)
+    assert res.converged
+    assert np.abs(res.scores - ref).max() / ref.max() < 1e-4
+
+
+def test_pagerank_eager_ships_fewer_bytes():
+    edges = rmat_edges(7, 8, seed=1)
+    r_eager = pagerank(edges, 128, max_iters=3, tol=0)
+    r_naive = pagerank(edges, 128, max_iters=3, tol=0, engine="naive")
+    assert r_eager.shuffle_bytes_per_iter < r_naive.shuffle_bytes_per_iter
+
+
+def test_kmeans_matches_reference():
+    pts, _ = cluster_points(1500, 3, 4, seed=5)
+    init = pts[:4].copy()
+    res = kmeans(pts, 4, init_centers=init, max_iters=25)
+    ref_centers, ref_iters = kmeans_reference(pts, init, max_iters=25)
+    assert res.iterations == ref_iters
+    assert np.abs(np.sort(res.centers, 0) - np.sort(ref_centers, 0)).max() < 1e-3
+
+
+def test_gmm_matches_reference():
+    pts, _ = cluster_points(800, 2, 3, seed=7)
+    init = pts[:3].copy()
+    res = gmm_em(pts, 3, init_mu=init, max_iters=8)
+    a, mu, sig, ll, it = gmm_em_reference(pts, 3, init, max_iters=8)
+    assert abs(res.log_likelihood - ll) / abs(ll) < 1e-3
+    assert np.abs(np.sort(res.alpha) - np.sort(a)).max() < 1e-3
+
+
+def test_knn_matches_full_sort():
+    pts, _ = cluster_points(4000, 4, 3, seed=9)
+    q = np.zeros(4, np.float32)
+    r1 = knn(pts, q, 64)
+    r2 = knn_full_sort(pts, q, 64)
+    np.testing.assert_allclose(np.sort(r1.distances), np.sort(r2.distances), atol=1e-5)
+
+
+def test_target_is_merged_not_cleared():
+    """Paper contract: map_reduce merges into the target."""
+    v = distribute(np.arange(10, dtype=np.float32))
+
+    def m(i, x, emit):
+        emit(0, x)
+
+    t = jnp.asarray([100.0])
+    out = map_reduce(v, m, "sum", t)
+    assert float(out[0]) == 100.0 + sum(range(10))
