@@ -70,6 +70,9 @@ def _first_shape(text: str):
 def parse_module(txt: str) -> dict:
     """Returns {"flops": f, "dot_bytes": b, "collectives": {kind: bytes},
     "n_collectives": int} — per-device, loop-weighted."""
+    # Some XLA versions print layout annotations after shapes
+    # (``f32[32,32]{1,0}``); the braces confuse operand splitting, drop them.
+    txt = re.sub(r"\]\{[\d,]*\}", "]", txt)
     # ---- 1. split into computations ---------------------------------------
     comps: dict[str, list[str]] = {}
     cur = None
@@ -177,10 +180,17 @@ def parse_module(txt: str) -> dict:
                 k = 1
                 mc = _CONTRACT_RE.search(body)
                 ops = _OPERANDS_RE.search(body[body.index("dot(") :])
-                lhs_name = None
+                # Operands may be typed (``dot(f32[32,32] %x, ...)``) — the
+                # comma inside the shape breaks naive splitting, so strip the
+                # shape tokens first, then split; names may or may not carry
+                # a % sigil depending on the XLA print format.
+                onames = []
                 if ops:
-                    lhs_name = ops.group(1).split(",")[0].strip().lstrip("%")
-                    lhs_name = lhs_name.split(" ")[-1].lstrip("%")
+                    bare = re.sub(r"\w+\[[\d,]*\]", "", ops.group(1))
+                    onames = [
+                        t.strip().lstrip("%") for t in bare.split(",") if t.strip()
+                    ]
+                lhs_name = onames[0] if onames else None
                 if mc and lhs_name and lhs_name in tab:
                     ldims = tab[lhs_name][1]
                     for ci in mc.group(1).split(","):
@@ -189,11 +199,9 @@ def parse_module(txt: str) -> dict:
                 flops += m * 2.0 * out_elems * k
                 # traffic: result + operands
                 tb = _shape_bytes(dt, dims)
-                if ops:
-                    for oname in ops.group(1).split(","):
-                        oname = oname.strip().split(" ")[-1].lstrip("%")
-                        if oname in tab:
-                            tb += _shape_bytes(*tab[oname])
+                for oname in onames:
+                    if oname in tab:
+                        tb += _shape_bytes(*tab[oname])
                 dot_bytes += m * tb
             else:
                 mcoll = _COLL_RE.search(body)

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import data_mesh, distribute, make_dist_hashmap, map_reduce
+from repro.core import BlazeSession, data_mesh, distribute, make_dist_hashmap, map_reduce
 from repro.core.algorithms import (
     estimate_pi,
     estimate_pi_handrolled,
@@ -34,6 +34,11 @@ from repro.data.synthetic import cluster_points, rmat_edges, zipf_corpus
 
 BIG = os.environ.get("BENCH_SCALE") == "big"
 S = 10 if BIG else 1
+
+# One session for all iterative benchmarks: executables compile on the warmup
+# run and every timed run is pure dispatch — the resident-hot-loop setting the
+# paper's Spark comparison is about.
+SESSION = BlazeSession()
 
 
 def _timeit(fn, repeats=3):
@@ -90,9 +95,11 @@ def fig5_pagerank():
     n = 1 << scale
     rows = []
     for engine in ("eager", "naive"):
-        res = pagerank(edges, n, tol=1e-5, max_iters=30, engine=engine)
+        res = pagerank(edges, n, tol=1e-5, max_iters=30, engine=engine,
+                       session=SESSION)
         t = _timeit(
-            lambda e=engine: pagerank(edges, n, tol=0, max_iters=3, engine=e)
+            lambda e=engine: pagerank(edges, n, tol=0, max_iters=3, engine=e,
+                                      session=SESSION)
         ) / 3
         rows.append(
             (
@@ -111,7 +118,7 @@ def fig6_kmeans():
     for engine in ("eager", "naive"):
         t = _timeit(
             lambda e=engine: kmeans(pts, 5, init_centers=init, max_iters=3,
-                                    tol=0, engine=e)
+                                    tol=0, engine=e, session=SESSION)
         ) / 3
         rows.append(
             (f"fig6_kmeans_{engine}", t * 1e6, f"{len(pts)/t/1e6:.1f}Mpoints/s/iter")
@@ -132,7 +139,8 @@ def fig6_kmeans():
 def fig7_gmm():
     pts, _ = cluster_points(20_000 * S, 3, 5, seed=1)
     init = pts[:5].copy()
-    t = _timeit(lambda: gmm_em(pts, 5, init_mu=init, max_iters=3, tol=0)) / 3
+    t = _timeit(lambda: gmm_em(pts, 5, init_mu=init, max_iters=3, tol=0,
+                               session=SESSION)) / 3
     return [("fig7_gmm_eager", t * 1e6, f"{len(pts)/t/1e6:.2f}Mpoints/s/iter")]
 
 
@@ -195,6 +203,53 @@ def fig10_cognitive():
     return rows
 
 
+def session_reuse():
+    """Compiled-executable reuse across iterations (the session tentpole):
+    first iteration pays compile, steady state is pure dispatch."""
+    edges = rmat_edges(10, 16, seed=0)
+    n = 1 << 10
+    rows = []
+
+    sess = BlazeSession()
+    t0 = time.perf_counter()
+    pagerank(edges, n, tol=0, max_iters=1, session=sess)
+    t_first = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    pagerank(edges, n, tol=0, max_iters=10, session=sess)
+    t_steady = (time.perf_counter() - t0) / 10
+    info = sess.cache_info()
+    rows.append(
+        (
+            "session_pagerank_first_iter", t_first * 1e6,
+            f"compiles={info['compiles']};entries={info['entries']}",
+        )
+    )
+    rows.append(
+        (
+            "session_pagerank_steady_iter", t_steady * 1e6,
+            f"hit_rate={info['hit_rate']:.2f};speedup={t_first/t_steady:.1f}x",
+        )
+    )
+
+    pts, _ = cluster_points(50_000, 3, 5, seed=0)
+    init = pts[:5].copy()
+    sess2 = BlazeSession()
+    t0 = time.perf_counter()
+    kmeans(pts, 5, init_centers=init, tol=0, max_iters=1, session=sess2)
+    t_first = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    kmeans(pts, 5, init_centers=init, tol=0, max_iters=10, session=sess2)
+    t_steady = (time.perf_counter() - t0) / 10
+    rows.append(
+        (
+            "session_kmeans_steady_iter", t_steady * 1e6,
+            f"compiles={sess2.stats.compiles};"
+            f"speedup={t_first/t_steady:.1f}x",
+        )
+    )
+    return rows
+
+
 def sec232_serialization():
     """§2.3.2 claim: small-int pairs are 2 B (tag-free) vs 4 B (Protobuf)."""
     rng = np.random.RandomState(0)
@@ -220,5 +275,6 @@ ALL = [
     fig8_knn,
     fig9_memory,
     fig10_cognitive,
+    session_reuse,
     sec232_serialization,
 ]

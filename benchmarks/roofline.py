@@ -47,7 +47,9 @@ def measure_cell(arch: str, shape_name: str, variant: str = "baseline") -> dict:
     t0 = time.time()
     policy = "dots" if "dots" in variant else "full"
     fn, args, _ = build_cell(cfg0, shape, mesh, remat_policy=policy)
-    with jax.set_mesh(mesh):
+    from repro.compat import set_mesh
+
+    with set_mesh(mesh):
         compiled = fn.lower(*args).compile()
     parsed = parse_module(compiled.as_text())
     ma = compiled.memory_analysis()

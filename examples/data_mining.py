@@ -4,32 +4,42 @@ Run:  PYTHONPATH=src python examples/data_mining.py
 """
 import numpy as np
 
+from repro.core import BlazeSession
 from repro.core.algorithms import gmm_em, kmeans, knn, pagerank
 from repro.data.synthetic import cluster_points, rmat_edges
 
+# One session for the whole job: it owns the mesh and the compiled-executable
+# cache, so every iterative algorithm below compiles each of its MapReduce
+# configurations exactly once, no matter how many iterations run.
+sess = BlazeSession()
+
 # PageRank on an R-MAT (graph500-style) power-law graph -----------------------
 edges = rmat_edges(scale=10, edges_per_node=16, seed=0)  # 1024 nodes, 16k links
-res = pagerank(edges, 1 << 10, tol=1e-5)
+res = pagerank(edges, 1 << 10, tol=1e-5, session=sess)
 top = np.argsort(-res.scores)[:5]
-print(f"PageRank: {res.iterations} iters, converged={res.converged}")
+print(f"PageRank: {res.iterations} iters, converged={res.converged}, "
+      f"compiles={res.compiles}")
 print("  top pages:", top.tolist(), "scores:", res.scores[top].round(5).tolist())
 print(f"  shuffle bytes/iter (eager): {res.shuffle_bytes_per_iter}")
 
 # k-means ---------------------------------------------------------------------
 pts, true_centers = cluster_points(50_000, 3, 5, seed=0)
-km = kmeans(pts, 5, max_iters=30)
-print(f"k-means: {km.iterations} iters, inertia={km.inertia:.1f}")
+km = kmeans(pts, 5, max_iters=30, session=sess)
+print(f"k-means: {km.iterations} iters, inertia={km.inertia:.1f}, "
+      f"compiles={km.compiles}")
 print("  centers:\n", km.centers.round(2))
 
 # Expectation-Maximization (GMM) ----------------------------------------------
 pts2, _ = cluster_points(5_000, 2, 3, seed=1)
-gm = gmm_em(pts2, 3, max_iters=20)
+gm = gmm_em(pts2, 3, max_iters=20, session=sess)
 print(f"GMM: {gm.iterations} iters, loglik={gm.log_likelihood:.1f}, "
-      f"alpha={gm.alpha.round(3).tolist()}")
+      f"alpha={gm.alpha.round(3).tolist()}, compiles={gm.compiles}")
 
 # 100 nearest neighbours --------------------------------------------------------
 pts3, _ = cluster_points(200_000, 4, 3, seed=2)
-nn = knn(pts3, np.zeros(4, np.float32), k=100)
+nn = knn(pts3, np.zeros(4, np.float32), k=100, session=sess)
 print(f"100-NN: farthest of the 100 at distance {nn.distances.max():.3f}; "
       f"{nn.wire_candidates} candidate rows crossed the wire "
       f"(vs {len(pts3)} for a full shuffle)")
+
+print("session totals:", sess.cache_info())

@@ -6,6 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
+    BlazeSession,
     DistRange,
     data_mesh,
     distribute,
@@ -57,3 +58,24 @@ print("Σ v² by v%4:", [int(x) for x in sums])
 pts = distribute(np.random.RandomState(0).randn(10_000, 3).astype(np.float32))
 closest = topk(pts, 5, score_fn=lambda x: -jnp.sum(x * x))  # nearest to 0
 print("5 points nearest the origin:\n", closest)
+
+# ---------------------------------------------------------------------------
+# 5. Iterative MapReduce with a BlazeSession — one compile, N dispatches
+# ---------------------------------------------------------------------------
+# Thread iteration-varying state through ``env`` (the mapper object stays
+# static) and the session reuses one compiled executable for every iteration.
+sess = BlazeSession()
+
+
+def scaled_sum_mapper(v, emit, env):
+    emit(0, v * env)  # env = this iteration's scale factor
+
+
+scale = jnp.asarray(1.0)
+for _ in range(10):
+    total = sess.map_reduce(
+        DistRange(0, 1000, 1), scaled_sum_mapper, "sum",
+        jnp.zeros((1,), jnp.float32), env=scale,
+    )
+    scale = scale * 0.5
+print("session after 10 iterations:", sess.cache_info())  # compiles=1

@@ -12,24 +12,36 @@ from repro.core.containers import (
     topk,
 )
 from repro.core.mapreduce import MapReduceStats, map_reduce
+from repro.core.session import (
+    BlazeSession,
+    SessionStats,
+    get_default_session,
+    reset_default_session,
+    set_default_session,
+)
 from repro.data.text import load_file
 from repro.core.reducers import Reducer, custom_reducer, get_reducer
 
 __all__ = [
     "EMPTY_KEY",
+    "BlazeSession",
     "DistHashMap",
     "DistRange",
     "DistVector",
     "MapReduceStats",
     "Reducer",
+    "SessionStats",
     "collect",
     "custom_reducer",
     "data_mesh",
     "distribute",
     "foreach",
+    "get_default_session",
     "get_reducer",
     "load_file",
     "make_dist_hashmap",
     "map_reduce",
+    "reset_default_session",
+    "set_default_session",
     "topk",
 ]

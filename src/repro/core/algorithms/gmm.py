@@ -23,7 +23,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.core import DistVector, distribute, foreach, map_reduce
+from repro.core import DistVector, distribute
+from repro.core.session import BlazeSession, resolve
 
 
 def _gauss_env(alpha, mu, sigma):
@@ -96,6 +97,7 @@ class GMMResult:
     iterations: int
     converged: bool
     shuffle_bytes_per_iter: int
+    compiles: int = 0  # executables compiled across ALL iterations
 
 
 def gmm_em(
@@ -108,7 +110,9 @@ def gmm_em(
     mesh: Mesh | None = None,
     engine: str = "eager",
     seed: int = 0,
+    session: BlazeSession | None = None,
 ) -> GMMResult:
+    sess, mesh = resolve(session, mesh)
     n, d = points.shape
     rng = np.random.RandomState(seed)
     if init_mu is None:
@@ -118,31 +122,30 @@ def gmm_em(
     sigma = np.tile(np.eye(d, dtype=np.float32), (k, 1, 1))
 
     rows0 = np.concatenate([points, np.zeros((n, k), np.float32)], axis=1)
-    rows_v = distribute(rows0.astype(np.float32), mesh) if mesh else distribute(
-        rows0.astype(np.float32)
-    )
+    rows_v = distribute(rows0.astype(np.float32), mesh)
+    compiles0 = sess.stats.compiles
 
     prev_ll, it, converged, stats = -np.inf, 0, False, None
     for it in range(1, max_iters + 1):
         env = _gauss_env(alpha, mu, sigma)
-        rows_p = foreach(rows_v, density_fn, env=env)  # op 1
+        rows_p = sess.foreach(rows_v, density_fn, env=env)  # op 1
         # op 6 (log-likelihood of the CURRENT model) reads the p-block:
-        ll = map_reduce(
+        ll = sess.map_reduce(
             rows_p, loglik_mapper, "sum", jnp.zeros((1,), jnp.float32),
             mesh=mesh, engine=engine, env=env[0],
         )[0]
-        rows_w = foreach(rows_p, membership_fn, env=env)  # op 2
-        nk = map_reduce(  # op 3
+        rows_w = sess.foreach(rows_p, membership_fn, env=env)  # op 2
+        nk = sess.map_reduce(  # op 3
             rows_w, nk_mapper, "sum", jnp.zeros((k,), jnp.float32),
             mesh=mesh, engine=engine, env=env[1],
         )
-        musum, stats = map_reduce(  # op 4
+        musum, stats = sess.map_reduce(  # op 4
             rows_w, musum_mapper, "sum", jnp.zeros((k, d), jnp.float32),
             mesh=mesh, engine=engine, env=env[1], return_stats=True,
         )
         nk_np = np.maximum(np.asarray(nk), 1e-8)
         new_mu = np.asarray(musum) / nk_np[:, None]
-        sigsum = map_reduce(  # op 5
+        sigsum = sess.map_reduce(  # op 5
             rows_w, sigmasum_mapper, "sum", jnp.zeros((k, d, d), jnp.float32),
             mesh=mesh, engine=engine, env=jnp.asarray(new_mu), return_stats=False,
         )
@@ -164,6 +167,7 @@ def gmm_em(
         alpha=alpha, mu=mu, sigma=sigma, log_likelihood=float(ll),
         iterations=it, converged=converged,
         shuffle_bytes_per_iter=fs.shuffle_payload_bytes if fs else 0,
+        compiles=sess.stats.compiles - compiles0,
     )
 
 

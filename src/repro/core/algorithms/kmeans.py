@@ -13,13 +13,19 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.core import DistVector, distribute, map_reduce
+from repro.core import DistVector, distribute
+from repro.core.session import BlazeSession, resolve
 
 
 def assign_mapper(i, x, emit, centers):
     d2 = jnp.sum((centers - x[None, :]) ** 2, axis=1)
     c = jnp.argmin(d2)
     emit(c, jnp.concatenate([x, jnp.ones((1,), x.dtype)]))
+
+
+def inertia_mapper(i, x, emit, centers):
+    d2 = jnp.sum((centers - x[None, :]) ** 2, axis=1)
+    emit(0, jnp.min(d2))
 
 
 @dataclasses.dataclass
@@ -29,6 +35,7 @@ class KMeansResult:
     converged: bool
     inertia: float
     shuffle_bytes_per_iter: int
+    compiles: int = 0  # executables compiled across ALL iterations
 
 
 def kmeans(
@@ -42,14 +49,14 @@ def kmeans(
     engine: str = "eager",
     wire: str = "none",
     seed: int = 0,
+    session: BlazeSession | None = None,
 ) -> KMeansResult:
+    sess, mesh = resolve(session, mesh)
     if isinstance(points, DistVector):
         pts_v = points
         dim = points.data.shape[1]
     else:
-        pts_v = distribute(points.astype(np.float32), mesh) if mesh else distribute(
-            points.astype(np.float32)
-        )
+        pts_v = distribute(points.astype(np.float32), mesh)
         dim = points.shape[1]
     if init_centers is None:
         rng = np.random.RandomState(seed)
@@ -57,10 +64,11 @@ def kmeans(
             rng.choice(min(len(pts_v), 4096), k, replace=False)
         ]
     centers = jnp.asarray(init_centers, jnp.float32)
+    compiles0 = sess.stats.compiles
 
     it, converged, stats = 0, False, None
     for it in range(1, max_iters + 1):
-        sums, stats = map_reduce(
+        sums, stats = sess.map_reduce(
             pts_v, assign_mapper, "sum", jnp.zeros((k, dim + 1), jnp.float32),
             mesh=mesh, engine=engine, wire=wire, env=centers, return_stats=True,
         )
@@ -73,11 +81,7 @@ def kmeans(
             break
 
     # Final inertia via one more MapReduce (dense [1] target).
-    def inertia_mapper(i, x, emit, c):
-        d2 = jnp.sum((c - x[None, :]) ** 2, axis=1)
-        emit(0, jnp.min(d2))
-
-    inertia = map_reduce(
+    inertia = sess.map_reduce(
         pts_v, inertia_mapper, "sum", jnp.zeros((1,), jnp.float32),
         mesh=mesh, engine=engine, env=centers,
     )[0]
@@ -88,6 +92,7 @@ def kmeans(
         converged=converged,
         inertia=float(inertia),
         shuffle_bytes_per_iter=fs.shuffle_payload_bytes if fs else 0,
+        compiles=sess.stats.compiles - compiles0,
     )
 
 

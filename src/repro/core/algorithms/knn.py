@@ -15,6 +15,7 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.core import DistVector, distribute, topk
+from repro.core.session import BlazeSession
 
 
 @dataclasses.dataclass
@@ -30,7 +31,10 @@ def knn(
     k: int = 100,
     *,
     mesh: Mesh | None = None,
+    session: BlazeSession | None = None,
 ) -> KNNResult:
+    if mesh is None and session is not None:
+        mesh = session.mesh
     if isinstance(points, DistVector):
         pts_v = points
     else:

@@ -20,7 +20,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.core import DistRange, DistVector, distribute, map_reduce
+from repro.core import DistRange, DistVector, distribute
+from repro.core.session import BlazeSession, resolve
 
 
 def sink_mapper(p, emit, env):
@@ -46,6 +47,7 @@ class PageRankResult:
     converged: bool
     shuffle_bytes_per_iter: int
     pairs_shipped_per_iter: int
+    compiles: int = 0  # executables compiled across ALL iterations
 
 
 def pagerank(
@@ -58,31 +60,32 @@ def pagerank(
     mesh: Mesh | None = None,
     engine: str = "eager",
     wire: str = "none",
+    session: BlazeSession | None = None,
 ) -> PageRankResult:
-    edges_v = distribute(edges.astype(np.int32), mesh) if mesh else distribute(
-        edges.astype(np.int32)
-    )
+    sess, mesh = resolve(session, mesh)
+    edges_v = distribute(edges.astype(np.int32), mesh)
     deg = jnp.asarray(
         np.bincount(edges[:, 0], minlength=n_pages).astype(np.int32)
     )
     pages = DistRange(0, n_pages, 1)
     scores = jnp.full((n_pages,), 1.0 / n_pages, jnp.float32)
     d = damping
+    compiles0 = sess.stats.compiles
 
     it, converged = 0, False
     stats2 = None
     for it in range(1, max_iters + 1):
-        sink_total = map_reduce(
+        sink_total = sess.map_reduce(
             pages, sink_mapper, "sum", jnp.zeros((1,), jnp.float32),
             mesh=mesh, engine=engine, env=(scores, deg),
         )[0]
-        incoming, stats2 = map_reduce(
+        incoming, stats2 = sess.map_reduce(
             edges_v, contrib_mapper, "sum", jnp.zeros((n_pages,), jnp.float32),
             mesh=mesh, engine=engine, wire=wire, env=(scores, deg),
             return_stats=True,
         )
         new_scores = (1.0 - d) / n_pages + d * (incoming + sink_total / n_pages)
-        delta = map_reduce(
+        delta = sess.map_reduce(
             pages, delta_mapper, "max", jnp.zeros((1,), jnp.float32),
             mesh=mesh, engine=engine, env=(scores, new_scores),
         )[0]
@@ -98,6 +101,7 @@ def pagerank(
         converged=converged,
         shuffle_bytes_per_iter=fs.shuffle_payload_bytes if fs else 0,
         pairs_shipped_per_iter=fs.pairs_shipped if fs else 0,
+        compiles=sess.stats.compiles - compiles0,
     )
 
 

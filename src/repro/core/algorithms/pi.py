@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.core import DistRange, map_reduce
 from repro.core.containers import hash32
+from repro.core.session import BlazeSession
 
 
 def _uniform01(x: jnp.ndarray, salt: int) -> jnp.ndarray:
@@ -38,6 +39,7 @@ def estimate_pi(
     mesh=None,
     engine: str = "eager",
     return_stats: bool = False,
+    session: BlazeSession | None = None,
 ):
     target = jnp.zeros((1,), jnp.int32)
     out = map_reduce(
@@ -48,6 +50,7 @@ def estimate_pi(
         mesh=mesh,
         engine=engine,
         return_stats=return_stats,
+        session=session,
     )
     if return_stats:
         counts, stats = out

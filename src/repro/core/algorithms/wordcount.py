@@ -18,6 +18,7 @@ from repro.core import (
     make_dist_hashmap,
     map_reduce,
 )
+from repro.core.session import BlazeSession, resolve
 
 
 def wordcount_mapper(i, tokens, emit):
@@ -31,17 +32,16 @@ def wordcount(
     engine: str = "eager",
     capacity_per_shard: int | None = None,
     return_stats: bool = False,
+    session: BlazeSession | None = None,
 ):
     """Count token occurrences; returns a DistHashMap (and optional stats)."""
-    n_tokens_bound = int(lines.shape[0]) * int(lines.shape[1])
+    sess, mesh = resolve(session, mesh)
     vocab_bound = int(lines.max()) + 1 if lines.size else 1
     if capacity_per_shard is None:
         capacity_per_shard = max(64, 4 * vocab_bound)
-    lines_v = distribute(lines, mesh) if mesh else distribute(lines)
-    hm = make_dist_hashmap(
-        mesh or _default_mesh(), capacity_per_shard, (), jnp.int32, "sum"
-    )
-    return map_reduce(
+    lines_v = distribute(lines, mesh)
+    hm = make_dist_hashmap(mesh, capacity_per_shard, (), jnp.int32, "sum")
+    return sess.map_reduce(
         lines_v,
         wordcount_mapper,
         "sum",
@@ -50,12 +50,6 @@ def wordcount(
         engine=engine,
         return_stats=return_stats,
     )
-
-
-def _default_mesh():
-    from repro.core.containers import data_mesh
-
-    return data_mesh()
 
 
 def counts_dict(hm: DistHashMap) -> dict[int, int]:

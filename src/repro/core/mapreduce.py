@@ -18,7 +18,10 @@ functional API:
 * **env** — optional pytree of iteration-varying state (PageRank scores,
   k-means centroids, …) broadcast to every shard.  Keeping the mapper object
   static and threading state through ``env`` lets the engine reuse one
-  compiled executable across iterations.
+  compiled executable across iterations — executables are memoized per
+  ``BlazeSession`` (see ``repro.core.session``), keyed on the abstract
+  signature of everything that shapes the plan; the free ``map_reduce``
+  routes through a process-wide default session.
 
 Engines:
 
@@ -43,8 +46,9 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map
 
 from repro.core import containers as C
 from repro.core.reducers import Reducer, get_reducer
@@ -67,6 +71,8 @@ class MapReduceStats:
     pairs_shipped: Any  # pairs that went on the wire post eager-combine
     shuffle_payload_bytes: Any  # bytes the shuffle moves (global, one call)
     overflow: Any = None  # hash-table / bucket drops
+    compiles: int = 0  # 1 iff this call lowered+compiled a new executable
+    cache_hits: int = 0  # 1 iff this call reused a session-cached executable
 
     def finalize(self) -> "MapReduceStats":
         def _get(x):
@@ -81,6 +87,8 @@ class MapReduceStats:
             pairs_shipped=_get(self.pairs_shipped),
             shuffle_payload_bytes=_get(self.shuffle_payload_bytes),
             overflow=_get(self.overflow),
+            compiles=self.compiles,
+            cache_hits=self.cache_hits,
         )
 
 
@@ -219,8 +227,6 @@ def bucket_by_dest(
 # The engine
 # ---------------------------------------------------------------------------
 
-_EXEC_CACHE: dict = {}
-
 
 def _source_kind(source) -> str:
     if isinstance(source, C.DistRange):
@@ -253,23 +259,22 @@ def map_reduce(
     env: Any = None,
     shuffle_slack: float = 2.0,
     return_stats: bool = False,
+    session=None,
 ):
-    red = get_reducer(reducer)
-    mesh = mesh or C.data_mesh()
-    n_shards = mesh.shape[C.DATA_AXIS]
-    kind = _source_kind(source)
+    """The paper's four-arg functional API, as a thin session wrapper.
 
-    if isinstance(target, C.DistHashMap):
-        out, stats = _map_reduce_hash(
-            kind, source, mapper, red, target, mesh, n_shards, engine,
-            shuffle_slack, env,
-        )
-    else:
-        out, stats = _map_reduce_dense(
-            kind, source, mapper, red, jnp.asarray(target), mesh, n_shards,
-            engine, wire, env, return_stats,
-        )
-    return (out, stats) if return_stats else out
+    Routes through ``session`` (or the process-wide default ``BlazeSession``),
+    which owns the mesh and the compiled-executable cache — N iterative calls
+    with the same (source spec, mapper, reducer, target spec, engine, wire)
+    compile exactly once.  See ``repro.core.session``.
+    """
+    from repro.core.session import get_default_session
+
+    sess = session if session is not None else get_default_session()
+    return sess.map_reduce(
+        source, mapper, reducer, target, mesh=mesh, engine=engine, wire=wire,
+        env=env, shuffle_slack=shuffle_slack, return_stats=return_stats,
+    )
 
 
 def _source_operands(kind, source):
@@ -292,11 +297,12 @@ def _local_view(kind, source, operands):
 
 def _map_reduce_dense(
     kind, source, mapper, red, target, mesh, n_shards, engine, wire, env,
-    with_stats=True,
+    with_stats=True, cache=None,
 ):
     """Dense [K, ...] target — the paper's small fixed key range fast path."""
     K = target.shape[0]
     axis = C.DATA_AXIS
+    cache = cache if cache is not None else {}
 
     cache_key = (
         "dense", mapper, red.name, red, engine, wire, mesh, kind, with_stats,
@@ -306,7 +312,8 @@ def _map_reduce_dense(
         _abstract(target), _abstract(env),
     )
 
-    if cache_key not in _EXEC_CACHE:
+    compiled_now = cache_key not in cache
+    if compiled_now:
 
         def shard_fn(env_, *operands):
             shard_idx = jax.lax.axis_index(axis)
@@ -379,10 +386,10 @@ def _map_reduce_dense(
             total, live = fn(env_, *operands)
             return red.combine(target_, total.astype(target_.dtype)), live
 
-        _EXEC_CACHE[cache_key] = jax.jit(run)
+        cache[cache_key] = jax.jit(run)
 
     operands, _ = _source_operands(kind, source)
-    merged, live = _EXEC_CACHE[cache_key](env, target, *operands)
+    merged, live = cache[cache_key](env, target, *operands)
 
     val_bytes = {"bf16": 2, "int8": 1}.get(wire, jnp.dtype(target.dtype).itemsize)
     key_bytes = narrowest_int_dtype(K).itemsize
@@ -400,6 +407,8 @@ def _map_reduce_dense(
         pairs_emitted=live,
         pairs_shipped=shipped,
         shuffle_payload_bytes=payload,
+        compiles=int(compiled_now),
+        cache_hits=int(not compiled_now),
     )
     if engine == "naive":
         stats = dataclasses.replace(
@@ -427,10 +436,12 @@ def _collective_reduce(partial: Array, red: Reducer, axis: str, wire: str) -> Ar
 
 
 def _map_reduce_hash(
-    kind, source, mapper, red, target, mesh, n_shards, engine, slack, env
+    kind, source, mapper, red, target, mesh, n_shards, engine, slack, env,
+    cache=None,
 ):
     """DistHashMap target: eager-combine → hash-partition → all_to_all → merge."""
     axis = C.DATA_AXIS
+    cache = cache if cache is not None else {}
 
     cache_key = (
         "hash", mapper, red.name, red, engine, slack, mesh, kind,
@@ -440,7 +451,8 @@ def _map_reduce_hash(
         _abstract((target.table.keys, target.table.vals)), _abstract(env),
     )
 
-    if cache_key not in _EXEC_CACHE:
+    compiled_now = cache_key not in cache
+    if compiled_now:
 
         def shard_fn(env_, tkeys, tvals, tovf, *operands):
             shard_idx = jax.lax.axis_index(axis)
@@ -485,7 +497,7 @@ def _map_reduce_hash(
 
         d = P(C.DATA_AXIS)
         in_specs = (P(), d, d, d) + tuple(_source_operands(kind, source)[1])
-        _EXEC_CACHE[cache_key] = jax.jit(
+        cache[cache_key] = jax.jit(
             shard_map(
                 shard_fn,
                 mesh=mesh,
@@ -496,7 +508,7 @@ def _map_reduce_hash(
         )
 
     operands, _ = _source_operands(kind, source)
-    nk, nv, novf, emitted, shipped = _EXEC_CACHE[cache_key](
+    nk, nv, novf, emitted, shipped = cache[cache_key](
         env, target.table.keys, target.table.vals, target.table.overflow, *operands
     )
     out = C.DistHashMap(C.HashTable(nk, nv, novf), reducer_name=red.name)
@@ -508,5 +520,7 @@ def _map_reduce_hash(
         pairs_shipped=shipped,
         shuffle_payload_bytes=jnp.sum(shipped) * (4 + val_bytes),
         overflow=novf,
+        compiles=int(compiled_now),
+        cache_hits=int(not compiled_now),
     )
     return out, stats

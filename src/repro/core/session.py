@@ -1,0 +1,188 @@
+"""BlazeSession — the long-lived driver context for iterative MapReduce.
+
+The paper's wins on iterative data mining (PageRank, k-means, GMM/EM) come
+from keeping the hot loop resident: pay lowering + compilation once per
+(algorithm, shape) configuration, then run N iterations that only dispatch.
+``BlazeSession`` is the seam that makes this true and observable:
+
+* it **owns the mesh** — one 1-D ``data`` mesh per session by default, shared
+  by every ``map_reduce`` it runs;
+* it **memoizes compiled executables**, keyed on (source container spec,
+  mapper identity, reducer, target spec, engine, wire, env spec) — the same
+  key the engine builds in ``repro.core.mapreduce``.  Iteration-varying state
+  (scores, centroids, mixture parameters) must flow through ``env`` so the
+  key, and therefore the executable, stays fixed across iterations;
+* it **counts compiles and cache hits** — cumulatively in ``session.stats``
+  and per call in ``MapReduceStats.compiles`` / ``.cache_hits`` — so "10
+  iterations, 1 compile per configuration" is an assertable property, not a
+  docstring promise (see ``tests/test_session.py``).
+
+The free function ``repro.core.map_reduce`` is a thin wrapper over a lazily
+created process-wide default session, so existing one-shot code keeps
+working; iterative drivers take an optional ``session=`` and algorithms
+create/receive one explicitly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Callable
+
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.core import containers as C
+from repro.core import mapreduce as _mr
+from repro.core.reducers import Reducer, get_reducer
+
+__all__ = [
+    "BlazeSession",
+    "SessionStats",
+    "get_default_session",
+    "reset_default_session",
+    "resolve",
+    "set_default_session",
+]
+
+
+@dataclasses.dataclass
+class SessionStats:
+    """Cumulative executable-reuse counters for one session."""
+
+    calls: int = 0  # map_reduce invocations routed through the session
+    compiles: int = 0  # calls that lowered + compiled a new executable
+    cache_hits: int = 0  # calls served by a memoized executable
+
+    @property
+    def hit_rate(self) -> float:
+        return self.cache_hits / self.calls if self.calls else 0.0
+
+
+class BlazeSession:
+    """Owns a mesh and a compiled-executable cache for Blaze MapReduce.
+
+    >>> sess = BlazeSession()
+    >>> for _ in range(10):
+    ...     scores = sess.map_reduce(edges, contrib_mapper, "sum",
+    ...                              jnp.zeros((n,), jnp.float32), env=scores)
+    >>> sess.stats.compiles   # 1 — nine of the ten calls reused it
+    """
+
+    def __init__(self, mesh: Mesh | None = None):
+        self._mesh = mesh
+        self._exec_cache: dict = {}
+        self.stats = SessionStats()
+
+    @property
+    def mesh(self) -> Mesh:
+        """The session's mesh (built lazily over all visible devices)."""
+        if self._mesh is None:
+            self._mesh = C.data_mesh()
+        return self._mesh
+
+    # -- the paper's API, session-scoped ------------------------------------
+
+    def map_reduce(
+        self,
+        source,
+        mapper: Callable,
+        reducer: str | Reducer,
+        target,
+        *,
+        mesh: Mesh | None = None,
+        engine: str = "eager",
+        wire: str = "none",
+        env: Any = None,
+        shuffle_slack: float = 2.0,
+        return_stats: bool = False,
+    ):
+        """Run one MapReduce op, reusing this session's compiled executables.
+
+        Same contract as the free ``repro.core.map_reduce``; ``mesh``
+        overrides the session mesh for this call only (the override is part
+        of the cache key, so mixed-mesh sessions stay correct).
+        """
+        red = get_reducer(reducer)
+        mesh = mesh or self.mesh
+        n_shards = mesh.shape[C.DATA_AXIS]
+        kind = _mr._source_kind(source)
+
+        if isinstance(target, C.DistHashMap):
+            out, stats = _mr._map_reduce_hash(
+                kind, source, mapper, red, target, mesh, n_shards, engine,
+                shuffle_slack, env, cache=self._exec_cache,
+            )
+        else:
+            out, stats = _mr._map_reduce_dense(
+                kind, source, mapper, red, jnp.asarray(target), mesh,
+                n_shards, engine, wire, env, return_stats,
+                cache=self._exec_cache,
+            )
+        self.stats.calls += 1
+        self.stats.compiles += stats.compiles
+        self.stats.cache_hits += stats.cache_hits
+        return (out, stats) if return_stats else out
+
+    def foreach(self, v: C.DistVector, fn: Callable, env: Any = None) -> C.DistVector:
+        """Session-scoped ``foreach`` (same executable-reuse contract via
+        ``env``; the elementwise cache is shared process-wide)."""
+        return C.foreach(v, fn, env=env)
+
+    def distribute(self, x, mesh: Mesh | None = None) -> C.DistVector:
+        """``distribute`` onto this session's mesh."""
+        return C.distribute(x, mesh or self.mesh)
+
+    # -- observability -------------------------------------------------------
+
+    def cache_info(self) -> dict:
+        """Executable-cache snapshot: entries + cumulative counters."""
+        return {
+            "entries": len(self._exec_cache),
+            "calls": self.stats.calls,
+            "compiles": self.stats.compiles,
+            "cache_hits": self.stats.cache_hits,
+            "hit_rate": self.stats.hit_rate,
+        }
+
+    def clear_cache(self) -> None:
+        """Drop all memoized executables (counters keep accumulating)."""
+        self._exec_cache.clear()
+
+
+# -- process-wide default session --------------------------------------------
+
+_default_lock = threading.Lock()
+_default_session: BlazeSession | None = None
+
+
+def get_default_session() -> BlazeSession:
+    """The lazily created session backing the free ``map_reduce``."""
+    global _default_session
+    if _default_session is None:
+        with _default_lock:
+            if _default_session is None:
+                _default_session = BlazeSession()
+    return _default_session
+
+
+def set_default_session(session: BlazeSession) -> BlazeSession | None:
+    """Install ``session`` as the process default; returns the previous one."""
+    global _default_session
+    with _default_lock:
+        prev, _default_session = _default_session, session
+    return prev
+
+
+def reset_default_session() -> None:
+    """Forget the default session (a fresh one is built on next use)."""
+    global _default_session
+    with _default_lock:
+        _default_session = None
+
+
+def resolve(
+    session: BlazeSession | None, mesh: Mesh | None
+) -> tuple[BlazeSession, Mesh]:
+    """(session or default, mesh or session's) — the driver entry idiom."""
+    sess = session if session is not None else get_default_session()
+    return sess, (mesh or sess.mesh)

@@ -18,8 +18,9 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map
 
 from repro.distributed.collectives import psum_with_feedback, wire_bytes
 from repro.optim.adamw import AdamW

@@ -288,7 +288,9 @@ def constrain(x, *axes):
     Outside a mesh context (unit tests, CPU runs) this is a no-op, so model
     code can annotate unconditionally.
     """
-    am = jax.sharding.get_abstract_mesh()
+    from repro.compat import get_abstract_mesh
+
+    am = get_abstract_mesh()
     if am is None or not am.axis_names:
         return x
     fitted = []

@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import set_mesh
 from repro.configs.base import SHAPES, ArchConfig, ShapeSpec, cells, get_arch, list_archs
 from repro.distributed import sharding as SH
 from repro.launch.mesh import make_production_mesh
@@ -281,7 +282,7 @@ def run_cell(
     try:
         mesh = make_production_mesh(multi_pod=multi_pod)
         fn, args, trip = build_cell(cfg, shape, mesh, unroll=unroll)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             t0 = time.time()
             lowered = fn.lower(*args)
             rec["lower_s"] = time.time() - t0

@@ -71,7 +71,9 @@ def attn_apply(
     # then partial-psums tiny [B,H,1,bk] tiles instead of resharding the
     # whole cache every chunk).  Everywhere else: TP over heads — the seq
     # all-gather then moves small per-head tensors, never an f32 residual.
-    am = jax.sharding.get_abstract_mesh()
+    from repro.compat import get_abstract_mesh
+
+    am = get_abstract_mesh()
     msize = am.shape.get("model", 1) if am is not None and am.axis_names else 1
     decode_like = cache is not None and s <= 8
     if decode_like and msize > 1 and hkv % msize != 0 and dh % msize == 0:

@@ -79,7 +79,7 @@ def test_compressed_psum_8dev():
     res = _run(
         """
 import json, numpy as np, jax, jax.numpy as jnp
-from jax import shard_map
+from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 from repro.core.containers import data_mesh
 from repro.distributed.collectives import compressed_psum
@@ -107,13 +107,14 @@ def test_sharded_train_step_8dev():
         """
 import json, numpy as np, jax, jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.compat import AxisType, make_mesh, set_mesh
 from repro.configs.base import get_arch
 from repro.distributed import sharding as SH
 from repro.models import model as M
 from repro.optim.adamw import AdamW
 import dataclasses
 cfg = dataclasses.replace(get_arch("qwen3-0.6b").reduced(), d_model=64, d_ff=128)
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
 mi = SH.make_mesh_info(mesh)
 params = M.init(jax.random.PRNGKey(0), cfg)
 pspecs = SH.param_pspecs(cfg, params, mi)
@@ -124,7 +125,7 @@ def step(p, o, x, y):
     loss, g = jax.value_and_grad(lambda q: M.loss_fn(q, cfg, x, y, remat=True))(p)
     p, o = opt.update(g, o, p)
     return p, o, loss
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     jstep = jax.jit(step)
     rng = np.random.RandomState(0)
     losses = []
