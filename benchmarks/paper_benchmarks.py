@@ -78,12 +78,33 @@ def fig4_wordcount():
         rows.append(
             (f"fig4_wordcount_{engine}", t * 1e6, f"{n_words/t/1e6:.1f}Mwords/s")
         )
+
+    # pallas column: bounded vocabulary → dense [V] target, kernel combine
+    # (interpret mode on CPU — structural comparison, not TPU perf).
+    def run_pallas():
+        counts, st = wordcount(
+            lines, engine="pallas", target="dense", vocab_size=20000,
+            return_stats=True, session=SESSION,
+        )
+        jax.block_until_ready(counts)
+        stats["pallas"] = st.finalize()
+
+    t = _timeit(run_pallas)
+    occ = stats["pallas"].kernel_occupancy
+    rows.append(
+        (
+            "fig4_wordcount_pallas", t * 1e6,
+            f"{n_words/t/1e6:.1f}Mwords/s;"
+            f"occupancy={occ:.2f};bn={stats['pallas'].kernel_block_n}",
+        )
+    )
     rows.append(
         (
             "fig4_wordcount_wire",
             0.0,
             f"eager_bytes={stats['eager'].shuffle_payload_bytes};"
-            f"naive_bytes={stats['naive'].shuffle_payload_bytes}",
+            f"naive_bytes={stats['naive'].shuffle_payload_bytes};"
+            f"pallas_bytes={stats['pallas'].shuffle_payload_bytes}",
         )
     )
     return rows
@@ -115,7 +136,7 @@ def fig6_kmeans():
     pts, _ = cluster_points(200_000 * S, 3, 5, seed=0)
     init = pts[:5].copy()
     rows = []
-    for engine in ("eager", "naive"):
+    for engine in ("eager", "pallas", "naive"):
         t = _timeit(
             lambda e=engine: kmeans(pts, 5, init_centers=init, max_iters=3,
                                     tol=0, engine=e, session=SESSION)

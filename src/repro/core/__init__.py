@@ -13,10 +13,12 @@ from repro.core.containers import (
 )
 from repro.core.mapreduce import MapReduceStats, map_reduce
 from repro.core.session import (
+    PALLAS_AUTO_MAX_KEYS,
     BlazeSession,
     SessionStats,
     get_default_session,
     reset_default_session,
+    resolve_engine,
     set_default_session,
 )
 from repro.data.text import load_file
@@ -24,6 +26,7 @@ from repro.core.reducers import Reducer, custom_reducer, get_reducer
 
 __all__ = [
     "EMPTY_KEY",
+    "PALLAS_AUTO_MAX_KEYS",
     "BlazeSession",
     "DistHashMap",
     "DistRange",
@@ -42,6 +45,7 @@ __all__ = [
     "make_dist_hashmap",
     "map_reduce",
     "reset_default_session",
+    "resolve_engine",
     "set_default_session",
     "topk",
 ]

@@ -11,6 +11,9 @@ Six MapReduce-family operations per iteration, exactly the paper's plan:
 
 All K-keyed targets are small-fixed-key-range dense accumulators, so each op
 lowers to a per-device dense partial + one ``psum`` — the hand-written plan.
+``engine=`` accepts ``"eager" | "pallas" | "naive" | "auto"``; ops 3–5 emit
+``jnp.arange(k)`` keys (dynamic), which pallas/auto route through the
+segment-reduce kernel.
 Points are stored distributedly; per-point state (densities/memberships) lives
 beside the point in one DistVector of rows ``[x | p-or-w]``.
 """

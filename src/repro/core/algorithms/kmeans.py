@@ -4,6 +4,10 @@ The mapper assigns a point to its nearest centre and emits
 ``(centre, [x…, 1])`` — per-centre sums and counts accumulate in one dense
 ``[K, dim+1]`` target (small fixed key range).  The refinement step is serial,
 exactly as in the paper.  Centres are threaded via ``env``.
+
+``engine=`` accepts ``"eager" | "pallas" | "naive" | "auto"``: with pallas
+(or auto, since K is small) the per-shard sums-and-counts combine runs
+through the segment-reduce kernel's VMEM accumulator.
 """
 from __future__ import annotations
 

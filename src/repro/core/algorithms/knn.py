@@ -31,8 +31,15 @@ def knn(
     k: int = 100,
     *,
     mesh: Mesh | None = None,
+    engine: str = "auto",
     session: BlazeSession | None = None,
 ) -> KNNResult:
+    # Uniform driver interface: knn's plan is container-level (``topk``), so
+    # the engine choice cannot change it — validate and move on.
+    from repro.core.session import ENGINES
+
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; choose from {ENGINES}")
     if mesh is None and session is not None:
         mesh = session.mesh
     if isinstance(points, DistVector):

@@ -8,7 +8,10 @@ Exactly the paper's decomposition:
 
 Links are stored distributedly (DistVector of [E, 2] edges); scores are a
 dense array threaded through ``env`` so one compiled executable serves every
-iteration.  The paper's Eq. 1 writes the damping constant as d = 0.15; the
+iteration.  ``engine=`` accepts ``"eager" | "pallas" | "naive" | "auto"`` —
+MR2's contribution scatter is the dynamic-key combine the pallas kernel
+accelerates; MR1/MR3 emit static keys and keep the fused fast path under
+every engine.  The paper's Eq. 1 writes the damping constant as d = 0.15; the
 conventional damping is 0.85 — ``damping`` is a parameter (default 0.85) and
 the benchmark reports both conventions.
 """

@@ -9,6 +9,10 @@ counter and a single scalar crosses the wire.
 Randomness is counter-based (splitmix32 of the sample index) so the mapper is
 stateless — the TPU version of the paper's "std::random is not thread safe"
 remark.
+
+``engine=`` accepts ``"eager" | "pallas" | "naive" | "auto"``; the ``emit(0,
+…)`` key is trace-time constant, so eager/pallas/auto all lower to the same
+fused whole-axis reduction (the kernel only enters for dynamic keys).
 """
 from __future__ import annotations
 

@@ -31,15 +31,41 @@ def wordcount(
     mesh: Mesh | None = None,
     engine: str = "eager",
     capacity_per_shard: int | None = None,
+    target: str = "hash",
+    vocab_size: int | None = None,
     return_stats: bool = False,
     session: BlazeSession | None = None,
 ):
-    """Count token occurrences; returns a DistHashMap (and optional stats)."""
+    """Count token occurrences.
+
+    ``target="hash"`` (default) returns a ``DistHashMap`` — the open-ended
+    vocabulary plan.  ``target="dense"`` counts into a dense ``[vocab_size]``
+    int32 array (key == token id) — the paper's small-fixed-key-range plan
+    when the vocabulary is bounded, and the shape ``engine="pallas"``/``"auto"``
+    accelerates with the segment-reduce kernel.
+    """
+    if target not in ("hash", "dense"):
+        raise ValueError(f"unknown target {target!r}; choose 'hash' or 'dense'")
     sess, mesh = resolve(session, mesh)
+    lines_v = distribute(lines, mesh)
+    if target == "dense":
+        vocab = (
+            vocab_size if vocab_size is not None
+            else (int(lines.max()) + 1 if lines.size else 1)
+        )
+        counts = jnp.zeros((vocab,), jnp.int32)
+        return sess.map_reduce(
+            lines_v,
+            wordcount_mapper,
+            "sum",
+            counts,
+            mesh=mesh,
+            engine=engine,
+            return_stats=return_stats,
+        )
     vocab_bound = int(lines.max()) + 1 if lines.size else 1
     if capacity_per_shard is None:
         capacity_per_shard = max(64, 4 * vocab_bound)
-    lines_v = distribute(lines, mesh)
     hm = make_dist_hashmap(mesh, capacity_per_shard, (), jnp.int32, "sum")
     return sess.map_reduce(
         lines_v,

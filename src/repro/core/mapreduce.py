@@ -30,9 +30,18 @@ Engines:
   the key range is small and fixed), then the shuffle moves locally-reduced
   data only — ``psum`` for dense targets, hash-partitioned ``all_to_all`` of
   unique pairs for hash targets.
+* ``engine="pallas"`` (Blaze, kernel combine): the eager plan with the
+  per-shard dynamic-key combine lowered through the Pallas segment-reduce
+  kernel (``Reducer.pallas_segment`` — one-hot matmul on the MXU, VMEM-resident
+  ``[K, V]`` accumulator; interpret mode off-TPU).  Dense targets only; the
+  static-key fast path and the ``psum`` shuffle are identical to eager.
+  ``MapReduceStats`` additionally reports the kernel block size and lane
+  occupancy.
 * ``engine="naive"`` (conventional MapReduce / Spark's wide shuffle): every
   emitted pair goes on the wire unreduced; reduction happens only at the
   destination shard.
+* ``engine="auto"``: resolved by the session — pallas for small static key
+  ranges (dense target, built-in reducer), eager otherwise.
 
 ``wire`` ∈ {"none", "bf16", "int8"} applies the fast-serialization analogue to
 the collective payload (dense-sum targets).
@@ -73,6 +82,11 @@ class MapReduceStats:
     overflow: Any = None  # hash-table / bucket drops
     compiles: int = 0  # 1 iff this call lowered+compiled a new executable
     cache_hits: int = 0  # 1 iff this call reused a session-cached executable
+    # engine="pallas" only: the segment-reduce kernel's launch accounting.
+    kernel_block_n: int | None = None  # pair-block size the kernel ran with
+    kernel_lanes: int | None = None  # padded pair-lanes processed (global)
+    kernel_pairs: Any = None  # live pairs entering the kernel (device array)
+    kernel_occupancy: float | None = None  # kernel_pairs / kernel_lanes
 
     def finalize(self) -> "MapReduceStats":
         def _get(x):
@@ -80,6 +94,12 @@ class MapReduceStats:
                 return int(np.asarray(jax.device_get(x)).sum())
             return x
 
+        kernel_pairs = _get(self.kernel_pairs)
+        occupancy = (
+            kernel_pairs / self.kernel_lanes
+            if self.kernel_lanes and kernel_pairs is not None
+            else None
+        )
         return MapReduceStats(
             engine=self.engine,
             collective=self.collective,
@@ -89,6 +109,10 @@ class MapReduceStats:
             overflow=_get(self.overflow),
             compiles=self.compiles,
             cache_hits=self.cache_hits,
+            kernel_block_n=self.kernel_block_n,
+            kernel_lanes=self.kernel_lanes,
+            kernel_pairs=kernel_pairs,
+            kernel_occupancy=occupancy,
         )
 
 
@@ -303,6 +327,8 @@ def _map_reduce_dense(
     K = target.shape[0]
     axis = C.DATA_AXIS
     cache = cache if cache is not None else {}
+    if engine not in ("eager", "pallas", "naive"):
+        raise ValueError(f"unknown engine {engine!r}")
 
     cache_key = (
         "dense", mapper, red.name, red, engine, wire, mesh, kind, with_stats,
@@ -314,6 +340,7 @@ def _map_reduce_dense(
 
     compiled_now = cache_key not in cache
     if compiled_now:
+        kernel_meta: dict = {}
 
         def shard_fn(env_, *operands):
             shard_idx = jax.lax.axis_index(axis)
@@ -326,11 +353,13 @@ def _map_reduce_dense(
                 if with_stats or engine == "naive"
                 else jnp.zeros((), jnp.int32)
             )
+            kernel_pairs = jnp.zeros((), jnp.int32)
 
-            if engine == "eager":
+            if engine in ("eager", "pallas"):
                 # §2.3.3 static-key fast path: trace-time-constant keys get a
                 # fused whole-axis reduction — no id arrays, the exact plan a
-                # hand-written parallel-for emits.
+                # hand-written parallel-for emits.  (Shared by both engines:
+                # a kernel cannot beat a fused scalar reduction.)
                 val_shape = entries[0][1].shape[2:]
                 ident = red.identity(target.dtype)
                 partial = jnp.full((K,) + val_shape, ident, target.dtype)
@@ -353,13 +382,40 @@ def _map_reduce_dense(
                         dynamic.append((keys, vals, mask))
                 if dynamic:
                     dkeys, dvals, dmask = _flatten_entries(dynamic)
-                    ids = jnp.where(
-                        dmask & (dkeys >= 0) & (dkeys < K), dkeys, K
-                    )
-                    seg = red.segment(dvals, ids, K + 1)[:K]
+                    dvals = dvals.astype(target.dtype)
+                    if engine == "pallas" and red.pallas_segment is not None:
+                        # Device-local combine on the MXU: invalid lanes get
+                        # id −1, which the kernel drops (their values never
+                        # reach the accumulator, so no masking of dvals).
+                        ids = jnp.where(
+                            dmask & (dkeys >= 0) & (dkeys < K), dkeys, -1
+                        )
+                        flat = dvals.reshape((dvals.shape[0], -1))
+                        seg = red.pallas_segment(ids, flat, K)
+                        seg = seg.reshape((K,) + dvals.shape[1:])
+                        from repro.kernels.segment_reduce import (
+                            segment_reduce_lanes,
+                        )
+
+                        bn, lanes = segment_reduce_lanes(
+                            flat.shape[0], K, flat.shape[1], red.name,
+                            flat.dtype,
+                        )
+                        kernel_meta["block_n"] = bn
+                        kernel_meta["lanes"] = lanes * n_shards
+                        kernel_pairs = jnp.sum(
+                            dmask & (dkeys >= 0) & (dkeys < K)
+                        ).astype(jnp.int32)
+                    else:
+                        # eager, or a custom reducer without a kernel impl:
+                        # XLA's segmented reduce.
+                        ids = jnp.where(
+                            dmask & (dkeys >= 0) & (dkeys < K), dkeys, K
+                        )
+                        seg = red.segment(dvals, ids, K + 1)[:K]
                     partial = red.combine(partial, seg.astype(target.dtype))
                 total = _collective_reduce(partial, red, axis, wire)
-            elif engine == "naive":
+            else:
                 # Conventional plan: ship ALL raw pairs (padded lanes and all);
                 # reduce only at the destination.  all_gather of the raw pair
                 # stream is the dense-target equivalent of a wide shuffle.
@@ -370,30 +426,29 @@ def _map_reduce_dense(
                 gm = jax.lax.all_gather(valid, axis, tiled=True)
                 ids_g = jnp.where(gm & (gk >= 0) & (gk < K), gk, K)
                 total = red.segment(gv, ids_g, K + 1)[:K]
-            else:
-                raise ValueError(f"unknown engine {engine!r}")
-            return total, live[None]
+            return total, live[None], kernel_pairs[None]
 
         fn = shard_map(
             shard_fn,
             mesh=mesh,
             in_specs=(P(),) + tuple(_source_operands(kind, source)[1]),
-            out_specs=(P(), P(C.DATA_AXIS)),
+            out_specs=(P(), P(C.DATA_AXIS), P(C.DATA_AXIS)),
             check_vma=False,
         )
 
         def run(env_, target_, *operands):
-            total, live = fn(env_, *operands)
-            return red.combine(target_, total.astype(target_.dtype)), live
+            total, live, kpairs = fn(env_, *operands)
+            return red.combine(target_, total.astype(target_.dtype)), live, kpairs
 
-        cache[cache_key] = jax.jit(run)
+        cache[cache_key] = (jax.jit(run), kernel_meta)
 
+    run_fn, kernel_meta = cache[cache_key]
     operands, _ = _source_operands(kind, source)
-    merged, live = cache[cache_key](env, target, *operands)
+    merged, live, kernel_pairs = run_fn(env, target, *operands)
 
     val_bytes = {"bf16": 2, "int8": 1}.get(wire, jnp.dtype(target.dtype).itemsize)
     key_bytes = narrowest_int_dtype(K).itemsize
-    if engine == "eager":
+    if engine in ("eager", "pallas"):
         payload = int(np.prod(target.shape)) * val_bytes * n_shards
         coll = f"psum[{K}x{val_bytes}B]"
         shipped = int(np.prod(target.shape)) * n_shards
@@ -409,6 +464,9 @@ def _map_reduce_dense(
         shuffle_payload_bytes=payload,
         compiles=int(compiled_now),
         cache_hits=int(not compiled_now),
+        kernel_block_n=kernel_meta.get("block_n"),
+        kernel_lanes=kernel_meta.get("lanes"),
+        kernel_pairs=kernel_pairs if kernel_meta else None,
     )
     if engine == "naive":
         stats = dataclasses.replace(

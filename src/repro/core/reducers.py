@@ -12,15 +12,23 @@ additionally expose:
 * ``collective(x, axis)``  — the matching mesh collective (``psum`` & friends),
 
 so the same user-visible name drives the thread-local (VMEM), device-local
-(HBM) and cross-device (ICI/DCN) levels of the reduction tree.
+(HBM) and cross-device (ICI/DCN) levels of the reduction tree.  Built-ins
+additionally carry ``pallas_segment`` — the same reduce-by-key contract
+lowered through the Pallas one-hot/select-scatter kernel
+(``repro.kernels.segment_reduce``) — which ``engine="pallas"`` uses for the
+device-local level; custom reducers leave it ``None`` and fall back to
+``segment``.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.segment_reduce import segment_reduce as _pallas_segment_reduce
 
 Array = jax.Array
 
@@ -38,6 +46,10 @@ class Reducer:
     # path (§2.3.3: no id arrays when the key is known at trace time);
     # None → fall back to the segment path
     axis_reduce: Callable[..., Array] | None = None
+    # reduce-by-key through the Pallas kernel: (ids [N], vals [N, V], n) →
+    # dense [n, V] in the kernel's accumulator dtype (f32/i32).  ids outside
+    # [0, n) are dropped.  None → engine="pallas" falls back to ``segment``.
+    pallas_segment: Callable[..., Array] | None = None
 
     def identity(self, dtype) -> Array:
         return self.identity_fn(dtype)
@@ -76,6 +88,16 @@ def _maxval(dtype) -> Array:
     return jnp.asarray(jnp.iinfo(dtype).max, dtype)
 
 
+def _prod_collective(x: Array, ax: str) -> Array:
+    # NOT exp(psum(log x)): that breaks for negatives, zeros and ints.  The
+    # gathered fold is exact for any sign/dtype; K-sized partials are tiny.
+    return jnp.prod(jax.lax.all_gather(x, ax), axis=0)
+
+
+def _kernel_segment(reducer_name: str) -> Callable[..., Array]:
+    return functools.partial(_pallas_segment_reduce, reducer=reducer_name)
+
+
 SUM = Reducer(
     name="sum",
     identity_fn=lambda dt: jnp.asarray(0, dt),
@@ -83,6 +105,7 @@ SUM = Reducer(
     segment=_seg_sum,
     collective=lambda x, ax: jax.lax.psum(x, ax),
     axis_reduce=jnp.sum,
+    pallas_segment=_kernel_segment("sum"),
 )
 
 PROD = Reducer(
@@ -90,8 +113,9 @@ PROD = Reducer(
     identity_fn=lambda dt: jnp.asarray(1, dt),
     combine=jnp.multiply,
     segment=_seg_prod,
-    collective=lambda x, ax: jnp.exp(jax.lax.psum(jnp.log(x), ax)),
+    collective=_prod_collective,
     axis_reduce=jnp.prod,
+    pallas_segment=_kernel_segment("prod"),
 )
 
 MIN = Reducer(
@@ -101,6 +125,7 @@ MIN = Reducer(
     segment=_seg_min,
     collective=lambda x, ax: jax.lax.pmin(x, ax),
     axis_reduce=jnp.min,
+    pallas_segment=_kernel_segment("min"),
 )
 
 MAX = Reducer(
@@ -110,6 +135,7 @@ MAX = Reducer(
     segment=_seg_max,
     collective=lambda x, ax: jax.lax.pmax(x, ax),
     axis_reduce=jnp.max,
+    pallas_segment=_kernel_segment("max"),
 )
 
 _BUILTIN: dict[str, Reducer] = {r.name: r for r in (SUM, PROD, MIN, MAX)}

@@ -37,12 +37,47 @@ from repro.core.reducers import Reducer, get_reducer
 
 __all__ = [
     "BlazeSession",
+    "PALLAS_AUTO_MAX_KEYS",
     "SessionStats",
     "get_default_session",
     "reset_default_session",
     "resolve",
+    "resolve_engine",
     "set_default_session",
 ]
+
+ENGINES = ("eager", "pallas", "naive", "auto")
+
+# engine="auto" picks the Pallas kernel combine only while the dense [K, V]
+# accumulator tile plausibly stays VMEM-resident: K·V·4 B against a ~16 MB
+# core budget, with V unknown until trace.  4096 keys × 128 f32 lanes ≈ 2 MB —
+# comfortably resident; beyond that eager's XLA segmented reduce wins anyway.
+PALLAS_AUTO_MAX_KEYS = 4096
+
+
+def resolve_engine(engine: str, target, reducer: Reducer) -> str:
+    """The ``engine="auto"`` policy, plus target-compatibility fallbacks.
+
+    * hash targets have no dense accumulator for the kernel to own, and a
+      reducer without a ``pallas_segment`` impl has no kernel to run → the
+      eager plan (``engine="pallas"`` falls back rather than erroring, so
+      drivers can pass one engine for mixed-target pipelines, and the
+      resolved name in ``MapReduceStats.engine`` matches the plan that ran);
+    * ``"auto"``: dense target with a small static key range and a reducer
+      with a ``pallas_segment`` impl → ``"pallas"``;
+    * everything else → ``"eager"``.
+    """
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; choose from {ENGINES}")
+    hash_target = isinstance(target, C.DistHashMap)
+    if engine == "pallas" and (hash_target or reducer.pallas_segment is None):
+        return "eager"
+    if engine != "auto":
+        return engine
+    if hash_target or reducer.pallas_segment is None:
+        return "eager"
+    k = jnp.asarray(target).shape[0] if jnp.ndim(target) else 0
+    return "pallas" if 0 < k <= PALLAS_AUTO_MAX_KEYS else "eager"
 
 
 @dataclasses.dataclass
@@ -100,9 +135,15 @@ class BlazeSession:
 
         Same contract as the free ``repro.core.map_reduce``; ``mesh``
         overrides the session mesh for this call only (the override is part
-        of the cache key, so mixed-mesh sessions stay correct).
+        of the cache key, so mixed-mesh sessions stay correct).  ``engine``
+        is one of ``"eager" | "pallas" | "naive" | "auto"``; ``"auto"`` (and
+        the hash-target fallback for ``"pallas"``) resolves via
+        ``resolve_engine`` *before* the cache key is built, so the resolved
+        engine — reported in ``MapReduceStats.engine`` — is what keys the
+        executable.
         """
         red = get_reducer(reducer)
+        engine = resolve_engine(engine, target, red)
         mesh = mesh or self.mesh
         n_shards = mesh.shape[C.DATA_AXIS]
         kind = _mr._source_kind(source)

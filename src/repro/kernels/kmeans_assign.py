@@ -5,12 +5,15 @@ One pass over a point tile does everything the assignment step needs:
     d²  = ‖x‖² − 2 x·cᵀ + ‖c‖²      (MXU matmul; the ‖x‖² term is dropped —
                                       it does not change the argmin)
     a   = argmin_k d²                 (VPU)
-    acc[K, D+1] += [onehotᵀ @ x | onehotᵀ @ 1]   (MXU; eager reduction)
+    acc[K, D+1] += onehotᵀ @ [x | 1]  (MXU; eager reduction)
 
 so the per-cluster Σx and counts — the entire MapReduce payload — accumulate
 in a VMEM-resident ``[K, D+1]`` tile across the sequential grid, and the
 points are read from HBM exactly once.  This is the kernel-level form of the
-paper's eager reduction: emit→reduce fused into the map body.
+paper's eager reduction: emit→reduce fused into the map body.  The scatter
+itself is ``onehot_accumulate`` — the same one-hot-matmul accumulator the
+generalized segment-reduce kernel uses — applied to points with a ones
+column appended, so Σx and the counts come out of a single matmul.
 """
 from __future__ import annotations
 
@@ -19,6 +22,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.segment_reduce import onehot_accumulate
 
 
 def _kmeans_kernel(pts_ref, ctr_ref, assign_ref, stats_ref, *, k, bn, n_true):
@@ -41,13 +46,8 @@ def _kmeans_kernel(pts_ref, ctr_ref, assign_ref, stats_ref, *, k, bn, n_true):
     valid = row < n_true
     assign_ref[...] = jnp.where(valid, assign, -1)
 
-    iota_k = jax.lax.broadcasted_iota(jnp.int32, (bn, k), 1)
-    onehot = ((assign[:, None] == iota_k) & valid[:, None]).astype(jnp.float32)
-    sums = jax.lax.dot_general(
-        onehot, x, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
-    )  # [K, D]
-    counts = jnp.sum(onehot, axis=0)[:, None]  # [K, 1]
-    stats_ref[...] += jnp.concatenate([sums, counts], axis=1)
+    x1 = jnp.concatenate([x, jnp.ones((bn, 1), jnp.float32)], axis=1)
+    stats_ref[...] += onehot_accumulate(assign, x1, k, valid=valid)
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
@@ -56,9 +56,13 @@ def kmeans_assign(
     centers: jax.Array,  # [K, D]
     *,
     block_n: int = 1024,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Returns (assignments [N] int32, stats [K, D+1] = [Σx | count])."""
+    from repro.kernels.segment_reduce import pallas_interpret_default
+
+    if interpret is None:
+        interpret = pallas_interpret_default()
     n, d = points.shape
     k = centers.shape[0]
     bn = min(block_n, n)

@@ -2,60 +2,198 @@
 
 Reduces a stream of (id, value-row) pairs into a dense ``[K, V]`` accumulator
 that lives in VMEM for the whole pass — the TPU shape of the paper's
-*thread-local cache for a small fixed key range* (§2.3.3).  The scatter-add is
-expressed as a one-hot matmul so the MXU does the reduction:
+*thread-local cache for a small fixed key range* (§2.3.3), generalized from
+``sum`` to the full ``Reducer`` monoid surface (sum / min / max / prod).
 
-    onehot[bn, K] = (ids[:, None] == iota_K)   →   acc += onehotᵀ @ vals
+Two in-kernel strategies, chosen statically per (reducer, dtype):
+
+* **one-hot matmul** (float sum): the scatter-add is expressed as a one-hot
+  matmul so the MXU does the reduction:
+
+      onehot[bn, K] = (ids[:, None] == iota_K)   →   acc += onehotᵀ @ vals
+
+* **select-scatter** (min / max / prod, and integer sum, which must stay
+  exact): broadcast the block against the key axis, select each lane into
+  its key's row (identity elsewhere), and fold the block axis on the VPU:
+
+      masked[bn, K, V] = where(onehot, vals, identity)  →  acc = op(acc, fold(masked))
 
 Grid iterates over pair-blocks (sequential on TPU); the output BlockSpec maps
 every step to the same ``[K, V]`` tile, so the accumulator never leaves VMEM
-between steps.  Negative ids are dropped (masked lanes).
+between steps.  Negative ids and ids ``>= K`` never match the iota and are
+dropped (masked lanes).  ``choose_block_n`` autotunes the block size against
+a VMEM budget per strategy; ``interpret=None`` resolves via
+``pallas_interpret_default()`` (interpret off-TPU, overridable with the
+``BLAZE_PALLAS_INTERPRET`` env var) so CPU CI exercises the same kernel.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+REDUCERS = ("sum", "prod", "min", "max")
 
-def _segment_reduce_kernel(ids_ref, vals_ref, out_ref, *, k, bn):
+# Default VMEM budget for the autotuner (bytes).  Real cores have ~16 MB;
+# leave room for the [K, V] accumulator tile and double-buffered inputs.
+_VMEM_BUDGET = 4 * 1024 * 1024
+
+
+def pallas_interpret_default() -> bool:
+    """Run kernels in interpret mode?  True off-TPU; ``BLAZE_PALLAS_INTERPRET``
+    (``"1"``/``"0"``) forces either way — the CI knob for the CPU kernel job."""
+    env = os.environ.get("BLAZE_PALLAS_INTERPRET")
+    if env is not None and env != "":
+        return env not in ("0", "false", "no")
+    return jax.default_backend() != "tpu"
+
+
+def _acc_dtype(dtype):
+    """Accumulator dtype: f32 for floats (bf16 upcast), i32 for ints — the
+    widths the MXU/VPU natively accumulate in."""
+    if jnp.issubdtype(jnp.dtype(dtype), jnp.floating):
+        return jnp.float32
+    return jnp.int32
+
+
+def _identity(reducer: str, dtype):
+    dtype = jnp.dtype(dtype)
+    if reducer == "sum":
+        return jnp.asarray(0, dtype)
+    if reducer == "prod":
+        return jnp.asarray(1, dtype)
+    lo, hi = (
+        (-jnp.inf, jnp.inf)
+        if jnp.issubdtype(dtype, jnp.floating)
+        else (jnp.iinfo(dtype).min, jnp.iinfo(dtype).max)
+    )
+    return jnp.asarray(hi if reducer == "min" else lo, dtype)
+
+
+def _combine(reducer: str):
+    return {
+        "sum": jnp.add,
+        "prod": jnp.multiply,
+        "min": jnp.minimum,
+        "max": jnp.maximum,
+    }[reducer]
+
+
+def _fold(reducer: str):
+    return {
+        "sum": jnp.sum,
+        "prod": jnp.prod,
+        "min": jnp.min,
+        "max": jnp.max,
+    }[reducer]
+
+
+def _use_matmul(reducer: str, acc_dtype) -> bool:
+    return reducer == "sum" and acc_dtype == jnp.float32
+
+
+def choose_block_n(
+    n: int, num_segments: int, v: int, reducer: str = "sum",
+    dtype=jnp.float32, vmem_budget: int = _VMEM_BUDGET,
+) -> int:
+    """Largest power-of-two block (8..2048) whose per-step working set fits.
+
+    matmul strategy:          onehot [bn, K] + vals [bn, V]      (f32)
+    select-scatter strategy:  masked [bn, K, V]                  (acc dtype)
+    """
+    per_row = (
+        (num_segments + v) * 4
+        if _use_matmul(reducer, _acc_dtype(dtype))
+        else num_segments * max(v, 1) * 4
+    )
+    bn = 8
+    while bn < 2048 and (2 * bn) * per_row <= vmem_budget:
+        bn *= 2
+    return max(8, min(bn, max(8, n)))
+
+
+def onehot_accumulate(ids, vals, k: int, *, valid=None, acc_dtype=jnp.float32):
+    """One-hot-matmul scatter-add: ``[bn]`` ids × ``[bn, V]`` vals → ``[K, V]``.
+
+    The shared eager-reduction accumulator pattern (MXU path) used by both the
+    segment-reduce kernel and the fused k-means assignment kernel.  Lanes with
+    ``ids`` outside ``[0, k)`` (or ``valid == False``) contribute nothing.
+    """
+    bn = ids.shape[0]
+    iota_k = jax.lax.broadcasted_iota(jnp.int32, (bn, k), 1)
+    onehot = ids[:, None] == iota_k  # [bn, K]
+    if valid is not None:
+        onehot &= valid[:, None]
+    return jax.lax.dot_general(
+        onehot.astype(acc_dtype), vals.astype(acc_dtype),
+        (((0,), (0,)), ((), ())),
+        preferred_element_type=acc_dtype,
+    )  # [K, V]
+
+
+def _segment_reduce_kernel(
+    ids_ref, vals_ref, out_ref, *, k, bn, reducer, acc_dtype
+):
     i = pl.program_id(0)
+    ident = _identity(reducer, acc_dtype)
 
     @pl.when(i == 0)
     def _init():
-        out_ref[...] = jnp.zeros_like(out_ref)
+        out_ref[...] = jnp.full_like(out_ref, ident)
 
     ids = ids_ref[...]  # [bn]
-    vals = vals_ref[...].astype(jnp.float32)  # [bn, V]
-    iota_k = jax.lax.broadcasted_iota(jnp.int32, (bn, k), 1)
-    onehot = (ids[:, None] == iota_k).astype(jnp.float32)  # [bn, K]
-    partial = jax.lax.dot_general(
-        onehot, vals, (((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )  # [K, V]
-    out_ref[...] += partial.astype(out_ref.dtype)
+    vals = vals_ref[...].astype(acc_dtype)  # [bn, V]
+    if _use_matmul(reducer, acc_dtype):
+        # Zero the values of dropped lanes, not just their one-hot rows: an
+        # all-zero onehot column still contracts 0·NaN = NaN into every key.
+        in_range = (ids >= 0) & (ids < k)
+        vals = jnp.where(in_range[:, None], vals, 0)
+        out_ref[...] += onehot_accumulate(ids, vals, k, acc_dtype=acc_dtype)
+    else:
+        iota_k = jax.lax.broadcasted_iota(jnp.int32, (bn, k), 1)
+        onehot = ids[:, None] == iota_k  # [bn, K]
+        masked = jnp.where(onehot[:, :, None], vals[:, None, :], ident)
+        out_ref[...] = _combine(reducer)(
+            out_ref[...], _fold(reducer)(masked, axis=0)
+        )
 
 
 @functools.partial(
-    jax.jit, static_argnames=("num_segments", "block_n", "interpret")
+    jax.jit, static_argnames=("num_segments", "reducer", "block_n", "interpret")
 )
 def segment_reduce(
-    ids: jax.Array,  # [N] int32, <0 = dropped
+    ids: jax.Array,  # [N] int32; ids outside [0, num_segments) are dropped
     vals: jax.Array,  # [N, V]
     num_segments: int,
     *,
-    block_n: int = 1024,
-    interpret: bool = True,
+    reducer: str = "sum",
+    block_n: int | None = None,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    """Dense ``[K, V]`` reduce-by-key; returns the accumulator dtype
+    (f32 for float inputs, i32 for ints)."""
+    if reducer not in REDUCERS:
+        raise ValueError(f"unknown reducer {reducer!r}; supported: {REDUCERS}")
     n, v = vals.shape
+    acc = _acc_dtype(vals.dtype)
+    if n == 0:  # empty pair stream → the identity accumulator
+        return jnp.full((num_segments, v), _identity(reducer, acc), acc)
+    if interpret is None:
+        interpret = pallas_interpret_default()
+    if block_n is None:
+        block_n = choose_block_n(n, num_segments, v, reducer, vals.dtype)
     bn = min(block_n, n)
     n_pad = -(-n // bn) * bn
     ids_p = jnp.pad(ids, (0, n_pad - n), constant_values=-1)
     vals_p = jnp.pad(vals, ((0, n_pad - n), (0, 0)))
 
-    kernel = functools.partial(_segment_reduce_kernel, k=num_segments, bn=bn)
+    kernel = functools.partial(
+        _segment_reduce_kernel, k=num_segments, bn=bn, reducer=reducer,
+        acc_dtype=acc,
+    )
     return pl.pallas_call(
         kernel,
         grid=(n_pad // bn,),
@@ -64,6 +202,17 @@ def segment_reduce(
             pl.BlockSpec((bn, v), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((num_segments, v), lambda i: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((num_segments, v), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((num_segments, v), acc),
         interpret=interpret,
     )(ids_p, vals_p)
+
+
+def segment_reduce_lanes(n: int, num_segments: int, v: int,
+                         reducer: str = "sum", dtype=jnp.float32,
+                         block_n: int | None = None) -> tuple[int, int]:
+    """(block_n, padded lane count) the kernel will process for ``n`` pairs —
+    the static half of the occupancy accounting in ``MapReduceStats``."""
+    if block_n is None:
+        block_n = choose_block_n(n, num_segments, v, reducer, dtype)
+    bn = min(block_n, max(n, 1))
+    return bn, -(-max(n, 1) // bn) * bn

@@ -1,0 +1,202 @@
+"""Differential harness: every engine agrees with a NumPy oracle.
+
+The full matrix — engine ∈ {eager, naive, pallas} × reducer ∈ {sum, min, max,
+prod} × value dtype ∈ {f32, bf16, i32} × key range ∈ {1, 8, 1000} — runs one
+MapReduce per cell over a fixed pair stream that includes negative ids,
+masked-out lanes and overflow keys (``>= K``), and asserts the dense result
+against a float64/int64 NumPy oracle.  A hash-target differential covers the
+``DistHashMap`` plan against a dict oracle, and dedicated cases cover empty
+shards (every lane masked) and all-overflow streams.
+
+Tolerances (documented, per dtype — engines differ in accumulation order and
+width, not in semantics):
+
+* ``i32``  — exact (bit-identical): every engine accumulates in int32.
+* ``f32``  — ``rtol=2e-5``: eager/naive use XLA's segmented reduce, pallas
+  accumulates through the kernel (one-hot matmul f32); same width, different
+  order.
+* ``bf16`` — ``rtol/atol=0.25``: eager/naive accumulate *in bf16* (the target
+  dtype), while the pallas kernel accumulates in f32 and rounds once at the
+  end; with ≤64 pairs per key the bf16 chain can drift by ~2^-8 per step.
+
+One module-level session serves all cells so executable caching across the
+matrix is itself exercised.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import BlazeSession, distribute, make_dist_hashmap
+from repro.core.reducers import get_reducer
+
+ENGINES = ("eager", "naive", "pallas")
+REDUCERS = ("sum", "min", "max", "prod")
+DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16, "i32": jnp.int32}
+KEY_RANGES = (1, 8, 1000)
+N_PAIRS = 64
+
+SESS = BlazeSession()
+
+_NP_FN = {
+    "sum": np.add,
+    "prod": np.multiply,
+    "min": np.minimum,
+    "max": np.maximum,
+}
+
+
+def _mapper(i, row, emit):
+    emit(row[0].astype(jnp.int32), row[1], mask=row[2] > 0)
+
+
+def _pair_stream(reducer: str, key_range: int, seed: int = 0):
+    """(keys, raw f32 values, mask) with negatives, overflow keys and masked
+    lanes baked in.  Values are integer-valued floats so the i32 cast is
+    exact, and prod values are confined to {±1, 2} (few 2s) so products stay
+    far from int32 overflow in every bucket."""
+    rng = np.random.RandomState(seed + key_range)
+    keys = rng.randint(-2, key_range + 2, N_PAIRS).astype(np.float32)
+    if reducer == "prod":
+        vals = rng.choice([1.0, -1.0], N_PAIRS).astype(np.float32)
+        vals[rng.rand(N_PAIRS) < 0.15] = 2.0
+    else:
+        vals = rng.randint(-8, 9, N_PAIRS).astype(np.float32)
+    mask = (rng.rand(N_PAIRS) > 0.2).astype(np.float32)
+    return keys, vals, mask
+
+
+def _oracle(keys, vals, mask, key_range, reducer, dtype):
+    """float64/int64 reference with the engine's drop semantics: masked lanes
+    and ids outside [0, K) never reach the accumulator."""
+    cast = np.asarray(jnp.asarray(vals).astype(dtype), np.float64)
+    red = get_reducer(reducer)
+    ident = float(np.asarray(red.identity(jnp.float32)).astype(np.float64)) \
+        if reducer in ("sum", "prod") else (
+            np.inf if reducer == "min" else -np.inf)
+    if dtype == jnp.int32 and reducer in ("min", "max"):
+        ident = float(
+            np.iinfo(np.int32).max if reducer == "min"
+            else np.iinfo(np.int32).min
+        )
+    out = np.full((key_range,), ident, np.float64)
+    fn = _NP_FN[reducer]
+    for k, v, m in zip(keys.astype(np.int64), cast, mask):
+        if m > 0 and 0 <= k < key_range:
+            out[k] = fn(out[k], v)
+    return out
+
+
+def _tolerance(dtype_name: str):
+    return {
+        "f32": dict(rtol=2e-5, atol=1e-5),
+        "bf16": dict(rtol=0.25, atol=0.25),
+        "i32": dict(rtol=0, atol=0),
+    }[dtype_name]
+
+
+@pytest.mark.parametrize("key_range", KEY_RANGES)
+@pytest.mark.parametrize("dtype_name", sorted(DTYPES))
+@pytest.mark.parametrize("reducer", REDUCERS)
+@pytest.mark.parametrize("engine", ENGINES)
+def test_engine_matches_oracle(engine, reducer, dtype_name, key_range):
+    dtype = DTYPES[dtype_name]
+    keys, vals, mask = _pair_stream(reducer, key_range)
+    rows = distribute(np.stack([keys, vals, mask], axis=1))
+    red = get_reducer(reducer)
+    target = jnp.full((key_range,), red.identity(dtype), dtype)
+    out, st = SESS.map_reduce(
+        rows, _mapper, reducer, target, engine=engine, return_stats=True
+    )
+    assert out.dtype == dtype
+    assert st.engine == engine
+    ref = _oracle(keys, vals, mask, key_range, reducer, dtype)
+    if dtype_name == "i32":
+        # exact: go through numpy int64 (jnp would round iinfo bounds to f32)
+        np.testing.assert_array_equal(
+            np.asarray(out, np.int64), ref.astype(np.int64)
+        )
+    else:
+        got = np.asarray(out, np.float64)
+        np.testing.assert_allclose(got, ref, **_tolerance(dtype_name))
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("reducer", ("sum", "min"))
+def test_empty_shard_leaves_target_identity(engine, reducer):
+    """Every lane masked out — the per-shard combine sees an empty stream and
+    the merged target must be exactly the identity it started as."""
+    keys = np.arange(N_PAIRS, dtype=np.float32) % 8
+    vals = np.ones(N_PAIRS, np.float32)
+    rows = distribute(np.stack([keys, vals, np.zeros(N_PAIRS, np.float32)], 1))
+    red = get_reducer(reducer)
+    target = jnp.full((8,), red.identity(jnp.float32), jnp.float32)
+    out = SESS.map_reduce(rows, _mapper, reducer, target, engine=engine)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(target))
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_nonfinite_value_on_masked_lane_never_leaks(engine):
+    """A NaN computed on a masked-out lane (the classic padded-row hazard)
+    must not contaminate any key under any engine."""
+    keys = np.array([0, 1, 2, 3], np.float32)
+    vals = np.array([1.0, np.nan, 2.0, np.inf], np.float32)
+    mask = np.array([1.0, 0.0, 1.0, 0.0], np.float32)
+    rows = distribute(np.stack([keys, vals, mask], 1))
+    out = SESS.map_reduce(
+        rows, _mapper, "sum", jnp.zeros((4,), jnp.float32), engine=engine
+    )
+    np.testing.assert_array_equal(np.asarray(out), [1.0, 0.0, 2.0, 0.0])
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_all_overflow_keys_dropped(engine):
+    """ids >= K and ids < 0 only — nothing may reach the accumulator."""
+    keys = np.concatenate(
+        [np.full(N_PAIRS // 2, 8.0), np.full(N_PAIRS // 2, -1.0)]
+    ).astype(np.float32)
+    vals = np.full(N_PAIRS, 7.0, np.float32)
+    rows = distribute(np.stack([keys, vals, np.ones(N_PAIRS, np.float32)], 1))
+    out = SESS.map_reduce(
+        rows, _mapper, "sum", jnp.zeros((8,), jnp.float32), engine=engine
+    )
+    np.testing.assert_array_equal(np.asarray(out), np.zeros(8, np.float32))
+
+
+@pytest.mark.parametrize("reducer", ("sum", "min", "max", "prod"))
+def test_hash_target_matches_dict_oracle(reducer):
+    """The DistHashMap plan (eager + naive) against a plain dict fold."""
+    keys, vals, mask = _pair_stream(reducer, 50, seed=7)
+    rows = distribute(np.stack([keys, vals, mask], axis=1))
+    want: dict = {}
+    fn = _NP_FN[reducer]
+    for k, v, m in zip(keys.astype(np.int64), vals.astype(np.float64), mask):
+        if m > 0:
+            want[int(k)] = fn(want[int(k)], v) if int(k) in want else v
+    for engine in ("eager", "naive", "pallas"):  # pallas falls back to eager
+        hm = make_dist_hashmap(SESS.mesh, 256, (), jnp.float32, reducer)
+        hm, st = SESS.map_reduce(
+            rows, _mapper, reducer, hm, engine=engine, return_stats=True
+        )
+        assert st.engine == ("eager" if engine == "pallas" else engine)
+        got = {int(k): float(v) for k, v in hm.to_dict().items()}
+        assert set(got) == set(want)
+        for k in want:
+            assert abs(got[k] - want[k]) < 1e-4, (engine, reducer, k)
+
+
+def test_pallas_occupancy_accounting():
+    """kernel_pairs counts only live in-range lanes; occupancy ∈ (0, 1]."""
+    keys, vals, mask = _pair_stream("sum", 8)
+    rows = distribute(np.stack([keys, vals, mask], axis=1))
+    _, st = SESS.map_reduce(
+        rows, _mapper, "sum", jnp.zeros((8,), jnp.float32),
+        engine="pallas", return_stats=True,
+    )
+    st = st.finalize()
+    live = int(
+        ((mask > 0) & (keys >= 0) & (keys < 8)).sum()
+    )
+    assert st.kernel_pairs == live
+    assert st.kernel_lanes >= N_PAIRS
+    assert 0.0 < st.kernel_occupancy <= 1.0
+    assert st.kernel_occupancy == pytest.approx(live / st.kernel_lanes)

@@ -91,6 +91,124 @@ def test_segment_reduce_vs_ref(n, v, k, bn):
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
 
 
+# -- generalized (monoid) segment-reduce ---------------------------------------
+
+
+def _np_segment(ids, vals, k, reducer):
+    fn = {"sum": np.add, "prod": np.multiply, "min": np.minimum,
+          "max": np.maximum}[reducer]
+    if np.issubdtype(vals.dtype, np.floating):
+        ident = {"sum": 0.0, "prod": 1.0, "min": np.inf, "max": -np.inf}[reducer]
+        acc = np.float64
+    else:
+        ident = {"sum": 0, "prod": 1, "min": np.iinfo(np.int32).max,
+                 "max": np.iinfo(np.int32).min}[reducer]
+        acc = np.int64
+    out = np.full((k,) + vals.shape[1:], ident, acc)
+    for i, s in enumerate(np.asarray(ids)):
+        if 0 <= s < k:
+            out[s] = fn(out[s], np.asarray(vals[i], acc))
+    return out
+
+
+@pytest.mark.parametrize("reducer", ["sum", "prod", "min", "max"])
+@pytest.mark.parametrize(
+    "n,v,k,bn",
+    [
+        (1000, 4, 8, 256),   # pair count not a multiple of the block
+        (1023, 2, 13, 128),  # K not a multiple of 8
+        (77, 3, 127, 16),    # K not a multiple of 8 or 128
+        (513, 1, 129, 64),   # K just past a lane boundary
+    ],
+)
+def test_segment_reduce_monoid_vs_numpy(reducer, n, v, k, bn):
+    ids = jnp.asarray(rng.randint(-2, k + 2, n).astype(np.int32))
+    if reducer == "prod":
+        vals = jnp.asarray(
+            rng.choice([1.0, -1.0, 0.5, 2.0], (n, v)).astype(np.float32)
+        )
+    else:
+        vals = t((n, v))
+    out = segment_reduce(ids, vals, k, reducer=reducer, block_n=bn)
+    ref = _np_segment(np.asarray(ids), np.asarray(vals), k, reducer)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float64), ref, rtol=2e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("reducer", ["sum", "min", "max", "prod"])
+def test_segment_reduce_int32_exact(reducer):
+    n, v, k = 333, 2, 11
+    ids = jnp.asarray(rng.randint(-1, k + 1, n).astype(np.int32))
+    if reducer == "prod":
+        vals = jnp.asarray(rng.choice([1, -1, 2], (n, v)).astype(np.int32))
+    else:
+        vals = jnp.asarray(rng.randint(-50, 50, (n, v)).astype(np.int32))
+    out = segment_reduce(ids, vals, k, reducer=reducer)
+    assert out.dtype == jnp.int32
+    ref = _np_segment(np.asarray(ids), np.asarray(vals), k, reducer)
+    np.testing.assert_array_equal(np.asarray(out, np.int64), ref)
+
+
+@pytest.mark.parametrize("n", [1, 7, 255, 1025])
+def test_segment_reduce_interpret_equals_segment_sum(n):
+    """Interpret-mode kernel ≡ jax.ops.segment_sum on the same drop mask."""
+    k = 9
+    ids = jnp.asarray(rng.randint(-1, k, n).astype(np.int32))
+    vals = t((n, 3))
+    out = segment_reduce(ids, vals, k, interpret=True)
+    safe = jnp.where(ids >= 0, ids, k)
+    want = jax.ops.segment_sum(vals, safe, num_segments=k + 1)[:k]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-4)
+
+
+def test_segment_reduce_autotune_and_lanes():
+    from repro.kernels.segment_reduce import (
+        choose_block_n,
+        segment_reduce_lanes,
+    )
+
+    # tiny working sets → max block; huge K → small block; floor respected
+    assert choose_block_n(100_000, 8, 4) == 2048
+    assert choose_block_n(100_000, 20_000, 1, "sum", np.int32) <= 64
+    assert choose_block_n(5, 8, 4) >= 8
+    bn, lanes = segment_reduce_lanes(1000, 8, 4)
+    assert lanes % bn == 0 and lanes >= 1000
+    # autotuned call agrees with the oracle
+    ids = jnp.asarray(rng.randint(0, 8, 1000).astype(np.int32))
+    vals = t((1000, 4))
+    out = segment_reduce(ids, vals, 8)  # block_n=None → choose_block_n
+    ref = R.segment_reduce_ref(ids, vals, 8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+def test_segment_reduce_nan_in_dropped_lane_stays_out():
+    """A non-finite value on a dropped lane (id<0 / id>=K) must not leak:
+    0·NaN = NaN through the one-hot matmul unless the lane is zeroed."""
+    ids = jnp.asarray(np.array([0, -1, 9], np.int32))  # -1 dropped, 9 >= K
+    vals = jnp.asarray(np.array([[1.0], [np.nan], [np.inf]], np.float32))
+    out = segment_reduce(ids, vals, 2, reducer="sum")
+    np.testing.assert_array_equal(np.asarray(out), [[1.0], [0.0]])
+
+
+def test_segment_reduce_empty_stream_returns_identity():
+    for reducer, ident in [("sum", 0.0), ("prod", 1.0), ("min", np.inf),
+                           ("max", -np.inf)]:
+        out = segment_reduce(
+            jnp.zeros((0,), jnp.int32), jnp.zeros((0, 3), jnp.float32), 4,
+            reducer=reducer,
+        )
+        assert out.shape == (4, 3)
+        np.testing.assert_array_equal(np.asarray(out), np.full((4, 3), ident))
+
+
+def test_segment_reduce_rejects_unknown_reducer():
+    ids = jnp.zeros((4,), jnp.int32)
+    vals = jnp.zeros((4, 1), jnp.float32)
+    with pytest.raises(ValueError, match="unknown reducer"):
+        segment_reduce(ids, vals, 2, reducer="mean")
+
+
 @pytest.mark.parametrize("n,d,k,bn", [(1000, 3, 5, 256), (777, 8, 13, 128),
                                       (64, 2, 2, 64)])
 def test_kmeans_assign_vs_ref(n, d, k, bn):

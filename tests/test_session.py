@@ -194,3 +194,147 @@ def test_gmm_one_compile_per_config():
     assert res.compiles == 4
     assert sess.stats.calls == 20
     assert sess.stats.cache_hits == 16
+
+
+# -- engine="auto" policy + pallas in the compile cache ------------------------
+
+
+def _dyn_key_mapper(i, x, emit):
+    # key comes from data → dynamic (no static-key fast path)
+    emit(x[0].astype(jnp.int32), x[1])
+
+
+def _pts_rows(n=64, kmod=8, seed=0):
+    rng = np.random.RandomState(seed)
+    rows = rng.randn(n, 2).astype(np.float32)
+    rows[:, 0] = rng.randint(0, kmod, n)
+    return rows
+
+
+def test_auto_picks_pallas_for_small_dense_key_range():
+    from repro.core.session import PALLAS_AUTO_MAX_KEYS
+
+    sess = BlazeSession()
+    pts = distribute(_pts_rows())
+    _, st = sess.map_reduce(
+        pts, _dyn_key_mapper, "sum", jnp.zeros((8,), jnp.float32),
+        engine="auto", return_stats=True,
+    )
+    assert st.engine == "pallas"
+    # beyond the VMEM-resident bound → eager
+    _, st = sess.map_reduce(
+        pts, _dyn_key_mapper, "sum",
+        jnp.zeros((PALLAS_AUTO_MAX_KEYS + 1,), jnp.float32),
+        engine="auto", return_stats=True,
+    )
+    assert st.engine == "eager"
+
+
+def test_auto_falls_back_for_hash_targets_and_custom_reducers():
+    from repro.core import custom_reducer, make_dist_hashmap
+
+    sess = BlazeSession()
+    pts = distribute(_pts_rows())
+    hm = make_dist_hashmap(sess.mesh, 128, (), jnp.float32, "sum")
+    _, st = sess.map_reduce(
+        pts, _dyn_key_mapper, "sum", hm, engine="auto", return_stats=True
+    )
+    assert st.engine == "eager"
+    # explicit pallas on a hash target also falls back (no dense accumulator)
+    hm2 = make_dist_hashmap(sess.mesh, 128, (), jnp.float32, "sum")
+    _, st = sess.map_reduce(
+        pts, _dyn_key_mapper, "sum", hm2, engine="pallas", return_stats=True
+    )
+    assert st.engine == "eager"
+    # custom reducer has no pallas_segment impl → auto resolves to eager
+    maxish = custom_reducer(
+        "maxish", jnp.maximum, lambda dt: jnp.asarray(-jnp.inf, dt)
+    )
+    _, st = sess.map_reduce(
+        pts, _dyn_key_mapper, maxish,
+        jnp.full((8,), -jnp.inf, jnp.float32),
+        engine="auto", return_stats=True,
+    )
+    assert st.engine == "eager"
+    # ... and explicit pallas with a custom reducer also reports the eager
+    # plan that actually runs (and reuses its executable, not a duplicate)
+    _, st = sess.map_reduce(
+        pts, _dyn_key_mapper, maxish,
+        jnp.full((8,), -jnp.inf, jnp.float32),
+        engine="pallas", return_stats=True,
+    )
+    assert st.engine == "eager"
+    assert st.compiles == 0 and st.cache_hits == 1
+
+
+def test_unknown_engine_rejected():
+    import pytest
+
+    sess = BlazeSession()
+    with pytest.raises(ValueError, match="unknown engine"):
+        sess.map_reduce(
+            DistRange(0, 8, 1), _sq_mapper, "sum", jnp.zeros((4,), jnp.int32),
+            engine="spark",
+        )
+
+
+def test_compile_cache_key_includes_engine_choice():
+    sess = BlazeSession()
+    pts = distribute(_pts_rows())
+    t8 = jnp.zeros((8,), jnp.float32)
+    sess.map_reduce(pts, _dyn_key_mapper, "sum", t8, engine="eager",
+                    return_stats=True)  # compile 1
+    sess.map_reduce(pts, _dyn_key_mapper, "sum", t8, engine="pallas",
+                    return_stats=True)  # compile 2
+    # auto resolves to pallas for K=8 → must HIT the pallas entry, not compile
+    _, st = sess.map_reduce(
+        pts, _dyn_key_mapper, "sum", t8, engine="auto", return_stats=True
+    )
+    assert st.engine == "pallas"
+    assert st.compiles == 0 and st.cache_hits == 1
+    assert sess.stats.compiles == 2
+    assert sess.cache_info()["entries"] == 2
+
+
+def test_pallas_compiles_stay_flat_across_10_iterations():
+    sess = BlazeSession()
+    pts = distribute(_pts_rows())
+    t8 = jnp.zeros((8,), jnp.float32)
+    for i in range(10):
+        _, st = sess.map_reduce(
+            pts, _dyn_key_mapper, "sum", t8, engine="pallas",
+            return_stats=True,
+        )
+        assert st.compiles == (1 if i == 0 else 0)
+        assert st.cache_hits == (0 if i == 0 else 1)
+        stf = st.finalize()
+        assert stf.kernel_block_n is not None
+        assert 0.0 < stf.kernel_occupancy <= 1.0
+    assert sess.stats.compiles == 1
+    assert sess.stats.cache_hits == 9
+
+
+def test_pagerank_pallas_10_iters_one_compile_per_config():
+    """Mirror of the eager PageRank count: pallas keys the same cache."""
+    sess = BlazeSession()
+    edges = rmat_edges(6, 8, seed=3)  # 64 nodes
+    res = pagerank(edges, 64, tol=0.0, max_iters=10, engine="pallas",
+                   session=sess)
+    assert res.iterations == 10
+    assert res.compiles == 3
+    assert sess.stats.calls == 30
+    assert sess.stats.cache_hits == 27
+    ref = pagerank_reference(edges, 64, tol=0.0, max_iters=10)
+    assert float(np.abs(res.scores - ref).max() / ref.max()) < 1e-4
+
+
+def test_kmeans_pallas_matches_eager_and_reference():
+    pts, _ = cluster_points(2000, 3, 4, seed=0)
+    init = pts[:4].copy()
+    sess = BlazeSession()
+    res = kmeans(pts, 4, init_centers=init, tol=0.0, max_iters=10,
+                 engine="pallas", session=sess)
+    assert res.iterations == 10
+    assert res.compiles == 2
+    ref_centers, _ = kmeans_reference(pts, init, tol=0.0, max_iters=10)
+    assert float(np.abs(res.centers - ref_centers).max()) < 1e-2
