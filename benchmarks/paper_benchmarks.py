@@ -6,7 +6,9 @@ reduce at the destination), which isolates the *algorithmic* difference the
 paper attributes to eager reduction + compact wire + dense fast path.  See
 DESIGN.md §7.
 
-Scale: sized for seconds-per-benchmark on CPU (BENCH_SCALE=big for 10×).
+Scale: sized for seconds-per-benchmark on CPU.  ``BENCH_SCALE=big`` for 10×,
+``BENCH_SCALE=smoke`` for the CI benchmark-smoke job (tiny sizes, counters
+over throughput — see ``program_fusion``'s dispatches/compiles columns).
 """
 from __future__ import annotations
 
@@ -33,7 +35,11 @@ from repro.core.serialization import message_sizes
 from repro.data.synthetic import cluster_points, rmat_edges, zipf_corpus
 
 BIG = os.environ.get("BENCH_SCALE") == "big"
+SMOKE = os.environ.get("BENCH_SCALE") == "smoke"
 S = 10 if BIG else 1
+# smoke mode divides the workload sizes that dominate wall-clock; every
+# benchmark still runs, so the CI job exercises each figure's code path.
+D = 20 if SMOKE else 1
 
 # One session for all iterative benchmarks: executables compile on the warmup
 # run and every timed run is pure dispatch — the resident-hot-loop setting the
@@ -53,7 +59,7 @@ def _timeit(fn, repeats=3):
 
 def table1_pi():
     """Monte-Carlo π: Blaze MapReduce vs hand-optimised parallel loop."""
-    n = 1_000_000 * S
+    n = 1_000_000 * S // D
     t_mr = _timeit(lambda: estimate_pi(n))
     t_hand = _timeit(lambda: estimate_pi_handrolled(n))
     return [
@@ -64,7 +70,7 @@ def table1_pi():
 
 
 def fig4_wordcount():
-    lines, _ = zipf_corpus(2000 * S, 16, 20000, seed=0)
+    lines, _ = zipf_corpus(2000 * S // D + 100, 16, 20000, seed=0)
     n_words = int((lines >= 0).sum())
     rows = []
     stats = {}
@@ -111,7 +117,7 @@ def fig4_wordcount():
 
 
 def fig5_pagerank():
-    scale = 12 if BIG else 10
+    scale = 12 if BIG else (8 if SMOKE else 10)
     edges = rmat_edges(scale, 16, seed=0)  # 2^scale nodes, 16·2^scale links
     n = 1 << scale
     rows = []
@@ -133,7 +139,7 @@ def fig5_pagerank():
 
 
 def fig6_kmeans():
-    pts, _ = cluster_points(200_000 * S, 3, 5, seed=0)
+    pts, _ = cluster_points(200_000 * S // D, 3, 5, seed=0)
     init = pts[:5].copy()
     rows = []
     for engine in ("eager", "pallas", "naive"):
@@ -148,17 +154,18 @@ def fig6_kmeans():
     from repro.kernels.ops import kmeans_assign
 
     c = jnp.asarray(init)
+    n_assign = 20000 // D
     t = _timeit(lambda: jax.block_until_ready(
-        kmeans_assign(jnp.asarray(pts[:20000]), c, impl="pallas")[1]))
+        kmeans_assign(jnp.asarray(pts[:n_assign]), c, impl="pallas")[1]))
     rows.append(
-        ("fig6_kmeans_pallas_assign_20k", t * 1e6,
-         f"{20000/t/1e6:.2f}Mpoints/s(interpret)")
+        (f"fig6_kmeans_pallas_assign_{n_assign // 1000}k", t * 1e6,
+         f"{n_assign/t/1e6:.2f}Mpoints/s(interpret)")
     )
     return rows
 
 
 def fig7_gmm():
-    pts, _ = cluster_points(20_000 * S, 3, 5, seed=1)
+    pts, _ = cluster_points(20_000 * S // D + 500, 3, 5, seed=1)
     init = pts[:5].copy()
     t = _timeit(lambda: gmm_em(pts, 5, init_mu=init, max_iters=3, tol=0,
                                session=SESSION)) / 3
@@ -166,7 +173,7 @@ def fig7_gmm():
 
 
 def fig8_knn():
-    pts, _ = cluster_points(500_000 * S, 4, 3, seed=2)
+    pts, _ = cluster_points(500_000 * S // D, 4, 3, seed=2)
     q = np.zeros(4, np.float32)
     t_topk = _timeit(lambda: knn(pts, q, 100))
     t_sort = _timeit(lambda: knn_full_sort(pts, q, 100))
@@ -227,8 +234,9 @@ def fig10_cognitive():
 def session_reuse():
     """Compiled-executable reuse across iterations (the session tentpole):
     first iteration pays compile, steady state is pure dispatch."""
-    edges = rmat_edges(10, 16, seed=0)
-    n = 1 << 10
+    scale = 8 if SMOKE else 10
+    edges = rmat_edges(scale, 16, seed=0)
+    n = 1 << scale
     rows = []
 
     sess = BlazeSession()
@@ -252,7 +260,7 @@ def session_reuse():
         )
     )
 
-    pts, _ = cluster_points(50_000, 3, 5, seed=0)
+    pts, _ = cluster_points(50_000 // D, 3, 5, seed=0)
     init = pts[:5].copy()
     sess2 = BlazeSession()
     t0 = time.perf_counter()
@@ -267,6 +275,66 @@ def session_reuse():
             f"compiles={sess2.stats.compiles};"
             f"speedup={t_first/t_steady:.1f}x",
         )
+    )
+    return rows
+
+
+def program_fusion():
+    """Fused iteration programs vs per-op dispatch (the program tentpole):
+    the same 10 iterations as per-op MapReduce calls and as ONE
+    ``session.program`` executable driven by ``run_loop(unroll=5)``.  The
+    derived column publishes the assertable counters — program compiles,
+    executable dispatches and host syncs per algorithm — which the CI
+    benchmark-smoke job lifts into its job summary."""
+    iters, unroll = 10, 5
+    rows = []
+
+    def run_both(name, fn):
+        # One cold run per mode (compile included for both — per-op compiles
+        # its 3–4 executables, program compiles 1 fused one), counters from
+        # the same run.
+        for mode, unr in (("per_op", 1), ("program", unroll)):
+            sess = BlazeSession()
+            t0 = time.perf_counter()
+            res = fn(mode, unr, sess)
+            t = (time.perf_counter() - t0) / iters
+            rows.append(
+                (
+                    f"program_{name}_{mode}", t * 1e6,
+                    f"iters={res.iterations};compiles={res.compiles};"
+                    f"program_compiles={res.program_compiles};"
+                    f"dispatches={res.dispatches};host_syncs={res.host_syncs}",
+                )
+            )
+
+    scale = 8 if SMOKE else 10
+    edges = rmat_edges(scale, 16, seed=0)
+    n = 1 << scale
+    run_both(
+        "pagerank",
+        lambda m, u, s: pagerank(
+            edges, n, tol=0, max_iters=iters, mode=m, unroll=u, session=s
+        ),
+    )
+
+    pts, _ = cluster_points(50_000 // D, 3, 5, seed=0)
+    init = pts[:5].copy()
+    run_both(
+        "kmeans",
+        lambda m, u, s: kmeans(
+            pts, 5, init_centers=init, tol=0, max_iters=iters, mode=m,
+            unroll=u, session=s,
+        ),
+    )
+
+    gpts, _ = cluster_points(5_000 // D + 500, 3, 5, seed=1)
+    ginit = gpts[:5].copy()
+    run_both(
+        "gmm",
+        lambda m, u, s: gmm_em(
+            gpts, 5, init_mu=ginit, tol=0, max_iters=iters, mode=m,
+            unroll=u, session=s,
+        ),
     )
     return rows
 
@@ -297,5 +365,6 @@ ALL = [
     fig9_memory,
     fig10_cognitive,
     session_reuse,
+    program_fusion,
     sec232_serialization,
 ]

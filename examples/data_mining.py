@@ -35,6 +35,17 @@ gm = gmm_em(pts2, 3, max_iters=20, session=sess)
 print(f"GMM: {gm.iterations} iters, loglik={gm.log_likelihood:.1f}, "
       f"alpha={gm.alpha.round(3).tolist()}, compiles={gm.compiles}")
 
+# Fused iteration program: the whole PageRank iteration (3 MapReduce ops +
+# the score-update glue) as ONE executable, 5 iterations per dispatch --------
+pr2 = pagerank(edges, 1 << 10, tol=1e-5, session=sess, mode="program",
+               unroll=5)
+assert np.abs(pr2.scores - res.scores).max() < 1e-5
+print(f"PageRank (fused program): {pr2.iterations} iters in "
+      f"{pr2.dispatches} dispatches / {pr2.host_syncs} host syncs, "
+      f"program_compiles={pr2.program_compiles} "
+      f"(per-op loop above: {res.dispatches} dispatches, "
+      f"{res.host_syncs} syncs)")
+
 # 100 nearest neighbours --------------------------------------------------------
 pts3, _ = cluster_points(200_000, 4, 3, seed=2)
 nn = knn(pts3, np.zeros(4, np.float32), k=100, session=sess)

@@ -12,6 +12,7 @@ from repro.core.containers import (
     topk,
 )
 from repro.core.mapreduce import MapReduceStats, map_reduce
+from repro.core.program import LocalVector, LoopInfo, Program, ProgramStats
 from repro.core.session import (
     PALLAS_AUTO_MAX_KEYS,
     BlazeSession,
@@ -31,7 +32,11 @@ __all__ = [
     "DistHashMap",
     "DistRange",
     "DistVector",
+    "LocalVector",
+    "LoopInfo",
     "MapReduceStats",
+    "Program",
+    "ProgramStats",
     "Reducer",
     "SessionStats",
     "collect",

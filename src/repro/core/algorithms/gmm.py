@@ -16,6 +16,14 @@ lowers to a per-device dense partial + one ``psum`` — the hand-written plan.
 segment-reduce kernel.
 Points are stored distributedly; per-point state (densities/memberships) lives
 beside the point in one DistVector of rows ``[x | p-or-w]``.
+
+``mode="program"`` fuses all six ops of one EM round — two ``ctx.foreach``
+elementwise maps (whose per-point results stay on-shard as ``LocalVector``s,
+never crossing the wire), four MapReduce collectives, and the M-step glue
+(``jnp.linalg.inv``/``slogdet`` on the tiny [K, d, d] mixture state) — into
+ONE executable via ``session.program``, with ``unroll`` EM rounds per
+dispatch (``session.run_loop``).  ``mode="per_op"`` keeps the paper-shaped
+six-dispatch loop with its per-round host syncs.
 """
 from __future__ import annotations
 
@@ -100,7 +108,10 @@ class GMMResult:
     iterations: int
     converged: bool
     shuffle_bytes_per_iter: int
-    compiles: int = 0  # executables compiled across ALL iterations
+    compiles: int = 0  # map_reduce executables compiled across ALL iterations
+    program_compiles: int = 0  # fused-program executables (mode="program")
+    dispatches: int = 0  # executable launches across the loop
+    host_syncs: int = 0  # blocking host materialisations across the loop
 
 
 def gmm_em(
@@ -112,9 +123,13 @@ def gmm_em(
     max_iters: int = 50,
     mesh: Mesh | None = None,
     engine: str = "eager",
+    mode: str = "per_op",
+    unroll: int = 1,
     seed: int = 0,
     session: BlazeSession | None = None,
 ) -> GMMResult:
+    if mode not in ("per_op", "program"):
+        raise ValueError(f"unknown mode {mode!r}; choose 'per_op' or 'program'")
     sess, mesh = resolve(session, mesh)
     n, d = points.shape
     rng = np.random.RandomState(seed)
@@ -127,6 +142,79 @@ def gmm_em(
     rows0 = np.concatenate([points, np.zeros((n, k), np.float32)], axis=1)
     rows_v = distribute(rows0.astype(np.float32), mesh)
     compiles0 = sess.stats.compiles
+    dispatches0 = sess.stats.dispatches
+    syncs0 = sess.stats.host_syncs
+
+    if mode == "program":
+        eye = jnp.eye(d, dtype=jnp.float32)
+
+        def step(ctx, s):
+            alpha_, mu_, sigma_ = s["alpha"], s["mu"], s["sigma"]
+            # _gauss_env, on-device (K is tiny; inv/slogdet fuse into the step)
+            prec = jnp.linalg.inv(sigma_).astype(jnp.float32)
+            logdet = jnp.linalg.slogdet(sigma_)[1]
+            logcoef = (
+                -0.5 * (d * jnp.log(2.0 * jnp.pi) + logdet)
+            ).astype(jnp.float32)
+            env = (alpha_, mu_, prec, logcoef)
+            rows_p = ctx.foreach(rows_v, density_fn, env=env)  # op 1
+            ll = ctx.map_reduce(  # op 6 (current model, reads the p-block)
+                rows_p, loglik_mapper, "sum", jnp.zeros((1,), jnp.float32),
+                engine=engine, env=alpha_,
+            )[0]
+            rows_w = ctx.foreach(rows_p, membership_fn, env=env)  # op 2
+            nk = ctx.map_reduce(  # op 3
+                rows_w, nk_mapper, "sum", jnp.zeros((k,), jnp.float32),
+                engine=engine, env=mu_,
+            )
+            musum = ctx.map_reduce(  # op 4
+                rows_w, musum_mapper, "sum", jnp.zeros((k, d), jnp.float32),
+                engine=engine, env=mu_,
+            )
+            nk_c = jnp.maximum(nk, 1e-8)
+            new_mu = musum / nk_c[:, None]
+            sigsum = ctx.map_reduce(  # op 5
+                rows_w, sigmasum_mapper, "sum",
+                jnp.zeros((k, d, d), jnp.float32),
+                engine=engine, env=new_mu,
+            )
+            new_sigma = sigsum / nk_c[:, None, None] + 1e-4 * eye
+            return {
+                "alpha": (nk_c / n).astype(jnp.float32),
+                "mu": new_mu,
+                "sigma": new_sigma,
+                "ll": ll,
+                "prev_ll": s["ll"],
+            }
+
+        def cond(s):
+            ll_, prev = float(s["ll"]), float(s["prev_ll"])
+            return abs(ll_ - prev) < tol * max(1.0, abs(prev))
+
+        prog = sess.program(step, mesh=mesh)
+        state = {
+            "alpha": jnp.asarray(alpha),
+            "mu": jnp.asarray(mu),
+            "sigma": jnp.asarray(sigma),
+            "ll": jnp.asarray(-jnp.inf, jnp.float32),
+            "prev_ll": jnp.asarray(-jnp.inf, jnp.float32),
+        }
+        state, info = sess.run_loop(
+            prog, state, cond=cond, max_iters=max_iters, unroll=unroll,
+        )
+        return GMMResult(
+            alpha=np.asarray(state["alpha"]),
+            mu=np.asarray(state["mu"]),
+            sigma=np.asarray(state["sigma"]),
+            log_likelihood=float(state["ll"]),
+            iterations=info.iterations,
+            converged=info.converged,
+            shuffle_bytes_per_iter=0,
+            compiles=sess.stats.compiles - compiles0,
+            program_compiles=info.compiles,
+            dispatches=sess.stats.dispatches - dispatches0,
+            host_syncs=sess.stats.host_syncs - syncs0,
+        )
 
     prev_ll, it, converged, stats = -np.inf, 0, False, None
     for it in range(1, max_iters + 1):
@@ -146,8 +234,8 @@ def gmm_em(
             rows_w, musum_mapper, "sum", jnp.zeros((k, d), jnp.float32),
             mesh=mesh, engine=engine, env=env[1], return_stats=True,
         )
-        nk_np = np.maximum(np.asarray(nk), 1e-8)
-        new_mu = np.asarray(musum) / nk_np[:, None]
+        nk_np = np.maximum(np.asarray(sess.host_value(nk)), 1e-8)
+        new_mu = np.asarray(sess.host_value(musum)) / nk_np[:, None]
         sigsum = sess.map_reduce(  # op 5
             rows_w, sigmasum_mapper, "sum", jnp.zeros((k, d, d), jnp.float32),
             mesh=mesh, engine=engine, env=jnp.asarray(new_mu), return_stats=False,
@@ -155,11 +243,11 @@ def gmm_em(
         alpha = (nk_np / n).astype(np.float32)
         mu = new_mu.astype(np.float32)
         sigma = (
-            np.asarray(sigsum) / nk_np[:, None, None]
+            np.asarray(sess.host_value(sigsum)) / nk_np[:, None, None]
             + 1e-4 * np.eye(d, dtype=np.float32)
         ).astype(np.float32)
 
-        ll = float(ll)
+        ll = float(np.asarray(sess.host_value(ll)))
         if abs(ll - prev_ll) < tol * max(1.0, abs(prev_ll)):
             converged = True
             break
@@ -171,6 +259,8 @@ def gmm_em(
         iterations=it, converged=converged,
         shuffle_bytes_per_iter=fs.shuffle_payload_bytes if fs else 0,
         compiles=sess.stats.compiles - compiles0,
+        dispatches=sess.stats.dispatches - dispatches0,
+        host_syncs=sess.stats.host_syncs - syncs0,
     )
 
 

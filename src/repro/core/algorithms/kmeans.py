@@ -8,6 +8,12 @@ exactly as in the paper.  Centres are threaded via ``env``.
 ``engine=`` accepts ``"eager" | "pallas" | "naive" | "auto"``: with pallas
 (or auto, since K is small) the per-shard sums-and-counts combine runs
 through the segment-reduce kernel's VMEM accumulator.
+
+``mode="program"`` fuses the assignment MapReduce *and* the serial
+refinement glue into one executable (``session.program``) and runs
+``unroll`` iterations per dispatch device-resident (``session.run_loop``):
+1 program compile, ``≤ ⌈iters/unroll⌉`` dispatches/host-syncs, vs one
+dispatch + one sync per iteration in ``mode="per_op"``.
 """
 from __future__ import annotations
 
@@ -39,7 +45,10 @@ class KMeansResult:
     converged: bool
     inertia: float
     shuffle_bytes_per_iter: int
-    compiles: int = 0  # executables compiled across ALL iterations
+    compiles: int = 0  # map_reduce executables compiled across ALL iterations
+    program_compiles: int = 0  # fused-program executables (mode="program")
+    dispatches: int = 0  # executable launches across the loop
+    host_syncs: int = 0  # blocking host materialisations across the loop
 
 
 def kmeans(
@@ -52,9 +61,13 @@ def kmeans(
     mesh: Mesh | None = None,
     engine: str = "eager",
     wire: str = "none",
+    mode: str = "per_op",
+    unroll: int = 1,
     seed: int = 0,
     session: BlazeSession | None = None,
 ) -> KMeansResult:
+    if mode not in ("per_op", "program"):
+        raise ValueError(f"unknown mode {mode!r}; choose 'per_op' or 'program'")
     sess, mesh = resolve(session, mesh)
     if isinstance(points, DistVector):
         pts_v = points
@@ -69,6 +82,47 @@ def kmeans(
         ]
     centers = jnp.asarray(init_centers, jnp.float32)
     compiles0 = sess.stats.compiles
+    dispatches0 = sess.stats.dispatches
+    syncs0 = sess.stats.host_syncs
+
+    if mode == "program":
+
+        def step(ctx, s):
+            c = s["centers"]
+            sums = ctx.map_reduce(
+                pts_v, assign_mapper, "sum",
+                jnp.zeros((k, dim + 1), jnp.float32),
+                engine=engine, wire=wire, env=c,
+            )
+            counts = jnp.maximum(sums[:, dim:], 1.0)
+            new_c = sums[:, :dim] / counts  # serial refinement step, fused
+            move = jnp.max(jnp.sum((new_c - c) ** 2, axis=1))
+            return {"centers": new_c, "move": move}
+
+        prog = sess.program(step, mesh=mesh)
+        state = {"centers": centers, "move": jnp.asarray(jnp.inf, jnp.float32)}
+        state, info = sess.run_loop(
+            prog, state, cond=lambda s: float(s["move"]) < tol * tol,
+            max_iters=max_iters, unroll=unroll,
+        )
+        centers = state["centers"]
+        inertia = sess.map_reduce(
+            pts_v, inertia_mapper, "sum", jnp.zeros((1,), jnp.float32),
+            mesh=mesh, engine=engine, env=centers,
+        )[0]
+        return KMeansResult(
+            centers=np.asarray(centers),
+            iterations=info.iterations,
+            converged=info.converged,
+            inertia=float(inertia),
+            shuffle_bytes_per_iter=0,
+            compiles=sess.stats.compiles - compiles0,
+            program_compiles=info.compiles,
+            # session delta, not info.dispatches: includes the final per-op
+            # inertia pass, so per_op and program rows compare like-for-like
+            dispatches=sess.stats.dispatches - dispatches0,
+            host_syncs=sess.stats.host_syncs - syncs0,
+        )
 
     it, converged, stats = 0, False, None
     for it in range(1, max_iters + 1):
@@ -78,7 +132,9 @@ def kmeans(
         )
         counts = jnp.maximum(sums[:, dim:], 1.0)
         new_centers = sums[:, :dim] / counts  # serial refinement step
-        move = float(jnp.max(jnp.sum((new_centers - centers) ** 2, axis=1)))
+        move = float(np.asarray(sess.host_value(
+            jnp.max(jnp.sum((new_centers - centers) ** 2, axis=1))
+        )))
         centers = new_centers
         if move < tol * tol:
             converged = True
@@ -97,6 +153,8 @@ def kmeans(
         inertia=float(inertia),
         shuffle_bytes_per_iter=fs.shuffle_payload_bytes if fs else 0,
         compiles=sess.stats.compiles - compiles0,
+        dispatches=sess.stats.dispatches - dispatches0,
+        host_syncs=sess.stats.host_syncs - syncs0,
     )
 
 

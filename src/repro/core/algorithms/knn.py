@@ -18,6 +18,11 @@ from repro.core import DistVector, distribute, topk
 from repro.core.session import BlazeSession
 
 
+def _neg_sq_dist(x, q):
+    """topk score: negative squared Euclidean distance to the query ``q``."""
+    return -jnp.sum((x - q) ** 2)
+
+
 @dataclasses.dataclass
 class KNNResult:
     neighbors: np.ndarray  # [k, dim]
@@ -49,11 +54,9 @@ def knn(
             points.astype(np.float32)
         )
     q = jnp.asarray(query, jnp.float32)
-
-    def score(x):
-        return -jnp.sum((x - q) ** 2)
-
-    nbrs = topk(pts_v, k, score_fn=score, mesh=mesh)
+    # Query goes through env (a traced operand), keeping the topk executable
+    # memoized across calls with different query points.
+    nbrs = topk(pts_v, k, score_fn=_neg_sq_dist, mesh=mesh, env=q)
     d = np.sqrt(((nbrs - np.asarray(query)[None]) ** 2).sum(1))
     n_shards = 1 if mesh is None else mesh.shape.get("data", 1)
     return KNNResult(neighbors=nbrs, distances=d, wire_candidates=k * max(n_shards, 1))

@@ -221,13 +221,24 @@ class DistHashMap:
     def n_shards(self) -> int:
         return self.table.keys.shape[0]
 
-    def to_dict(self) -> dict[int, np.ndarray]:
-        """Host-side materialisation (the paper's ``collect``)."""
+    def items(self) -> tuple[np.ndarray, np.ndarray]:
+        """Live entries as host arrays ``(keys [n], vals [n, ...])``.
+
+        Fully vectorised (one mask + ``flatnonzero`` over the flattened
+        table — no Python loop over slots), so benchmarks and bulk consumers
+        can take the arrays directly instead of round-tripping a dict.
+        Entry order is table order, not key order.
+        """
         keys = np.asarray(jax.device_get(self.table.keys)).reshape(-1)
         vals = np.asarray(jax.device_get(self.table.vals))
         vals = vals.reshape((-1,) + vals.shape[2:])
-        live = keys != EMPTY_KEY
-        return {int(k): vals[i] for i, k in enumerate(keys) if live[i]}
+        live = np.flatnonzero(keys != EMPTY_KEY)
+        return keys[live], vals[live]
+
+    def to_dict(self) -> dict[int, np.ndarray]:
+        """Host-side materialisation (the paper's ``collect``)."""
+        keys, vals = self.items()
+        return dict(zip(keys.tolist(), vals))
 
     def size(self) -> int:
         keys = np.asarray(jax.device_get(self.table.keys))
@@ -352,37 +363,73 @@ def foreach(v: DistVector, fn: Callable, env=None) -> DistVector:
     return DistVector(out, v.n)
 
 
+_TOPK_CACHE: dict = {}
+_TOPK_CACHE_MAX = 64  # fresh-closure callers evict oldest instead of leaking
+
+
+def _topk_local(score_fn, kk: int, shards: int, has_env: bool):
+    """Memoized per-shard top-k executable.
+
+    The old implementation built a fresh ``@jax.jit`` closure on every call,
+    so every ``topk`` re-traced and re-compiled.  The executable is keyed on
+    everything that shapes the plan — ``(score_fn, kk, shards, has_env)``
+    here plus jit's own signature on the operand shapes; ``nvalid`` and
+    ``env`` are traced operands, so varying ``v.n`` or the query does not
+    retrace.  Repeated calls are dispatch-only (asserted in
+    ``tests/test_program.py``).
+    """
+    key = (score_fn, kk, shards, has_env)
+    if key not in _TOPK_CACHE:
+        if len(_TOPK_CACHE) >= _TOPK_CACHE_MAX:
+            _TOPK_CACHE.pop(next(iter(_TOPK_CACHE)))
+
+        @jax.jit
+        def _local(data, nvalid, env):
+            def per_shard(x, base):
+                if score_fn is None:
+                    scores = x.astype(jnp.float32)
+                elif has_env:
+                    scores = jax.vmap(lambda r: score_fn(r, env))(x)
+                else:
+                    scores = jax.vmap(score_fn)(x)
+                idx_in = jnp.arange(x.shape[0]) + base
+                scores = jnp.where(idx_in < nvalid, scores, -jnp.inf)
+                s, i = jax.lax.top_k(scores, kk)
+                return s, jnp.take(x, i, axis=0)
+
+            per = data.shape[0] // shards
+            xs = data.reshape((shards, per) + data.shape[1:])
+            bases = jnp.arange(shards) * per
+            return jax.vmap(per_shard)(xs, bases)
+
+        _TOPK_CACHE[key] = _local
+    return _TOPK_CACHE[key]
+
+
 def topk(
     v: DistVector,
     k: int,
-    score_fn: Callable[[Array], Array] | None = None,
+    score_fn: Callable[..., Array] | None = None,
     mesh: Mesh | None = None,
+    env=None,
 ) -> np.ndarray:
     """Paper's DistVector.topk: local top-k per shard, then top-k of candidates.
 
     O(n + k log k) work and O(k · n_shards) wire bytes — the shuffle moves only
     locally-selected candidates, never the full vector (eager reduction again,
-    with ``top_k`` as the monoid).
+    with ``top_k`` as the monoid).  The local-selection executable is memoized
+    (``_topk_local``): callers compile once per (shape, dtype, k, score_fn)
+    configuration.  As with ``foreach``/``map_reduce``, call-varying state
+    (the kNN query point) goes through ``env`` — ``score_fn(x, env)`` — so a
+    static module-level ``score_fn`` keeps the executable cached across
+    queries.
     """
     mesh = mesh or data_mesh()
     shards = _nshards(mesh)
     kk = min(k, v.data.shape[0] // shards)
 
-    @jax.jit
-    def _local(data, nvalid):
-        def per_shard(x, base):
-            scores = jax.vmap(score_fn)(x) if score_fn else x.astype(jnp.float32)
-            idx_in = jnp.arange(x.shape[0]) + base
-            scores = jnp.where(idx_in < nvalid, scores, -jnp.inf)
-            s, i = jax.lax.top_k(scores, kk)
-            return s, jnp.take(x, i, axis=0)
-
-        per = data.shape[0] // shards
-        xs = data.reshape((shards, per) + data.shape[1:])
-        bases = jnp.arange(shards) * per
-        return jax.vmap(per_shard)(xs, bases)
-
-    s, cand = _local(v.data, v.n)  # [shards, kk], [shards, kk, ...]
+    fn = _topk_local(score_fn, kk, shards, env is not None)
+    s, cand = fn(v.data, jnp.int32(v.n), env)
     s = np.asarray(jax.device_get(s)).reshape(-1)
     cand = np.asarray(jax.device_get(cand))
     cand = cand.reshape((-1,) + cand.shape[2:])

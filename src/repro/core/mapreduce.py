@@ -82,6 +82,8 @@ class MapReduceStats:
     overflow: Any = None  # hash-table / bucket drops
     compiles: int = 0  # 1 iff this call lowered+compiled a new executable
     cache_hits: int = 0  # 1 iff this call reused a session-cached executable
+    dispatches: int = 1  # executable launches this call (always 1 standalone;
+    #                      fused programs amortise N ops over one dispatch)
     # engine="pallas" only: the segment-reduce kernel's launch accounting.
     kernel_block_n: int | None = None  # pair-block size the kernel ran with
     kernel_lanes: int | None = None  # padded pair-lanes processed (global)
@@ -109,6 +111,7 @@ class MapReduceStats:
             overflow=_get(self.overflow),
             compiles=self.compiles,
             cache_hits=self.cache_hits,
+            dispatches=self.dispatches,
             kernel_block_n=self.kernel_block_n,
             kernel_lanes=self.kernel_lanes,
             kernel_pairs=kernel_pairs,
@@ -248,6 +251,94 @@ def bucket_by_dest(
 
 
 # ---------------------------------------------------------------------------
+# Collectives indirection
+#
+# A shard stage never names ``jax.lax`` collectives directly: it goes through
+# a small collectives object, so the *same* stage body serves two tracing
+# contexts —
+#
+# * ``RealCollectives``     — inside ``shard_map``, bound to the mesh axis;
+# * ``AbstractCollectives`` — the program-discovery trace (``jax.eval_shape``
+#   with no mesh axis in scope): shape-faithful local stand-ins, so a whole
+#   iteration can be traced for structure before the fused executable exists.
+# ---------------------------------------------------------------------------
+
+
+class RealCollectives:
+    """Mesh collectives bound to an axis name — valid inside ``shard_map``."""
+
+    def __init__(self, axis: str, n_shards: int):
+        self.axis = axis
+        self.n_shards = n_shards
+
+    def axis_index(self) -> Array:
+        return jax.lax.axis_index(self.axis)
+
+    def all_gather_tiled(self, x: Array) -> Array:
+        return jax.lax.all_gather(x, self.axis, tiled=True)
+
+    def all_to_all_tiled(self, x: Array) -> Array:
+        return jax.lax.all_to_all(
+            x, self.axis, split_axis=0, concat_axis=0, tiled=True
+        )
+
+    def reduce(self, partial: Array, red: Reducer, wire: str) -> Array:
+        return _collective_reduce(partial, red, self.axis, wire)
+
+    def reduce_feedback(
+        self, partial: Array, red: Reducer, wire: str, residual: Array
+    ) -> tuple[Array, Array]:
+        """``wire="int8"`` with error feedback (``quantize_with_feedback``).
+
+        Quantizes ``partial + residual`` per 256-element block, psums the
+        dequantized lattice (the wire payload a TPU lowering moves is the
+        int8 blocks + scales, as in ``_collective_reduce``), and returns what
+        this round's narrowing dropped as the next round's residual — the
+        iterative path stays unbiased instead of accumulating rounding bias.
+        """
+        if wire != "int8" or red.name != "sum":
+            return self.reduce(partial, red, wire), residual
+        from repro.core.serialization import dequantize, quantize_with_feedback
+
+        p32 = partial.astype(jnp.float32)
+        q, new_residual = quantize_with_feedback(p32, residual, "int8")
+        deq = dequantize(q, p32)
+        total = jax.lax.psum(deq, self.axis).astype(partial.dtype)
+        return total, new_residual
+
+
+class AbstractCollectives:
+    """Shape-faithful stand-ins for the discovery trace (no mesh axis bound).
+
+    Every per-shard reduction collective (``psum``/``pmin``/``pmax``, the
+    gather-fold of ``prod`` and custom reducers) preserves shape, so identity
+    is a faithful abstraction; ``all_gather(tiled)`` concatenates
+    ``n_shards`` copies; ``all_to_all(tiled)`` over equal splits is
+    shape-preserving.  Values computed under these are never used — only
+    their shapes/dtypes (``jax.eval_shape``) and the op-recording side
+    effects of the trace.
+    """
+
+    def __init__(self, n_shards: int):
+        self.n_shards = n_shards
+
+    def axis_index(self) -> Array:
+        return jnp.zeros((), jnp.int32)
+
+    def all_gather_tiled(self, x: Array) -> Array:
+        return jnp.concatenate([x] * self.n_shards, axis=0)
+
+    def all_to_all_tiled(self, x: Array) -> Array:
+        return x
+
+    def reduce(self, partial: Array, red: Reducer, wire: str) -> Array:
+        return partial
+
+    def reduce_feedback(self, partial, red, wire, residual):
+        return partial, residual
+
+
+# ---------------------------------------------------------------------------
 # The engine
 # ---------------------------------------------------------------------------
 
@@ -319,6 +410,134 @@ def _local_view(kind, source, operands):
     return (operands[0][0], operands[1][0])
 
 
+def dense_shard_stage(
+    kind, source, mapper, red, target, engine, wire, n_shards,
+    with_stats=True, feedback=False,
+):
+    """Build a pure, composable shard stage for a dense ``[K, ...]`` target.
+
+    The stage is the whole per-shard plan — mapper trace, local combine
+    (static-key fast path / segmented reduce / Pallas kernel), and the
+    shuffle collective — as a *function*, not a sealed ``jit(shard_map(...))``:
+
+        ``stage(env, local, coll, residual=None)
+            -> (total, live, kernel_pairs, residual')``
+
+    * ``env``      — the iteration-varying pytree (broadcast, replicated);
+    * ``local``    — this shard's operand view (``_local_view``), or a
+      program-supplied local vector;
+    * ``coll``     — a collectives object (``RealCollectives`` inside
+      ``shard_map``, ``AbstractCollectives`` under program discovery);
+    * ``residual`` — per-shard error-feedback carry when ``feedback=True``
+      (``wire="int8"`` sums in an iterative program), else passed through.
+
+    ``total`` is the merged (replicated) dense result *excluding* the target
+    — callers fold it in with ``red.combine(target, total)``.  Standalone
+    ``map_reduce`` wraps one stage in ``shard_map`` + ``jit``
+    (``_map_reduce_dense``); ``repro.core.program`` composes several stages
+    plus elementwise glue inside ONE ``shard_map`` body, which is what lets
+    a whole iteration fuse into a single executable.
+
+    Returns ``(stage, kernel_meta)``; ``kernel_meta`` is filled at trace time
+    with the Pallas launch geometry (``block_n``, ``lanes``) when the kernel
+    runs.
+    """
+    K = target.shape[0]
+    target_dtype = target.dtype
+    kernel_meta: dict = {}
+
+    def stage(env_, local, coll, residual=None):
+        entries, static_keys = _run_mapper_structured(
+            kind, source, mapper, coll.axis_index(), local, n_shards, env_
+        )
+        live = (
+            sum(jnp.sum(m) for _, _, m in entries).astype(jnp.int32)
+            if with_stats or engine == "naive"
+            else jnp.zeros((), jnp.int32)
+        )
+        kernel_pairs = jnp.zeros((), jnp.int32)
+
+        if engine in ("eager", "pallas"):
+            # §2.3.3 static-key fast path: trace-time-constant keys get a
+            # fused whole-axis reduction — no id arrays, the exact plan a
+            # hand-written parallel-for emits.  (Shared by both engines:
+            # a kernel cannot beat a fused scalar reduction.)
+            val_shape = entries[0][1].shape[2:]
+            ident = red.identity(target_dtype)
+            partial = jnp.full((K,) + val_shape, ident, target_dtype)
+            dynamic = []
+            for (keys, vals, mask), sk in zip(entries, static_keys):
+                vals = vals.astype(target_dtype)
+                if (
+                    sk is not None
+                    and 0 <= sk < K
+                    and red.axis_reduce is not None
+                ):
+                    mb = mask.reshape(mask.shape + (1,) * len(val_shape))
+                    contrib = red.axis_reduce(
+                        jnp.where(mb, vals, ident), axis=(0, 1)
+                    )
+                    partial = partial.at[sk].set(
+                        red.combine(partial[sk], contrib)
+                    )
+                else:
+                    dynamic.append((keys, vals, mask))
+            if dynamic:
+                dkeys, dvals, dmask = _flatten_entries(dynamic)
+                dvals = dvals.astype(target_dtype)
+                if engine == "pallas" and red.pallas_segment is not None:
+                    # Device-local combine on the MXU: invalid lanes get
+                    # id −1, which the kernel drops (their values never
+                    # reach the accumulator, so no masking of dvals).
+                    ids = jnp.where(
+                        dmask & (dkeys >= 0) & (dkeys < K), dkeys, -1
+                    )
+                    flat = dvals.reshape((dvals.shape[0], -1))
+                    seg = red.pallas_segment(ids, flat, K)
+                    seg = seg.reshape((K,) + dvals.shape[1:])
+                    from repro.kernels.segment_reduce import (
+                        segment_reduce_lanes,
+                    )
+
+                    bn, lanes = segment_reduce_lanes(
+                        flat.shape[0], K, flat.shape[1], red.name,
+                        flat.dtype,
+                    )
+                    kernel_meta["block_n"] = bn
+                    kernel_meta["lanes"] = lanes * n_shards
+                    kernel_pairs = jnp.sum(
+                        dmask & (dkeys >= 0) & (dkeys < K)
+                    ).astype(jnp.int32)
+                else:
+                    # eager, or a custom reducer without a kernel impl:
+                    # XLA's segmented reduce.
+                    ids = jnp.where(
+                        dmask & (dkeys >= 0) & (dkeys < K), dkeys, K
+                    )
+                    seg = red.segment(dvals, ids, K + 1)[:K]
+                partial = red.combine(partial, seg.astype(target_dtype))
+            if feedback:
+                total, residual = coll.reduce_feedback(
+                    partial, red, wire, residual
+                )
+            else:
+                total = coll.reduce(partial, red, wire)
+        else:
+            # Conventional plan: ship ALL raw pairs (padded lanes and all);
+            # reduce only at the destination.  all_gather of the raw pair
+            # stream is the dense-target equivalent of a wide shuffle.
+            keys, vals, valid = _flatten_entries(entries)
+            vals = vals.astype(target_dtype)
+            gk = coll.all_gather_tiled(keys)
+            gv = coll.all_gather_tiled(vals)
+            gm = coll.all_gather_tiled(valid)
+            ids_g = jnp.where(gm & (gk >= 0) & (gk < K), gk, K)
+            total = red.segment(gv, ids_g, K + 1)[:K]
+        return total, live, kernel_pairs, residual
+
+    return stage, kernel_meta
+
+
 def _map_reduce_dense(
     kind, source, mapper, red, target, mesh, n_shards, engine, wire, env,
     with_stats=True, cache=None,
@@ -340,92 +559,15 @@ def _map_reduce_dense(
 
     compiled_now = cache_key not in cache
     if compiled_now:
-        kernel_meta: dict = {}
+        stage, kernel_meta = dense_shard_stage(
+            kind, source, mapper, red, target, engine, wire, n_shards,
+            with_stats=with_stats,
+        )
 
         def shard_fn(env_, *operands):
-            shard_idx = jax.lax.axis_index(axis)
+            coll = RealCollectives(axis, n_shards)
             local = _local_view(kind, source, operands)
-            entries, static_keys = _run_mapper_structured(
-                kind, source, mapper, shard_idx, local, n_shards, env_
-            )
-            live = (
-                sum(jnp.sum(m) for _, _, m in entries).astype(jnp.int32)
-                if with_stats or engine == "naive"
-                else jnp.zeros((), jnp.int32)
-            )
-            kernel_pairs = jnp.zeros((), jnp.int32)
-
-            if engine in ("eager", "pallas"):
-                # §2.3.3 static-key fast path: trace-time-constant keys get a
-                # fused whole-axis reduction — no id arrays, the exact plan a
-                # hand-written parallel-for emits.  (Shared by both engines:
-                # a kernel cannot beat a fused scalar reduction.)
-                val_shape = entries[0][1].shape[2:]
-                ident = red.identity(target.dtype)
-                partial = jnp.full((K,) + val_shape, ident, target.dtype)
-                dynamic = []
-                for (keys, vals, mask), sk in zip(entries, static_keys):
-                    vals = vals.astype(target.dtype)
-                    if (
-                        sk is not None
-                        and 0 <= sk < K
-                        and red.axis_reduce is not None
-                    ):
-                        mb = mask.reshape(mask.shape + (1,) * len(val_shape))
-                        contrib = red.axis_reduce(
-                            jnp.where(mb, vals, ident), axis=(0, 1)
-                        )
-                        partial = partial.at[sk].set(
-                            red.combine(partial[sk], contrib)
-                        )
-                    else:
-                        dynamic.append((keys, vals, mask))
-                if dynamic:
-                    dkeys, dvals, dmask = _flatten_entries(dynamic)
-                    dvals = dvals.astype(target.dtype)
-                    if engine == "pallas" and red.pallas_segment is not None:
-                        # Device-local combine on the MXU: invalid lanes get
-                        # id −1, which the kernel drops (their values never
-                        # reach the accumulator, so no masking of dvals).
-                        ids = jnp.where(
-                            dmask & (dkeys >= 0) & (dkeys < K), dkeys, -1
-                        )
-                        flat = dvals.reshape((dvals.shape[0], -1))
-                        seg = red.pallas_segment(ids, flat, K)
-                        seg = seg.reshape((K,) + dvals.shape[1:])
-                        from repro.kernels.segment_reduce import (
-                            segment_reduce_lanes,
-                        )
-
-                        bn, lanes = segment_reduce_lanes(
-                            flat.shape[0], K, flat.shape[1], red.name,
-                            flat.dtype,
-                        )
-                        kernel_meta["block_n"] = bn
-                        kernel_meta["lanes"] = lanes * n_shards
-                        kernel_pairs = jnp.sum(
-                            dmask & (dkeys >= 0) & (dkeys < K)
-                        ).astype(jnp.int32)
-                    else:
-                        # eager, or a custom reducer without a kernel impl:
-                        # XLA's segmented reduce.
-                        ids = jnp.where(
-                            dmask & (dkeys >= 0) & (dkeys < K), dkeys, K
-                        )
-                        seg = red.segment(dvals, ids, K + 1)[:K]
-                    partial = red.combine(partial, seg.astype(target.dtype))
-                total = _collective_reduce(partial, red, axis, wire)
-            else:
-                # Conventional plan: ship ALL raw pairs (padded lanes and all);
-                # reduce only at the destination.  all_gather of the raw pair
-                # stream is the dense-target equivalent of a wide shuffle.
-                keys, vals, valid = _flatten_entries(entries)
-                vals = vals.astype(target.dtype)
-                gk = jax.lax.all_gather(keys, axis, tiled=True)
-                gv = jax.lax.all_gather(vals, axis, tiled=True)
-                gm = jax.lax.all_gather(valid, axis, tiled=True)
-                ids_g = jnp.where(gm & (gk >= 0) & (gk < K), gk, K)
-                total = red.segment(gv, ids_g, K + 1)[:K]
+            total, live, kernel_pairs, _ = stage(env_, local, coll)
             return total, live[None], kernel_pairs[None]
 
         fn = shard_map(
@@ -493,6 +635,58 @@ def _collective_reduce(partial: Array, red: Reducer, axis: str, wire: str) -> Ar
     raise ValueError(f"unknown wire mode {wire!r}")
 
 
+def hash_shard_stage(
+    kind, source, mapper, red, val_dtype, engine, slack, n_shards
+):
+    """Build the composable shard stage for a ``DistHashMap`` target.
+
+    Same contract as ``dense_shard_stage`` — the whole per-shard plan
+    (mapper trace, eager local combine, destination bucketing, ``all_to_all``
+    shuffle, table merge) as a pure function of this shard's inputs:
+
+        ``stage(env, table, local, coll)
+            -> (table', live_emitted, live_shipped)``
+
+    ``table`` is this shard's ``HashTable``; the returned table has the
+    shuffled pairs merged in and bucket drops added to ``overflow``.
+    Standalone ``map_reduce`` wraps one stage in ``shard_map`` + ``jit``
+    (``_map_reduce_hash``); fused programs currently reject hash targets
+    (their state is per-shard, not replicated), so this stage only ever runs
+    under ``RealCollectives`` — it still goes through the indirection so the
+    two engines stay structurally parallel.
+    """
+
+    def stage(env_, table, local, coll):
+        keys, vals, valid = _run_mapper(
+            kind, source, mapper, coll.axis_index(), local, n_shards, env_
+        )
+        vals = vals.astype(val_dtype)
+        n_emit = keys.shape[0]
+        live_emitted = jnp.sum(valid).astype(jnp.int32)
+
+        if engine == "eager":
+            keys, vals, valid = C.unique_combine(keys, vals, valid, red)
+        live_shipped = jnp.sum(valid).astype(jnp.int32)
+
+        bucket_cap = max(1, int(math.ceil(slack * n_emit / n_shards)))
+        bucket_cap = min(bucket_cap, n_emit)
+        ident = red.identity(vals.dtype)
+        bkeys, bvals, dropped = bucket_by_dest(
+            keys, vals, valid, n_shards, bucket_cap, ident
+        )
+        rkeys = coll.all_to_all_tiled(bkeys).reshape(-1)
+        rvals = coll.all_to_all_tiled(bvals)
+        rvals = rvals.reshape((-1,) + rvals.shape[2:])
+        rvalid = rkeys != C.EMPTY_KEY
+        # Received pairs may repeat across source shards: combine → insert.
+        ukeys, uvals, uvalid = C.unique_combine(rkeys, rvals, rvalid, red)
+        table = C.HashTable(table.keys, table.vals, table.overflow + dropped)
+        table = C.hashmap_insert(table, ukeys, uvals, uvalid, red)
+        return table, live_emitted, live_shipped
+
+    return stage
+
+
 def _map_reduce_hash(
     kind, source, mapper, red, target, mesh, n_shards, engine, slack, env,
     cache=None,
@@ -511,40 +705,16 @@ def _map_reduce_hash(
 
     compiled_now = cache_key not in cache
     if compiled_now:
+        stage = hash_shard_stage(
+            kind, source, mapper, red, target.table.vals.dtype, engine,
+            slack, n_shards,
+        )
 
         def shard_fn(env_, tkeys, tvals, tovf, *operands):
-            shard_idx = jax.lax.axis_index(axis)
+            coll = RealCollectives(axis, n_shards)
             local = _local_view(kind, source, operands)
-            keys, vals, valid = _run_mapper(
-                kind, source, mapper, shard_idx, local, n_shards, env_
-            )
-            vals = vals.astype(target.table.vals.dtype)
-            n_emit = keys.shape[0]
-            live_emitted = jnp.sum(valid).astype(jnp.int32)
-
-            if engine == "eager":
-                keys, vals, valid = C.unique_combine(keys, vals, valid, red)
-            live_shipped = jnp.sum(valid).astype(jnp.int32)
-
-            bucket_cap = max(1, int(math.ceil(slack * n_emit / n_shards)))
-            bucket_cap = min(bucket_cap, n_emit)
-            ident = red.identity(vals.dtype)
-            bkeys, bvals, dropped = bucket_by_dest(
-                keys, vals, valid, n_shards, bucket_cap, ident
-            )
-            rkeys = jax.lax.all_to_all(
-                bkeys, axis, split_axis=0, concat_axis=0, tiled=True
-            )
-            rvals = jax.lax.all_to_all(
-                bvals, axis, split_axis=0, concat_axis=0, tiled=True
-            )
-            rkeys = rkeys.reshape(-1)
-            rvals = rvals.reshape((-1,) + rvals.shape[2:])
-            rvalid = rkeys != C.EMPTY_KEY
-            # Received pairs may repeat across source shards: combine → insert.
-            ukeys, uvals, uvalid = C.unique_combine(rkeys, rvals, rvalid, red)
-            table = C.HashTable(tkeys[0], tvals[0], tovf[0] + dropped)
-            table = C.hashmap_insert(table, ukeys, uvals, uvalid, red)
+            table = C.HashTable(tkeys[0], tvals[0], tovf[0])
+            table, live_emitted, live_shipped = stage(env_, table, local, coll)
             return (
                 table.keys[None],
                 table.vals[None],

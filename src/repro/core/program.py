@@ -1,0 +1,383 @@
+"""Fused iteration programs: a whole iteration as ONE compiled executable.
+
+The paper's iterative data-mining wins (PageRank, k-means, GMM/EM) come from
+keeping the hot loop resident.  ``BlazeSession`` already makes iteration
+*N > 1* compile-free, but a driver written as per-op ``map_reduce`` calls
+still pays, per iteration, one executable **dispatch** per op (3–4 for the
+paper's algorithms) plus a blocking **host sync** for the convergence test
+(``float(delta)``).  Per Li (arXiv:1811.04875), exactly this dispatch/sync
+overhead is what separates in-memory MapReduce from MPI/OpenMP on iterative
+workloads — and BSP supersteps (Pace, arXiv:1203.2081) are the classical fix:
+batch the whole superstep, synchronise once.
+
+This module is that fix on SPMD JAX:
+
+* ``Program`` (built by ``BlazeSession.program(step_fn)``) traces a user
+  ``step_fn(ctx, state) -> state`` that may call several MapReduce ops plus
+  elementwise glue, and lowers the **entire iteration** into one
+  ``jit(shard_map(...))`` executable.  The ops compose because the engine
+  emits pure shard stages (``mapreduce.dense_shard_stage``) instead of
+  sealed executables — each op's local combine *and* its collective run
+  inline in the one shard body.
+* ``BlazeSession.run_loop(program, state, cond=..., max_iters=N, unroll=U)``
+  runs ``U`` iterations per dispatch via a device-resident ``lax.fori_loop``
+  (trip count is a *traced* scalar, so every block size shares one
+  executable) and evaluates the convergence test on the host only every
+  ``U`` steps.  N iterations therefore cost **1 compile**, ``≤ ⌈N/U⌉``
+  dispatches and ``≤ ⌈N/U⌉`` host syncs — counters asserted in
+  ``tests/test_session.py``.
+
+How a program is built (two traces, no user-visible difference):
+
+1. **Discovery** — ``step_fn`` runs once under ``jax.eval_shape`` with
+   ``AbstractCollectives`` (shape-faithful local stand-ins, since no mesh
+   axis is bound outside ``shard_map``).  This records, in call order, which
+   source containers the step reads, which ops need an error-feedback
+   residual (``wire="int8"`` sums), and validates that the state pytree is a
+   fixed point (same treedef/shapes/dtypes out as in — required by
+   ``fori_loop``).
+2. **Execution** — one ``shard_map`` whose body binds ``RealCollectives``,
+   maps each source to its shard-local operands, and runs
+   ``fori_loop(0, n_iters, step)`` with the user state (replicated) plus the
+   per-shard feedback residuals as carry.  ``jax.jit`` around it makes the
+   whole block a single dispatch.
+
+Iteration-varying values live in ``state``; distributed inputs (the edge
+list, the point set) are read through the captured source containers and
+enter as sharded operands.  Per-iteration *sharded* intermediates (GMM's
+densities/memberships) stay on-shard as ``LocalVector``s produced by
+``ctx.foreach`` — they never cross the wire and never leave the executable.
+
+Hash targets are rejected inside programs: a ``DistHashMap`` is per-shard
+state, while program state is replicated — run hash-target ops per-op
+outside the program (the per-op path is unchanged).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core import containers as C
+from repro.core import mapreduce as _mr
+from repro.core.reducers import get_reducer
+
+Array = jax.Array
+
+__all__ = ["LocalVector", "LoopInfo", "Program", "ProgramContext", "ProgramStats"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class LocalVector:
+    """A shard-local vector inside a program trace (``ctx.foreach`` output).
+
+    ``data`` is THIS shard's rows (``[per_shard, ...]``); ``n`` is the global
+    true (pre-padding) length.  Usable as a ``map_reduce``/``foreach`` source
+    within the same program — it never materialises globally.
+    """
+
+    data: Array
+    n: int = dataclasses.field(metadata=dict(static=True))
+
+
+@dataclasses.dataclass
+class ProgramStats:
+    """Per-program counters (mirrored cumulatively on ``SessionStats``)."""
+
+    compiles: int = 0  # executables built (one per state signature)
+    dispatches: int = 0  # blocks launched
+    iterations: int = 0  # fused iterations run across all dispatches
+
+
+@dataclasses.dataclass
+class LoopInfo:
+    """What one ``run_loop`` cost: the assertable fusion contract."""
+
+    iterations: int  # iterations actually run
+    dispatches: int  # executable launches (≤ ⌈iterations/unroll⌉ + exact)
+    host_syncs: int  # blocking host materialisations (cond evaluations)
+    converged: bool  # cond() went True before max_iters
+    compiles: int  # program executables built during this loop (0 or 1)
+
+
+def _source_key(kind: str, source) -> tuple:
+    """Stable identity for a source across the discovery and execution traces.
+
+    ``DistRange`` is keyed by value (drivers re-create it freely); array-backed
+    containers are keyed by the identity of their backing buffers, so
+    re-wrapping the same data in a fresh dataclass still resolves.
+    """
+    if kind == "range":
+        return ("range", source.start, source.stop, source.step)
+    if kind == "vector":
+        return ("vector", id(source.data), source.n)
+    return ("hashmap", id(source.table.keys), id(source.table.vals))
+
+
+class ProgramContext:
+    """What ``step_fn`` sees: session-API lookalikes that compose in-trace.
+
+    ``ctx.map_reduce`` / ``ctx.foreach`` mirror the ``BlazeSession`` methods
+    but run *inside* the fused program's shard body — no jit, no dispatch,
+    no stats; the collective of each op is inlined.  The same user code
+    therefore reads identically in per-op and program form (see the three
+    algorithm drivers).
+    """
+
+    def __init__(
+        self, n_shards: int, mode: str, coll=None, operands=None,
+        residuals=None,
+    ):
+        self._n_shards = n_shards
+        self._mode = mode  # "discover" | "execute"
+        self._coll = coll if coll is not None else _mr.AbstractCollectives(n_shards)
+        self._operands = operands or {}  # source key -> local operand tuple
+        self._sources: dict[tuple, Any] = {}  # discover: key -> source, ordered
+        self._residual_specs: list[tuple] = []  # discover: feedback op shapes
+        self._residuals = residuals if residuals is not None else []
+        self._res_i = 0
+
+    # -- source resolution ----------------------------------------------------
+
+    def _local_for(self, kind: str, source):
+        if self._mode == "discover":
+            self._sources.setdefault(_source_key(kind, source), source)
+            if kind == "range":
+                return None
+            if kind == "vector":
+                per = source.data.shape[0] // self._n_shards
+                return (
+                    jnp.zeros((per,) + source.data.shape[1:], source.data.dtype),
+                    source.n,
+                )
+            keys, vals = source.table.keys, source.table.vals
+            return (
+                jnp.full(keys.shape[1:], C.EMPTY_KEY, keys.dtype),
+                jnp.zeros(vals.shape[1:], vals.dtype),
+            )
+        if kind == "range":
+            return None
+        return _mr._local_view(
+            kind, source, self._operands[_source_key(kind, source)]
+        )
+
+    # -- the in-program API ---------------------------------------------------
+
+    @property
+    def shard_index(self) -> Array:
+        """This shard's mesh coordinate (0 under discovery)."""
+        return self._coll.axis_index()
+
+    def map_reduce(
+        self, source, mapper: Callable, reducer, target, *,
+        engine: str = "eager", wire: str = "none", env: Any = None,
+    ):
+        """One MapReduce op, fused into the surrounding program.
+
+        Same contract as ``BlazeSession.map_reduce`` for dense targets,
+        except the result is a traced array inside the program (merge into
+        ``target`` included) and no per-op stats exist — the whole program
+        is one dispatch.  ``wire="int8"`` sums additionally get error
+        feedback: the per-shard quantization residual is carried through the
+        device-resident loop *and* across dispatches (the executable returns
+        it and the next block feeds it back in), so iterative reductions
+        stay unbiased for the lifetime of the program
+        (``RealCollectives.reduce_feedback``).
+        """
+        from repro.core.session import resolve_engine
+
+        red = get_reducer(reducer)
+        if isinstance(target, C.DistHashMap):
+            raise NotImplementedError(
+                "programs support dense targets only; run hash-target ops "
+                "per-op outside the program"
+            )
+        target = jnp.asarray(target)
+        engine = resolve_engine(engine, target, red)
+        if isinstance(source, LocalVector):
+            kind, src_static = "vector", None
+            local = (source.data, source.n)
+        else:
+            kind = _mr._source_kind(source)
+            src_static = source
+            local = self._local_for(kind, source)
+
+        feedback = (
+            wire == "int8" and red.name == "sum"
+            and engine in ("eager", "pallas")
+        )
+        stage, _ = _mr.dense_shard_stage(
+            kind, src_static, mapper, red, target, engine, wire,
+            self._n_shards, with_stats=False, feedback=feedback,
+        )
+        residual = None
+        if feedback:
+            if self._mode == "discover":
+                self._residual_specs.append(
+                    (tuple(target.shape), jnp.float32)
+                )
+                residual = jnp.zeros(target.shape, jnp.float32)
+            else:
+                residual = self._residuals[self._res_i]
+        total, _live, _kp, new_residual = stage(env, local, self._coll, residual)
+        if feedback:
+            if self._mode == "execute":
+                self._residuals[self._res_i] = new_residual
+            self._res_i += 1
+        return red.combine(target, total.astype(target.dtype))
+
+    def foreach(self, v, fn: Callable, env: Any = None) -> LocalVector:
+        """Elementwise map over a ``DistVector`` source or a ``LocalVector``.
+
+        Returns a ``LocalVector`` — the result stays on-shard, feeding later
+        ops in the same program without any collective.
+        """
+        if isinstance(v, LocalVector):
+            data, n = v.data, v.n
+        elif isinstance(v, C.DistVector):
+            data, n = self._local_for("vector", v)
+        else:
+            raise TypeError(
+                f"ctx.foreach needs a DistVector or LocalVector, got {type(v)}"
+            )
+        out = jax.vmap(fn)(data) if env is None else jax.vmap(
+            lambda x: fn(x, env)
+        )(data)
+        return LocalVector(out, n)
+
+
+class Program:
+    """A user step function lowered to one executable per state signature.
+
+    Built by ``BlazeSession.program(step_fn)``; ``step_fn(ctx, state)`` must
+    return a state pytree with the same structure/shapes/dtypes (it is a
+    ``fori_loop`` carry).  Call ``program(state, n_iters)`` for one dispatch
+    of ``n_iters`` fused iterations, or drive it with
+    ``session.run_loop(...)``.  The trip count is traced, so full blocks and
+    the remainder block share the single compiled executable.
+    """
+
+    def __init__(self, session, step_fn: Callable, *, mesh: Mesh | None = None):
+        self._session = session
+        self._step_fn = step_fn
+        self._mesh = mesh if mesh is not None else session.mesh
+        self._n_shards = self._mesh.shape[C.DATA_AXIS]
+        self._cache: dict = {}  # state signature -> (jitted fused fn, operands)
+        # state signature -> live per-shard error-feedback residuals, carried
+        # ACROSS dispatches for the lifetime of this Program
+        self._residual_state: dict = {}
+        self.stats = ProgramStats()
+        self.feedback_slots = 0  # error-feedback residual slots (int8 sums)
+
+    # -- build ---------------------------------------------------------------
+
+    def _discover(self, state):
+        ctx = ProgramContext(self._n_shards, "discover")
+        out = jax.eval_shape(lambda s: self._step_fn(ctx, s), state)
+        in_flat, in_tree = jax.tree_util.tree_flatten(state)
+        out_flat, out_tree = jax.tree_util.tree_flatten(out)
+        if in_tree != out_tree:
+            raise ValueError(
+                "step_fn must return a state pytree with the same structure "
+                f"it was given (got {out_tree}, want {in_tree})"
+            )
+        for i, (a, b) in enumerate(zip(in_flat, out_flat)):
+            a_shape, a_dt = jnp.shape(a), jnp.asarray(a).dtype
+            if (a_shape, a_dt) != (b.shape, b.dtype):
+                raise ValueError(
+                    "step_fn must preserve state leaf shapes/dtypes (it is a "
+                    f"fori_loop carry); leaf {i} went from {a_shape}/{a_dt} "
+                    f"to {b.shape}/{b.dtype}"
+                )
+        return list(ctx._sources.values()), list(ctx._residual_specs)
+
+    def _build(self, state):
+        key = _mr._abstract(state)
+        if key in self._cache:
+            return self._cache[key]
+        sources, residual_specs = self._discover(state)
+        self.feedback_slots = len(residual_specs)
+        axis = C.DATA_AXIS
+        n_shards = self._n_shards
+        step_fn = self._step_fn
+
+        operands: list = []
+        specs: list = []
+        source_keys: list[tuple] = []
+        sizes: list[int] = []
+        for s in sources:
+            kind = _mr._source_kind(s)
+            ops, sp = _mr._source_operands(kind, s)
+            operands.extend(ops)
+            specs.extend(sp)
+            source_keys.append(_source_key(kind, s))
+            sizes.append(len(ops))
+        n_res = len(residual_specs)
+
+        def shard_body(state_, n_iters, *flat):
+            # flat = per-op feedback residuals (sharded: each shard carries
+            # its own quantization error), then the source operands.
+            res_in, flat_ops = flat[:n_res], flat[n_res:]
+            coll = _mr.RealCollectives(axis, n_shards)
+            op_map, i = {}, 0
+            for sk, k in zip(source_keys, sizes):
+                op_map[sk] = tuple(flat_ops[i:i + k])
+                i += k
+
+            def one_step(_, carry):
+                st, residuals = carry
+                ctx = ProgramContext(
+                    n_shards, "execute", coll=coll, operands=op_map,
+                    residuals=list(residuals),
+                )
+                new_st = step_fn(ctx, st)
+                return new_st, tuple(ctx._residuals)
+
+            res0 = tuple(r[0] for r in res_in)  # drop the local shard dim
+            out_state, res_out = jax.lax.fori_loop(
+                0, n_iters, one_step, (state_, res0)
+            )
+            return out_state, tuple(r[None] for r in res_out)
+
+        d = P(C.DATA_AXIS)
+        fused = shard_map(
+            shard_body,
+            mesh=self._mesh,
+            in_specs=(P(), P()) + (d,) * n_res + tuple(specs),
+            out_specs=(P(), d),
+            check_vma=False,
+        )
+        # Residual state outlives the dispatch: the executable returns the
+        # updated per-shard residuals and the next dispatch feeds them back
+        # in, so error feedback stays live across blocks (even unroll=1).
+        self._residual_state[key] = tuple(
+            jnp.zeros((n_shards,) + shape, dtype)
+            for shape, dtype in residual_specs
+        )
+        entry = (jax.jit(fused), tuple(operands))
+        self._cache[key] = entry
+        self.stats.compiles += 1
+        self._session.stats.program_compiles += 1
+        return entry
+
+    # -- run -----------------------------------------------------------------
+
+    def __call__(self, state, n_iters: int = 1):
+        """One dispatch: ``n_iters`` fused iterations, device-resident."""
+        key = _mr._abstract(state)
+        fn, operands = self._build(state)
+        residuals = self._residual_state[key]
+        out, new_residuals = fn(
+            state, jnp.asarray(n_iters, jnp.int32), *residuals, *operands
+        )
+        self._residual_state[key] = new_residuals
+        self.stats.dispatches += 1
+        self.stats.iterations += int(n_iters)
+        self._session.stats.dispatches += 1
+        self._session.stats.program_dispatches += 1
+        return out

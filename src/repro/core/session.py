@@ -28,6 +28,7 @@ import dataclasses
 import threading
 from typing import Any, Callable
 
+import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
@@ -82,11 +83,20 @@ def resolve_engine(engine: str, target, reducer: Reducer) -> str:
 
 @dataclasses.dataclass
 class SessionStats:
-    """Cumulative executable-reuse counters for one session."""
+    """Cumulative executable-reuse + dispatch/sync counters for one session.
+
+    ``dispatches`` and ``host_syncs`` make the fusion contract assertable:
+    N per-op iterations cost ~3–4 dispatches and 1 host sync *each*, while
+    ``run_loop`` over a fused program costs ≤ ⌈N/unroll⌉ of both.
+    """
 
     calls: int = 0  # map_reduce invocations routed through the session
     compiles: int = 0  # calls that lowered + compiled a new executable
     cache_hits: int = 0  # calls served by a memoized executable
+    dispatches: int = 0  # executable launches (per-op calls + program blocks)
+    host_syncs: int = 0  # blocking host materialisations (host_value/cond)
+    program_compiles: int = 0  # fused-program executables built
+    program_dispatches: int = 0  # fused-program blocks launched
 
     @property
     def hit_rate(self) -> float:
@@ -162,7 +172,74 @@ class BlazeSession:
         self.stats.calls += 1
         self.stats.compiles += stats.compiles
         self.stats.cache_hits += stats.cache_hits
+        self.stats.dispatches += stats.dispatches
         return (out, stats) if return_stats else out
+
+    # -- fused iteration programs (see repro.core.program) -------------------
+
+    def program(self, step_fn: Callable, *, mesh=None):
+        """Lower ``step_fn(ctx, state) -> state`` — a whole iteration of
+        MapReduce ops plus elementwise glue — into ONE executable.
+
+        ``ctx`` mirrors the session API in-trace (``ctx.map_reduce``,
+        ``ctx.foreach``); iteration-varying values go through ``state``
+        (a pytree that must keep its structure/shapes across steps).  Run
+        the result with ``program(state, n_iters)`` or ``run_loop``.
+        """
+        from repro.core.program import Program
+
+        return Program(self, step_fn, mesh=mesh or self.mesh)
+
+    def run_loop(
+        self,
+        program,
+        state,
+        *,
+        cond: Callable | None = None,
+        max_iters: int,
+        unroll: int = 1,
+    ):
+        """Drive a fused ``Program``: ``unroll`` iterations per dispatch.
+
+        Each dispatch runs a device-resident ``fori_loop`` block; the
+        convergence test ``cond(state) -> bool`` (truthy = converged, stop)
+        is evaluated on the host only *between* blocks — one host sync per
+        ``unroll`` iterations instead of one per iteration.  Returns
+        ``(state, LoopInfo)``; ``LoopInfo`` carries the assertable counters
+        (iterations, dispatches, host_syncs, compiles).
+        """
+        from repro.core.program import LoopInfo
+
+        if unroll < 1:
+            raise ValueError(f"unroll must be >= 1, got {unroll}")
+        compiles0 = program.stats.compiles
+        it = dispatches = host_syncs = 0
+        converged = False
+        while it < max_iters:
+            u = min(unroll, max_iters - it)
+            state = program(state, u)
+            dispatches += 1
+            it += u
+            if cond is not None:
+                self.stats.host_syncs += 1
+                host_syncs += 1
+                if bool(cond(state)):
+                    converged = True
+                    break
+        return state, LoopInfo(
+            iterations=it,
+            dispatches=dispatches,
+            host_syncs=host_syncs,
+            converged=converged,
+            compiles=program.stats.compiles - compiles0,
+        )
+
+    def host_value(self, x):
+        """Materialise ``x`` on the host (the driver's explicit sync point),
+        counting it in ``stats.host_syncs`` so per-op loops and fused
+        ``run_loop`` blocks are comparable."""
+        self.stats.host_syncs += 1
+        return jax.device_get(x)
 
     def foreach(self, v: C.DistVector, fn: Callable, env: Any = None) -> C.DistVector:
         """Session-scoped ``foreach`` (same executable-reuse contract via
@@ -183,6 +260,10 @@ class BlazeSession:
             "compiles": self.stats.compiles,
             "cache_hits": self.stats.cache_hits,
             "hit_rate": self.stats.hit_rate,
+            "dispatches": self.stats.dispatches,
+            "host_syncs": self.stats.host_syncs,
+            "program_compiles": self.stats.program_compiles,
+            "program_dispatches": self.stats.program_dispatches,
         }
 
     def clear_cache(self) -> None:

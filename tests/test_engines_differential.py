@@ -184,6 +184,68 @@ def test_hash_target_matches_dict_oracle(reducer):
             assert abs(got[k] - want[k]) < 1e-4, (engine, reducer, k)
 
 
+def test_naive_hash_target_oracle_equivalence_and_shipping():
+    """engine="naive" against a DistHashMap: every raw pair goes on the wire
+    (shipped == emitted, ≥ eager's post-combine count), the destination-side
+    reduce still matches the dict oracle exactly, and nothing overflows with
+    adequate capacity."""
+    rng = np.random.RandomState(11)
+    keys = rng.randint(0, 20, N_PAIRS).astype(np.float32)  # duplicate-heavy
+    vals = rng.randint(1, 5, N_PAIRS).astype(np.float32)
+    mask = np.ones(N_PAIRS, np.float32)
+    rows = distribute(np.stack([keys, vals, mask], axis=1))
+    want: dict = {}
+    for k, v in zip(keys.astype(np.int64), vals.astype(np.float64)):
+        want[int(k)] = want.get(int(k), 0.0) + v
+
+    results = {}
+    for engine in ("eager", "naive"):
+        hm = make_dist_hashmap(SESS.mesh, 256, (), jnp.float32, "sum")
+        hm, st = SESS.map_reduce(
+            rows, _mapper, "sum", hm, engine=engine, return_stats=True
+        )
+        st = st.finalize()
+        results[engine] = (hm, st)
+        assert hm.total_overflow() == 0
+        got = {int(k): float(v) for k, v in hm.to_dict().items()}
+        assert got == pytest.approx(want)
+
+    eager_st, naive_st = results["eager"][1], results["naive"][1]
+    n_shards = SESS.mesh.shape["data"]
+    assert naive_st.pairs_shipped == naive_st.pairs_emitted == N_PAIRS
+    # eager combined before the wire: at most one pair per (key, shard)
+    assert eager_st.pairs_shipped <= len(want) * n_shards
+    assert naive_st.pairs_shipped > eager_st.pairs_shipped
+    assert naive_st.shuffle_payload_bytes > eager_st.shuffle_payload_bytes
+
+
+@pytest.mark.parametrize("engine", ("eager", "naive"))
+def test_hash_target_overflow_accounted_not_silent(engine):
+    """A table too small for the key set must *count* what it drops —
+    overflow > 0, surviving sums never exceed the oracle, and live entries
+    stay within capacity.  (The differential matrix previously skipped the
+    naive × DistHashMap overflow cell.)"""
+    rng = np.random.RandomState(13)
+    n = 128
+    keys = np.arange(n, dtype=np.float32)  # 128 distinct keys
+    vals = np.ones(n, np.float32)
+    rows = distribute(np.stack([keys, vals, np.ones(n, np.float32)], axis=1))
+    # capacity 8/shard on a 1-device main process → ≤ 8 live slots
+    hm = make_dist_hashmap(SESS.mesh, 8, (), jnp.float32, "sum")
+    hm, st = SESS.map_reduce(
+        rows, _mapper, "sum", hm, engine=engine, return_stats=True
+    )
+    st = st.finalize()
+    n_shards = hm.n_shards
+    assert hm.total_overflow() > 0
+    assert hm.size() <= 8 * n_shards
+    got = {int(k): float(v) for k, v in hm.to_dict().items()}
+    for k, v in got.items():
+        assert v <= 1.0 + 1e-6  # unique keys: a survivor holds exactly its sum
+    # conservation: live entries + counted drops cover every unique key
+    assert hm.size() + hm.total_overflow() >= n / max(1, n_shards)
+
+
 def test_pallas_occupancy_accounting():
     """kernel_pairs counts only live in-range lanes; occupancy ∈ (0, 1]."""
     keys, vals, mask = _pair_stream("sum", 8)

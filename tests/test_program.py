@@ -1,0 +1,378 @@
+"""Fused iteration programs: one executable per iteration *program*, device-
+resident unrolled loops, dispatch/host-sync accounting, error-feedback wire
+residuals, and the composable-stage seams they ride on."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    BlazeSession,
+    DistRange,
+    distribute,
+    make_dist_hashmap,
+)
+from repro.core.serialization import dequantize, quantize_with_feedback
+
+
+def _sq_env_mapper(v, emit, env):
+    emit(v % 4, v * v + 0.0 * env)
+
+
+def _dyn_mapper(i, x, emit):
+    emit(x[0].astype(jnp.int32) % 8, x[1])
+
+
+def _sum_rows_oracle(rows, kmod=8):
+    out = np.zeros(kmod)
+    for r in rows:
+        out[int(np.int32(r[0])) % kmod] += r[1]
+    return out
+
+
+# -- program basics ------------------------------------------------------------
+
+
+def test_program_single_compile_many_blocks():
+    sess = BlazeSession()
+
+    def step(ctx, s):
+        t = ctx.map_reduce(
+            DistRange(0, 64, 1), _sq_env_mapper, "sum",
+            jnp.zeros((4,), jnp.float32), env=s["x"],
+        )
+        return {"x": s["x"] + t[0], "t": t}
+
+    prog = sess.program(step)
+    state = {"x": jnp.zeros((), jnp.float32), "t": jnp.zeros((4,), jnp.float32)}
+    state, info = sess.run_loop(prog, state, max_iters=7, unroll=3)
+    # 7 iterations = blocks of 3+3+1, all served by ONE executable (the trip
+    # count is traced, so the remainder block does not recompile).
+    assert info.iterations == 7
+    assert info.dispatches == 3
+    assert info.compiles == 1 and prog.stats.compiles == 1
+    assert info.host_syncs == 0  # no cond given
+    ref = float(np.sum((np.arange(64) ** 2)[np.arange(64) % 4 == 0]))
+    assert float(state["x"]) == pytest.approx(7 * ref)
+    assert sess.stats.program_compiles == 1
+    assert sess.stats.program_dispatches == 3
+    assert sess.stats.dispatches == 3
+
+
+def test_program_cond_stops_at_block_boundary():
+    sess = BlazeSession()
+
+    def step(ctx, s):
+        t = ctx.map_reduce(
+            DistRange(0, 8, 1), _sq_env_mapper, "sum",
+            jnp.zeros((4,), jnp.float32), env=s["x"],
+        )
+        return {"x": s["x"] + 1.0, "t": t}
+
+    prog = sess.program(step)
+    state = {"x": jnp.zeros((), jnp.float32), "t": jnp.zeros((4,), jnp.float32)}
+    state, info = sess.run_loop(
+        prog, state, cond=lambda s: float(s["x"]) >= 4, max_iters=100, unroll=4,
+    )
+    assert info.converged
+    assert info.iterations == 4 and info.dispatches == 1
+    assert info.host_syncs == 1
+    assert sess.stats.host_syncs == 1
+
+
+def test_program_multiple_ops_engines_and_sources_fuse():
+    """Three ops over two sources and both combine engines in ONE program."""
+    sess = BlazeSession()
+    rows = np.random.RandomState(0).randn(64, 2).astype(np.float32)
+    rows[:, 0] = np.random.RandomState(1).randint(0, 8, 64)
+    pts = distribute(rows, sess.mesh)
+
+    def step(ctx, s):
+        a = ctx.map_reduce(
+            pts, _dyn_mapper, "sum", jnp.zeros((8,), jnp.float32),
+            engine="eager",
+        )
+        b = ctx.map_reduce(
+            pts, _dyn_mapper, "sum", jnp.zeros((8,), jnp.float32),
+            engine="pallas",
+        )
+        c = ctx.map_reduce(
+            DistRange(0, 64, 1), _sq_env_mapper, "sum",
+            jnp.zeros((4,), jnp.float32), env=s["acc"][0],
+        )
+        return {"acc": s["acc"] + a + b + c[0] * 0.0}
+
+    prog = sess.program(step)
+    out = prog({"acc": jnp.zeros((8,), jnp.float32)}, 2)
+    assert prog.stats.compiles == 1 and prog.stats.dispatches == 1
+    assert prog.stats.iterations == 2
+    ref = _sum_rows_oracle(rows)
+    np.testing.assert_allclose(np.asarray(out["acc"]), 4 * ref, rtol=1e-5)
+
+
+def test_program_foreach_localvector_chain():
+    """foreach output (LocalVector) feeds a later op without leaving shard."""
+    sess = BlazeSession()
+    rows = np.random.RandomState(0).randn(64, 2).astype(np.float32)
+    rows[:, 0] = np.random.RandomState(1).randint(0, 8, 64)
+    pts = distribute(rows, sess.mesh)
+
+    def step(ctx, s):
+        doubled = ctx.foreach(pts, lambda x, e: x * e, env=s["scale"])
+        quad = ctx.foreach(doubled, lambda x: x * 2.0)  # LocalVector source
+        out = ctx.map_reduce(
+            quad, _dyn_mapper, "sum", jnp.zeros((8,), jnp.float32)
+        )
+        return {"scale": s["scale"], "out": out}
+
+    prog = sess.program(step)
+    state = {
+        "scale": jnp.asarray(2.0, jnp.float32),
+        "out": jnp.zeros((8,), jnp.float32),
+    }
+    out = prog(state, 1)
+    # keys are scaled by 4 too, but k*4 % 8 keeps parity with k when k even…
+    # use the real semantic: mapper sees the *scaled* rows.
+    ref = _sum_rows_oracle(rows * 4.0)
+    np.testing.assert_allclose(np.asarray(out["out"]), ref, rtol=1e-5)
+
+
+def test_program_recompiles_only_on_state_signature_change():
+    sess = BlazeSession()
+
+    def step(ctx, s):
+        t = ctx.map_reduce(
+            DistRange(0, 32, 1), _sq_env_mapper, "sum",
+            jnp.zeros((4,), jnp.float32), env=s["x"],
+        )
+        return {"x": s["x"] + t[0], "t": t}
+
+    prog = sess.program(step)
+    s32 = {"x": jnp.zeros((), jnp.float32), "t": jnp.zeros((4,), jnp.float32)}
+    prog(s32, 2)
+    prog(s32, 5)  # different block size, same executable
+    assert prog.stats.compiles == 1
+    fresh = {"x": jnp.ones((), jnp.float32), "t": jnp.ones((4,), jnp.float32)}
+    prog(fresh, 1)  # new values, same signature → still no recompile
+    assert prog.stats.compiles == 1
+    wider = {"x": jnp.zeros((2,), jnp.float32), "t": jnp.zeros((4,), jnp.float32)}
+
+    def ok_step(ctx, s):
+        t = ctx.map_reduce(
+            DistRange(0, 32, 1), _sq_env_mapper, "sum",
+            jnp.zeros((4,), jnp.float32), env=s["x"][0],
+        )
+        return {"x": s["x"] + t[0], "t": t}
+
+    prog2 = BlazeSession().program(ok_step)
+    prog2(wider, 1)
+    prog2({"x": jnp.zeros((3,), jnp.float32), "t": jnp.zeros((4,), jnp.float32)}, 1)
+    assert prog2.stats.compiles == 2  # state signature change → deliberate miss
+
+
+def test_program_rejects_hash_targets_and_bad_state():
+    sess = BlazeSession()
+    hm = make_dist_hashmap(sess.mesh, 64, (), jnp.float32, "sum")
+
+    def hash_step(ctx, s):
+        ctx.map_reduce(
+            DistRange(0, 8, 1), _sq_env_mapper, "sum", hm, env=s,
+        )
+        return s
+
+    with pytest.raises(NotImplementedError, match="dense targets"):
+        sess.program(hash_step)(jnp.zeros((), jnp.float32), 1)
+
+    def shape_shifting_step(ctx, s):
+        t = ctx.map_reduce(
+            DistRange(0, 8, 1), _sq_env_mapper, "sum",
+            jnp.zeros((4,), jnp.float32), env=s[0],
+        )
+        return t  # [4] out of a scalar state
+
+    with pytest.raises(ValueError, match="state"):
+        sess.program(shape_shifting_step)(jnp.zeros((1,), jnp.float32), 1)
+
+
+# -- error-feedback int8 wire --------------------------------------------------
+
+
+def test_quantize_with_feedback_telescopes_exactly():
+    """Over N rounds, Σ recovered + final residual == Σ targets (telescoping):
+    the narrowing error never accumulates — it is always re-injected."""
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(300).astype(np.float32))
+    residual = jnp.zeros_like(x)
+    total = jnp.zeros_like(x)
+    for _ in range(10):
+        q, residual = quantize_with_feedback(x, residual, "int8")
+        total = total + dequantize(q, x)
+    np.testing.assert_allclose(
+        np.asarray(total + residual), np.asarray(10.0 * x), rtol=1e-4, atol=1e-4
+    )
+    # and the residual itself stays bounded by one round's quantization step
+    step = np.abs(np.asarray(x)).max() / 127.0
+    assert float(jnp.abs(residual).max()) <= 2 * step
+
+
+def test_quantize_feedback_beats_no_feedback_over_rounds():
+    """Accumulated round-off with feedback is strictly smaller than without
+    (the unbiasedness the iterative path relies on)."""
+    rng = np.random.RandomState(1)
+    x = jnp.asarray((rng.rand(512).astype(np.float32) - 0.3) * 1e-2)
+    exact = np.asarray(10.0 * x)
+    residual = jnp.zeros_like(x)
+    with_fb = jnp.zeros_like(x)
+    without = jnp.zeros_like(x)
+    for _ in range(10):
+        q, residual = quantize_with_feedback(x, residual, "int8")
+        with_fb = with_fb + dequantize(q, x)
+        q2, _ = quantize_with_feedback(x, jnp.zeros_like(x), "int8")
+        without = without + dequantize(q2, x)
+    err_fb = np.abs(np.asarray(with_fb) - exact).max()
+    err_no = np.abs(np.asarray(without) - exact).max()
+    assert err_fb <= err_no
+
+
+def test_program_int8_wire_carries_residual_and_stays_accurate():
+    sess = BlazeSession()
+    rows = np.random.RandomState(0).randn(64, 2).astype(np.float32)
+    rows[:, 0] = np.random.RandomState(1).randint(0, 8, 64)
+    pts = distribute(rows, sess.mesh)
+
+    def step(ctx, s):
+        inc = ctx.map_reduce(
+            pts, _dyn_mapper, "sum", jnp.zeros((8,), jnp.float32),
+            wire="int8",
+        )
+        return {"acc": s["acc"] + inc}
+
+    prog = sess.program(step)
+    out = prog({"acc": jnp.zeros((8,), jnp.float32)}, 10)
+    assert prog.feedback_slots == 1  # one residual carried through the loop
+    ref = 10.0 * _sum_rows_oracle(rows)
+    got = np.asarray(out["acc"])
+    denom = np.abs(ref).max()
+    assert np.abs(got - ref).max() / denom < 2e-2
+
+
+def test_program_int8_residual_survives_across_dispatches():
+    """Error feedback must stay live across blocks (even unroll=1): the exact
+    telescoping identity acc + Σ_shards residual == N · exact holds after any
+    mix of dispatch sizes only if the residual is fed back between them."""
+    sess = BlazeSession()
+    rows = np.random.RandomState(2).randn(64, 2).astype(np.float32)
+    rows[:, 0] = np.random.RandomState(3).randint(0, 8, 64)
+    pts = distribute(rows, sess.mesh)
+
+    def step(ctx, s):
+        inc = ctx.map_reduce(
+            pts, _dyn_mapper, "sum", jnp.zeros((8,), jnp.float32),
+            wire="int8",
+        )
+        return {"acc": s["acc"] + inc}
+
+    prog = sess.program(step)
+    state = {"acc": jnp.zeros((8,), jnp.float32)}
+    for _ in range(7):  # seven unroll=1 dispatches
+        state = prog(state, 1)
+    state = prog(state, 3)  # plus one unroll=3 block — 10 iterations total
+    assert prog.stats.dispatches == 8 and prog.stats.iterations == 10
+
+    (residual,) = prog._residual_state[list(prog._residual_state)[0]]
+    res_sum = np.asarray(residual).sum(axis=0)  # Σ over shards
+    assert float(np.abs(np.asarray(residual)).max()) > 0.0  # carry is live
+    exact = 10.0 * _sum_rows_oracle(rows)
+    got = np.asarray(state["acc"])
+    np.testing.assert_allclose(got + res_sum, exact, rtol=1e-4, atol=1e-3)
+
+
+# -- satellite: memoized topk --------------------------------------------------
+
+
+def test_topk_executable_memoized_across_calls():
+    from repro.core import containers as C
+    from repro.core import topk
+
+    C._TOPK_CACHE.clear()
+    rng = np.random.RandomState(0)
+    v = distribute(rng.randn(256).astype(np.float32))
+    out0 = topk(v, 5)
+    n_after_first = len(C._TOPK_CACHE)
+    assert n_after_first == 1
+    for i in range(5):
+        w = distribute(rng.randn(256).astype(np.float32))
+        topk(w, 5)
+    assert len(C._TOPK_CACHE) == n_after_first  # no fresh closures → no re-jit
+    (fn,) = C._TOPK_CACHE.values()
+    if hasattr(fn, "_cache_size"):  # jit traces stay flat too
+        assert fn._cache_size() == 1
+    # different k → a second (deliberate) entry; same-k correctness holds
+    topk(v, 3)
+    assert len(C._TOPK_CACHE) == 2
+    from repro.core import collect
+
+    np.testing.assert_allclose(
+        np.sort(out0), np.sort(collect(v))[-5:], rtol=1e-6
+    )
+
+
+def test_knn_reuses_topk_executable_across_queries():
+    """The query flows through env (a traced operand), so repeated kNN calls
+    with different query points share one cached executable."""
+    from repro.core import containers as C
+    from repro.core.algorithms import knn, knn_full_sort
+
+    C._TOPK_CACHE.clear()
+    pts = np.random.RandomState(0).randn(512, 3).astype(np.float32)
+    for i in range(4):
+        q = np.full(3, float(i), np.float32)
+        got = knn(pts, q, k=8)
+        ref = knn_full_sort(pts, q, k=8)
+        np.testing.assert_allclose(
+            np.sort(got.distances), np.sort(ref.distances), rtol=1e-5
+        )
+    assert len(C._TOPK_CACHE) == 1
+    (fn,) = C._TOPK_CACHE.values()
+    if hasattr(fn, "_cache_size"):
+        assert fn._cache_size() == 1
+
+
+def test_topk_correct_with_score_fn_after_memoization():
+    from repro.core import topk
+
+    rows = np.stack([np.arange(64.0), 64.0 - np.arange(64.0)], 1).astype(
+        np.float32
+    )
+    v = distribute(rows)
+
+    def score(r):
+        return r[1]
+
+    got = topk(v, 4, score_fn=score)
+    got2 = topk(v, 4, score_fn=score)  # memoized path
+    np.testing.assert_array_equal(got, got2)
+    assert set(got[:, 0].astype(int).tolist()) == {0, 1, 2, 3}
+
+
+# -- satellite: vectorized DistHashMap accessors -------------------------------
+
+
+def test_hashmap_items_matches_to_dict():
+    import collections
+
+    sess = BlazeSession()
+    lines = np.random.RandomState(0).randint(0, 50, (64, 8)).astype(np.int32)
+    lv = distribute(lines, sess.mesh)
+
+    def tok(i, toks, emit):
+        emit(toks, 1, mask=toks >= 0)
+
+    hm = make_dist_hashmap(sess.mesh, 256, (), jnp.int32, "sum")
+    hm = sess.map_reduce(lv, tok, "sum", hm)
+    keys, vals = hm.items()
+    assert keys.shape[0] == hm.size() == len(hm.to_dict())
+    ref = collections.Counter(lines.reshape(-1).tolist())
+    got = {int(k): int(v) for k, v in zip(keys, vals)}
+    assert got == dict(ref)
+    # to_dict is built on items() — same content
+    assert {k: int(v) for k, v in hm.to_dict().items()} == got

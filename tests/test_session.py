@@ -14,12 +14,15 @@ from repro.core import (
 )
 from repro.core.algorithms import (
     gmm_em,
+    gmm_em_reference,
     kmeans,
     kmeans_reference,
     pagerank,
     pagerank_reference,
 )
 from repro.data.synthetic import cluster_points, rmat_edges
+
+import pytest
 
 
 def _sq_mapper(v, emit):
@@ -338,3 +341,112 @@ def test_kmeans_pallas_matches_eager_and_reference():
     assert res.compiles == 2
     ref_centers, _ = kmeans_reference(pts, init, tol=0.0, max_iters=10)
     assert float(np.abs(res.centers - ref_centers).max()) < 1e-2
+
+
+# -- fused programs: N iterations = 1 program compile, ≤ ⌈N/unroll⌉ dispatches -
+
+PROGRAM_ENGINES = ("eager", "pallas", "naive")
+
+
+@pytest.mark.parametrize("engine", PROGRAM_ENGINES)
+def test_pagerank_program_10_iters_one_compile_two_dispatches(engine):
+    sess = BlazeSession()
+    edges = rmat_edges(6, 8, seed=3)  # 64 nodes
+    res = pagerank(edges, 64, tol=0.0, max_iters=10, engine=engine,
+                   session=sess, mode="program", unroll=5)
+    assert res.iterations == 10
+    # The whole 3-op iteration is ONE executable: a single program compile,
+    # and 10 iterations ship as ⌈10/5⌉ = 2 dispatches / 2 host syncs —
+    # versus 30 dispatches + 10 syncs for the per-op loop.
+    assert res.program_compiles == 1
+    assert res.dispatches == 2
+    assert res.host_syncs == 2
+    assert res.compiles == 0  # no per-op executables were built
+    assert sess.stats.calls == 0
+    assert sess.stats.program_compiles == 1
+    assert sess.stats.program_dispatches == 2
+    ref = pagerank_reference(edges, 64, tol=0.0, max_iters=10)
+    assert float(np.abs(res.scores - ref).max() / ref.max()) < 1e-4
+
+
+@pytest.mark.parametrize("engine", PROGRAM_ENGINES)
+def test_kmeans_program_10_iters_one_compile_two_dispatches(engine):
+    pts, _ = cluster_points(2000, 3, 4, seed=0)
+    init = pts[:4].copy()
+    sess = BlazeSession()
+    res = kmeans(pts, 4, init_centers=init, tol=0.0, max_iters=10,
+                 engine=engine, session=sess, mode="program", unroll=5)
+    assert res.iterations == 10
+    assert res.program_compiles == 1
+    # ⌈10/5⌉ = 2 fused-loop dispatches + the final per-op inertia pass
+    assert res.dispatches == 3
+    assert sess.stats.program_dispatches == 2
+    assert res.host_syncs == 2
+    assert res.compiles == 1  # only the final (per-op) inertia pass
+    ref_centers, _ = kmeans_reference(pts, init, tol=0.0, max_iters=10)
+    assert float(np.abs(res.centers - ref_centers).max()) < 1e-2
+
+
+@pytest.mark.parametrize("engine", PROGRAM_ENGINES)
+def test_gmm_program_10_iters_one_compile_two_dispatches(engine):
+    pts, _ = cluster_points(600, 2, 3, seed=1)
+    init = pts[:3].copy()
+    sess = BlazeSession()
+    res = gmm_em(pts, 3, init_mu=init, tol=0.0, max_iters=10, engine=engine,
+                 session=sess, mode="program", unroll=5)
+    assert res.iterations == 10
+    assert res.program_compiles == 1
+    assert res.dispatches == 2
+    assert res.host_syncs == 2
+    assert res.compiles == 0
+    ra, rm, rs, rll, _ = gmm_em_reference(pts, 3, init, tol=0.0, max_iters=10)
+    assert float(np.abs(res.mu - rm).max()) < 1e-2
+    assert float(np.abs(res.alpha - ra).max()) < 1e-3
+    assert abs(res.log_likelihood - rll) / abs(rll) < 1e-3
+
+
+def test_program_unroll_extremes_match_per_op_counts():
+    """unroll=1 → one dispatch+sync per iteration (but still 1 compile);
+    unroll=10 → one dispatch+sync total; per-op → 30 dispatches, 10 syncs."""
+    edges = rmat_edges(6, 8, seed=3)
+    ref = pagerank_reference(edges, 64, tol=0.0, max_iters=10)
+
+    for unroll, want_disp in ((1, 10), (10, 1), (4, 3)):
+        sess = BlazeSession()
+        res = pagerank(edges, 64, tol=0.0, max_iters=10, session=sess,
+                       mode="program", unroll=unroll)
+        assert res.program_compiles == 1, unroll
+        assert res.dispatches == want_disp, unroll
+        assert res.host_syncs == want_disp, unroll
+        assert float(np.abs(res.scores - ref).max() / ref.max()) < 1e-4
+
+    sess = BlazeSession()
+    res = pagerank(edges, 64, tol=0.0, max_iters=10, session=sess)
+    assert res.dispatches == 30  # 3 ops × 10 iterations
+    assert res.host_syncs == 10  # one float(delta) per iteration
+    assert res.program_compiles == 0
+
+
+def test_program_int8_wire_pagerank_matches_reference():
+    """wire="int8" inside a fused program carries error-feedback residuals
+    (quantize_with_feedback) across the device-resident iterations."""
+    sess = BlazeSession()
+    edges = rmat_edges(6, 8, seed=5)
+    res = pagerank(edges, 64, tol=0.0, max_iters=10, wire="int8",
+                   session=sess, mode="program", unroll=5)
+    ref = pagerank_reference(edges, 64, tol=0.0, max_iters=10)
+    assert res.program_compiles == 1 and res.dispatches == 2
+    assert float(np.abs(res.scores - ref).max() / ref.max()) < 2e-2
+
+
+def test_program_convergence_stops_early_on_block_boundary():
+    sess = BlazeSession()
+    edges = rmat_edges(6, 8, seed=3)
+    res = pagerank(edges, 64, tol=1e-3, max_iters=100, session=sess,
+                   mode="program", unroll=4)
+    assert res.converged
+    assert res.iterations % 4 == 0  # host test runs only every `unroll` steps
+    assert res.dispatches == res.iterations // 4
+    per_op = pagerank(edges, 64, tol=1e-3, max_iters=100)
+    # fused loop may overshoot convergence by < one block, never undershoot
+    assert per_op.iterations <= res.iterations < per_op.iterations + 4
