@@ -13,6 +13,7 @@ over throughput — see ``program_fusion``'s dispatches/compiles columns).
 from __future__ import annotations
 
 import inspect
+import json
 import os
 import time
 
@@ -85,8 +86,8 @@ def fig4_wordcount():
             (f"fig4_wordcount_{engine}", t * 1e6, f"{n_words/t/1e6:.1f}Mwords/s")
         )
 
-    # pallas column: bounded vocabulary → dense [V] target, kernel combine
-    # (interpret mode on CPU — structural comparison, not TPU perf).
+    # pallas dense column: bounded vocabulary → dense [V] target, segment-
+    # reduce kernel combine (interpret mode on CPU — structural, not perf).
     def run_pallas():
         counts, st = wordcount(
             lines, engine="pallas", target="dense", vocab_size=20000,
@@ -104,6 +105,30 @@ def fig4_wordcount():
             f"occupancy={occ:.2f};bn={stats['pallas'].kernel_block_n}",
         )
     )
+
+    # pallas hash column: open vocabulary → DistHashMap target, the hash-
+    # aggregation kernel replaces both unique_combines + hashmap_insert.
+    # Duplicate-heavy small-vocab slice — the local-combine regime; sized so
+    # interpret mode stays comparable (see bench4_hash_aggregation).
+    hlines, _ = zipf_corpus(200 * S, 16, 200, seed=0)
+    sess_h = BlazeSession()
+
+    def run_pallas_hash():
+        hm, st = wordcount(
+            hlines, engine="pallas", return_stats=True, session=sess_h
+        )
+        jax.block_until_ready(hm.table.vals)
+        stats["pallas_hash"] = st.finalize()
+
+    t = _timeit(run_pallas_hash)
+    sh = stats["pallas_hash"]
+    rows.append(
+        (
+            "fig4_wordcount_pallas_hash", t * 1e6,
+            f"{hlines.size/t/1e6:.1f}Mwords/s;occupancy={sh.kernel_occupancy:.2f};"
+            f"cap={sh.kernel_table_cap};probes={sh.kernel_probe_depth}",
+        )
+    )
     rows.append(
         (
             "fig4_wordcount_wire",
@@ -113,6 +138,147 @@ def fig4_wordcount():
             f"pallas_bytes={stats['pallas'].shuffle_payload_bytes}",
         )
     )
+    return rows
+
+
+def bench4_hash_aggregation():
+    """The hash-path benchmark (PR 4): every engine on the same duplicate-
+    heavy open-vocabulary wordcount, plus the fused program mode — and a
+    machine-readable ``results/BENCH_4.json`` capturing wall time,
+    dispatches, pairs shipped / wire bytes (narrowed keys vs int32) and the
+    kernel's occupancy / table / probe counters, so the hash-path perf
+    trajectory is tracked from this PR on.
+
+    Sizing note: the kernel runs in *interpret mode* on CPU CI — the
+    duplicate-heavy small-vocab slice is the regime where the streaming
+    combine matches the sort-based eager plan even interpreted (≈16×
+    duplication per key); TPU runs lift the same program unchanged.
+    """
+    n_lines, width, vocab = 200 * (10 if BIG else 1) // (4 if SMOKE else 1), 16, 200
+    iters, unroll = 10, 5
+    lines, _ = zipf_corpus(max(n_lines, 50), width, vocab, seed=0)
+    n_tokens = int(lines.size)
+    rows, algos = [], []
+
+    def record(name, wall_s, counters, st=None, extra=None):
+        # ``counters`` are per-invocation deltas (one algorithm call), NOT
+        # cumulative session totals — _timeit runs 1 warmup + 3 reps, and
+        # cross-algorithm comparisons need single-run numbers.
+        entry = {
+            "name": name,
+            "wall_s": round(wall_s, 6),
+            "tokens_per_s": round(n_tokens / max(wall_s, 1e-9)),
+            **counters,
+        }
+        if st is not None:
+            entry.update(
+                pairs_emitted=st.pairs_emitted,
+                pairs_shipped=st.pairs_shipped,
+                shuffle_payload_bytes=st.shuffle_payload_bytes,
+                overflow=st.overflow,
+                kernel_occupancy=st.kernel_occupancy,
+                kernel_table_cap=st.kernel_table_cap,
+                kernel_probe_depth=st.kernel_probe_depth,
+                kernel_block_n=st.kernel_block_n,
+            )
+        if extra:
+            entry.update(extra)
+        algos.append(entry)
+        derived = ";".join(
+            f"{k}={entry[k]}"
+            for k in (
+                "dispatches", "pairs_shipped", "shuffle_payload_bytes",
+                "kernel_occupancy", "overflow",
+            )
+            if k in entry
+        )
+        rows.append((f"bench4_{name}", wall_s * 1e6, derived))
+
+    # -- per-op engines (vocab bound known -> narrowed int16/int8 keys) -----
+    for engine in ("eager", "pallas", "naive"):
+        sess = BlazeSession()
+        last = {}
+
+        def run(e=engine, s=sess, last=last):
+            d0, c0, h0 = (
+                s.stats.dispatches, s.stats.compiles, s.stats.host_syncs
+            )
+            hm, st = wordcount(
+                lines, engine=e, vocab_size=vocab, session=s,
+                return_stats=True,
+            )
+            jax.block_until_ready(hm.table.vals)
+            last["st"] = st.finalize()
+            last["counters"] = {
+                "dispatches": s.stats.dispatches - d0,
+                "compiles": s.stats.compiles - c0,
+                "program_compiles": 0,
+                "host_syncs": s.stats.host_syncs - h0,
+            }
+
+        t = _timeit(run)
+        record(f"wordcount_{engine}", t, last["counters"], last["st"])
+
+    # -- wire narrowing delta: the same eager run shipping int32 keys -------
+    sess = BlazeSession()
+    hm, st = wordcount(lines, engine="eager", session=sess, return_stats=True)
+    # vocab bound inferred from data => narrowed; rebuild without key_range
+    from repro.core import distribute as _dist, make_dist_hashmap as _mk
+    from repro.core.algorithms.wordcount import wordcount_mapper as _wm
+    import jax.numpy as jnp
+
+    hm32 = _mk(sess.mesh, max(64, 4 * vocab), (), jnp.int32, "sum")
+    _, st32 = sess.map_reduce(
+        _dist(lines, sess.mesh), _wm, "sum", hm32, return_stats=True
+    )
+    narrow_b, wide_b = st.finalize().shuffle_payload_bytes, st32.finalize().shuffle_payload_bytes
+    rows.append(
+        (
+            "bench4_wire_narrowing", 0.0,
+            f"narrow_bytes={narrow_b};int32_bytes={wide_b};"
+            f"saving={1 - narrow_b / max(wide_b, 1):.0%}",
+        )
+    )
+
+    # -- fused program mode: iters passes, ceil(iters/unroll) dispatches.
+    # One COLD call per engine (program_fusion precedent): the driver builds
+    # its program per call, so the single compile is part of the story —
+    # the loop counters (1 compile, 2 dispatches, 0 syncs) are the contract.
+    for engine in ("eager", "pallas"):
+        sess = BlazeSession()
+        t0 = time.perf_counter()
+        res = wordcount(
+            lines, engine=engine, mode="program", iters=iters, unroll=unroll,
+            vocab_size=vocab, session=sess,
+        )
+        t = time.perf_counter() - t0
+        record(
+            f"wordcount_program_{engine}", t / iters,
+            {
+                "dispatches": res.dispatches,
+                "compiles": res.compiles,
+                "program_compiles": res.program_compiles,
+                "host_syncs": res.host_syncs,
+            },
+            extra={
+                "cold": True,  # includes the one program compile
+                "iterations": res.iterations,
+            },
+        )
+
+    os.makedirs("results", exist_ok=True)
+    payload = {
+        "bench": "BENCH_4",
+        "config": {
+            "n_lines": int(lines.shape[0]), "width": width, "vocab": vocab,
+            "tokens": n_tokens, "iters": iters, "unroll": unroll,
+            "interpret_mode": True,
+        },
+        "algorithms": algos,
+    }
+    with open("results/BENCH_4.json", "w") as f:
+        json.dump(payload, f, indent=1)
+    rows.append(("bench4_json", 0.0, "written=results/BENCH_4.json"))
     return rows
 
 
@@ -358,6 +524,7 @@ def sec232_serialization():
 ALL = [
     table1_pi,
     fig4_wordcount,
+    bench4_hash_aggregation,
     fig5_pagerank,
     fig6_kmeans,
     fig7_gmm,

@@ -4,9 +4,27 @@ Input lines arrive as fixed-width int32 token-id rows (padding = -1), i.e. the
 output of ``data.synthetic.zipf_corpus`` or ``data.text.load_and_tokenize``.
 The mapper emits one ``(word_id, 1)`` pair per live token — a batched emit, the
 TPU shape of the paper's per-word ``emit(word, 1)`` loop.  Target is a
-``DistHashMap`` keyed by word id.
+``DistHashMap`` keyed by word id (``target="dense"`` for a bounded vocabulary).
+
+Execution modes:
+
+* ``mode="per_op"`` (default) — one ``map_reduce`` dispatch per pass; with
+  ``iters > 1`` (the streaming-aggregation setting: the same batch re-counted
+  each round) that is one dispatch *per pass*.
+* ``mode="program"`` — the counting pass is lowered by ``session.program``
+  into ONE executable whose hash table is threaded through a device-resident
+  ``fori_loop``; ``run_loop(unroll=U)`` then drives ``iters`` passes in
+  ``⌈iters/U⌉`` dispatches with zero per-iteration host syncs.  This is the
+  word-count shape of the paper's resident hot loop — only possible now that
+  hash targets thread through fused programs.
+
+The known vocabulary bound is passed as ``key_range`` so the shuffle ships
+narrowed keys and ``engine="pallas"`` sizes its combine table by distinct
+words, not emitted tokens.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import jax.numpy as jnp
 import numpy as np
@@ -25,6 +43,18 @@ def wordcount_mapper(i, tokens, emit):
     emit(tokens, 1, mask=tokens >= 0)
 
 
+@dataclasses.dataclass
+class WordCountResult:
+    """Multi-pass (streaming) word count: counts + the fusion counters."""
+
+    counts: DistHashMap
+    iterations: int
+    compiles: int = 0  # per-op map_reduce executables compiled
+    program_compiles: int = 0  # fused-program executables (mode="program")
+    dispatches: int = 0  # executable launches across the loop
+    host_syncs: int = 0  # blocking host materialisations across the loop
+
+
 def wordcount(
     lines: np.ndarray,
     *,
@@ -33,22 +63,39 @@ def wordcount(
     capacity_per_shard: int | None = None,
     target: str = "hash",
     vocab_size: int | None = None,
+    mode: str = "per_op",
+    iters: int = 1,
+    unroll: int = 1,
     return_stats: bool = False,
     session: BlazeSession | None = None,
 ):
     """Count token occurrences.
 
     ``target="hash"`` (default) returns a ``DistHashMap`` — the open-ended
-    vocabulary plan.  ``target="dense"`` counts into a dense ``[vocab_size]``
-    int32 array (key == token id) — the paper's small-fixed-key-range plan
-    when the vocabulary is bounded, and the shape ``engine="pallas"``/``"auto"``
-    accelerates with the segment-reduce kernel.
+    vocabulary plan, and the shape ``engine="pallas"``/``"auto"`` accelerates
+    with the hash-aggregation kernel.  ``target="dense"`` counts into a dense
+    ``[vocab_size]`` int32 array (key == token id) — the paper's
+    small-fixed-key-range plan, accelerated by the segment-reduce kernel.
+
+    ``mode="program"`` (hash target only) fuses the pass into one executable
+    and runs ``iters`` passes ``unroll`` at a time, returning a
+    ``WordCountResult``; ``mode="per_op"`` with ``iters > 1`` runs the same
+    loop per-op for comparison (also a ``WordCountResult``).  With the
+    defaults (``per_op``, ``iters=1``) the return is the counts container
+    alone — or ``(counts, MapReduceStats)`` under ``return_stats=True``.
     """
     if target not in ("hash", "dense"):
         raise ValueError(f"unknown target {target!r}; choose 'hash' or 'dense'")
+    if mode not in ("per_op", "program"):
+        raise ValueError(f"unknown mode {mode!r}; choose 'per_op' or 'program'")
     sess, mesh = resolve(session, mesh)
     lines_v = distribute(lines, mesh)
     if target == "dense":
+        if mode == "program":
+            raise ValueError(
+                "mode='program' wordcount targets the hash path; use the "
+                "generic session.program for dense iteration"
+            )
         vocab = (
             vocab_size if vocab_size is not None
             else (int(lines.max()) + 1 if lines.size else 1)
@@ -63,19 +110,61 @@ def wordcount(
             engine=engine,
             return_stats=return_stats,
         )
-    vocab_bound = int(lines.max()) + 1 if lines.size else 1
+    vocab_bound = (
+        vocab_size if vocab_size is not None
+        else (int(lines.max()) + 1 if lines.size else 1)
+    )
     if capacity_per_shard is None:
         capacity_per_shard = max(64, 4 * vocab_bound)
     hm = make_dist_hashmap(mesh, capacity_per_shard, (), jnp.int32, "sum")
-    return sess.map_reduce(
-        lines_v,
-        wordcount_mapper,
-        "sum",
-        hm,
-        mesh=mesh,
-        engine=engine,
-        return_stats=return_stats,
-    )
+    compiles0 = sess.stats.compiles
+    dispatches0 = sess.stats.dispatches
+    syncs0 = sess.stats.host_syncs
+
+    if mode == "program":
+
+        def step(ctx, s):
+            ctx.map_reduce(
+                lines_v, wordcount_mapper, "sum", hm,
+                engine=engine, key_range=vocab_bound,
+            )
+            return {"it": s["it"] + 1}
+
+        prog = sess.program(step, mesh=mesh)
+        state = {"it": jnp.zeros((), jnp.int32)}
+        state, info = sess.run_loop(
+            prog, state, max_iters=iters, unroll=unroll
+        )
+        return WordCountResult(
+            counts=prog.hash_result(hm),
+            iterations=info.iterations,
+            compiles=sess.stats.compiles - compiles0,
+            program_compiles=info.compiles,
+            dispatches=sess.stats.dispatches - dispatches0,
+            host_syncs=sess.stats.host_syncs - syncs0,
+        )
+
+    stats = None
+    for _ in range(iters):
+        hm, stats = sess.map_reduce(
+            lines_v,
+            wordcount_mapper,
+            "sum",
+            hm,
+            mesh=mesh,
+            engine=engine,
+            key_range=vocab_bound,
+            return_stats=True,
+        )
+    if iters > 1:
+        return WordCountResult(
+            counts=hm,
+            iterations=iters,
+            compiles=sess.stats.compiles - compiles0,
+            dispatches=sess.stats.dispatches - dispatches0,
+            host_syncs=sess.stats.host_syncs - syncs0,
+        )
+    return (hm, stats) if return_stats else hm
 
 
 def counts_dict(hm: DistHashMap) -> dict[int, int]:

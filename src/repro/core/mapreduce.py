@@ -30,18 +30,22 @@ Engines:
   the key range is small and fixed), then the shuffle moves locally-reduced
   data only — ``psum`` for dense targets, hash-partitioned ``all_to_all`` of
   unique pairs for hash targets.
-* ``engine="pallas"`` (Blaze, kernel combine): the eager plan with the
-  per-shard dynamic-key combine lowered through the Pallas segment-reduce
-  kernel (``Reducer.pallas_segment`` — one-hot matmul on the MXU, VMEM-resident
-  ``[K, V]`` accumulator; interpret mode off-TPU).  Dense targets only; the
-  static-key fast path and the ``psum`` shuffle are identical to eager.
-  ``MapReduceStats`` additionally reports the kernel block size and lane
-  occupancy.
+* ``engine="pallas"`` (Blaze, kernel combine): the eager plan with every
+  per-shard combine lowered through a Pallas kernel (interpret mode off-TPU).
+  Dense targets run the segment-reduce kernel (``Reducer.pallas_segment`` —
+  one-hot matmul on the MXU, VMEM-resident ``[K, V]`` accumulator); hash
+  targets run the hash-aggregation kernel (``Reducer.pallas_hash`` — an
+  open-addressing VMEM table that replaces both sort-based
+  ``unique_combine`` passes *and* the ``hashmap_insert`` scatter loop).
+  The static-key fast path and the shuffle collectives are identical to
+  eager.  ``MapReduceStats`` additionally reports the kernel launch: block
+  size, lane occupancy, and (hash) table capacity + probe depth.
 * ``engine="naive"`` (conventional MapReduce / Spark's wide shuffle): every
   emitted pair goes on the wire unreduced; reduction happens only at the
   destination shard.
-* ``engine="auto"``: resolved by the session — pallas for small static key
-  ranges (dense target, built-in reducer), eager otherwise.
+* ``engine="auto"``: resolved by the session — pallas for built-in reducers
+  whose accumulator (dense ``[K]`` / hash table) stays VMEM-sized, eager
+  otherwise.
 
 ``wire`` ∈ {"none", "bf16", "int8"} applies the fast-serialization analogue to
 the collective payload (dense-sum targets).
@@ -84,11 +88,15 @@ class MapReduceStats:
     cache_hits: int = 0  # 1 iff this call reused a session-cached executable
     dispatches: int = 1  # executable launches this call (always 1 standalone;
     #                      fused programs amortise N ops over one dispatch)
-    # engine="pallas" only: the segment-reduce kernel's launch accounting.
+    # engine="pallas" only: the kernel's launch accounting (segment-reduce
+    # for dense targets, hash-aggregation for DistHashMap targets).
     kernel_block_n: int | None = None  # pair-block size the kernel ran with
     kernel_lanes: int | None = None  # padded pair-lanes processed (global)
     kernel_pairs: Any = None  # live pairs entering the kernel (device array)
     kernel_occupancy: float | None = None  # kernel_pairs / kernel_lanes
+    # hash-aggregation kernel only: table geometry + probe depth.
+    kernel_table_cap: int | None = None  # pre-shuffle combine table capacity
+    kernel_probe_depth: int | None = None  # configured max probe rounds
 
     def finalize(self) -> "MapReduceStats":
         def _get(x):
@@ -116,6 +124,8 @@ class MapReduceStats:
             kernel_lanes=self.kernel_lanes,
             kernel_pairs=kernel_pairs,
             kernel_occupancy=occupancy,
+            kernel_table_cap=self.kernel_table_cap,
+            kernel_probe_depth=self.kernel_probe_depth,
         )
 
 
@@ -230,7 +240,10 @@ def bucket_by_dest(
     """
     n = keys.shape[0]
     dest = jnp.where(valid, C.shard_of_key(keys, n_dest).astype(jnp.int32), n_dest)
-    order = jnp.argsort(dest)  # stable
+    # Rank-within-bucket (and which pairs survive a full bucket) depends on
+    # the sort preserving emission order among equal destinations — request
+    # stability explicitly rather than relying on the backend default.
+    order = jnp.argsort(dest, stable=True)
     sdest = jnp.take(dest, order)
     skeys = jnp.take(keys, order)
     svals = jnp.take(vals, order, axis=0)
@@ -373,6 +386,7 @@ def map_reduce(
     wire: str = "none",
     env: Any = None,
     shuffle_slack: float = 2.0,
+    key_range: int | None = None,
     return_stats: bool = False,
     session=None,
 ):
@@ -381,14 +395,17 @@ def map_reduce(
     Routes through ``session`` (or the process-wide default ``BlazeSession``),
     which owns the mesh and the compiled-executable cache — N iterative calls
     with the same (source spec, mapper, reducer, target spec, engine, wire)
-    compile exactly once.  See ``repro.core.session``.
+    compile exactly once.  See ``repro.core.session``.  ``key_range`` (hash
+    targets: keys promised to lie in ``[0, key_range)``) narrows the shuffle
+    key dtype and sizes the pallas combine table.
     """
     from repro.core.session import get_default_session
 
     sess = session if session is not None else get_default_session()
     return sess.map_reduce(
         source, mapper, reducer, target, mesh=mesh, engine=engine, wire=wire,
-        env=env, shuffle_slack=shuffle_slack, return_stats=return_stats,
+        env=env, shuffle_slack=shuffle_slack, key_range=key_range,
+        return_stats=return_stats,
     )
 
 
@@ -635,8 +652,17 @@ def _collective_reduce(partial: Array, red: Reducer, axis: str, wire: str) -> Ar
     raise ValueError(f"unknown wire mode {wire!r}")
 
 
+def _wire_key_dtype(key_range: int | None) -> jnp.dtype:
+    """Key dtype the hash shuffle ships: narrowed when the range is known
+    (the §2.3.2 fast-serialization analogue for *explicit* keys)."""
+    if key_range is None:
+        return jnp.dtype(jnp.int32)
+    return narrowest_int_dtype(key_range)
+
+
 def hash_shard_stage(
-    kind, source, mapper, red, val_dtype, engine, slack, n_shards
+    kind, source, mapper, red, val_dtype, engine, slack, n_shards,
+    key_range=None,
 ):
     """Build the composable shard stage for a ``DistHashMap`` target.
 
@@ -645,16 +671,37 @@ def hash_shard_stage(
     shuffle, table merge) as a pure function of this shard's inputs:
 
         ``stage(env, table, local, coll)
-            -> (table', live_emitted, live_shipped)``
+            -> (table', live_emitted, live_shipped, kernel_pairs)``
 
     ``table`` is this shard's ``HashTable``; the returned table has the
     shuffled pairs merged in and bucket drops added to ``overflow``.
+
+    * ``engine="eager"`` combines locally with the sort-based
+      ``unique_combine`` before the shuffle and merges received pairs with a
+      second ``unique_combine`` + ``hashmap_insert`` scatter loop.
+    * ``engine="pallas"`` lowers BOTH combines through the hash-aggregation
+      kernel (``repro.kernels.hash_combine``): the pre-shuffle combine
+      streams raw pairs into a fresh VMEM-resident table (duplicates fold
+      in-kernel — no sort), and the post-shuffle merge streams received
+      pairs straight into the target shard's table (``init=``), replacing
+      the ``unique_combine`` + 16-round ``hashmap_insert`` pair.
+    * ``engine="naive"`` ships every raw pair and reduces at the
+      destination only.
+
+    ``key_range`` (keys known to lie in ``[0, key_range)``) narrows the
+    bucket-key dtype on the wire and sizes the kernel's combine table by the
+    distinct-key bound instead of the stream length.
+
     Standalone ``map_reduce`` wraps one stage in ``shard_map`` + ``jit``
-    (``_map_reduce_hash``); fused programs currently reject hash targets
-    (their state is per-shard, not replicated), so this stage only ever runs
-    under ``RealCollectives`` — it still goes through the indirection so the
-    two engines stay structurally parallel.
+    (``_map_reduce_hash``); ``repro.core.program`` composes it into fused
+    iteration bodies with the shard's table threaded through the loop carry.
+    Returns ``(stage, kernel_meta)`` — ``kernel_meta`` is filled at trace
+    time with the kernel launch geometry when the kernel runs.
     """
+    from repro.kernels import hash_combine as HK
+
+    use_kernel = engine == "pallas" and red.pallas_hash is not None
+    kernel_meta: dict = {}
 
     def stage(env_, table, local, coll):
         keys, vals, valid = _run_mapper(
@@ -663,40 +710,109 @@ def hash_shard_stage(
         vals = vals.astype(val_dtype)
         n_emit = keys.shape[0]
         live_emitted = jnp.sum(valid).astype(jnp.int32)
+        kernel_pairs = jnp.zeros((), jnp.int32)
+        pre_drop = jnp.zeros((), jnp.int32)
 
-        if engine == "eager":
+        if use_kernel:
+            # Kernel local combine: raw pairs → fresh VMEM hash table.  The
+            # table's live rows *are* the locally-reduced pairs (at most one
+            # per key), so the sort-based unique_combine disappears.
+            vflat = vals.reshape((n_emit, -1))
+            cap, bn, probes = HK.choose_table_cap(
+                n_emit, vflat.shape[1], red.name, vflat.dtype,
+                distinct_hint=key_range,
+            )
+            mkeys = jnp.where(valid, keys, HK.EMPTY_KEY)
+            tk, tv, pre_drop = red.pallas_hash(
+                mkeys, vflat, cap, max_probes=probes, block_n=bn
+            )
+            keys, valid = tk, tk != HK.EMPTY_KEY
+            vals = tv.reshape((cap,) + vals.shape[1:]).astype(val_dtype)
+            kernel_pairs = live_emitted
+            _, lanes = HK.hash_aggregate_lanes(
+                n_emit, cap, vflat.shape[1], red.name, vflat.dtype,
+                block_n=bn,
+            )
+            kernel_meta.update(
+                block_n=bn, lanes=lanes * n_shards, table_cap=cap,
+                probe_depth=probes,
+            )
+        elif engine == "eager":
             keys, vals, valid = C.unique_combine(keys, vals, valid, red)
         live_shipped = jnp.sum(valid).astype(jnp.int32)
 
+        n_stream = keys.shape[0]
         bucket_cap = max(1, int(math.ceil(slack * n_emit / n_shards)))
-        bucket_cap = min(bucket_cap, n_emit)
+        bucket_cap = min(bucket_cap, n_stream)
         ident = red.identity(vals.dtype)
         bkeys, bvals, dropped = bucket_by_dest(
             keys, vals, valid, n_shards, bucket_cap, ident
         )
-        rkeys = coll.all_to_all_tiled(bkeys).reshape(-1)
+        # Narrowed keys on the wire: the shuffle ships the smallest int
+        # dtype covering [0, key_range); EMPTY_KEY maps to the narrow
+        # dtype's own min sentinel and back.
+        wire_dtype = _wire_key_dtype(key_range)
+        if wire_dtype.itemsize < 4:
+            sentinel = int(jnp.iinfo(wire_dtype).min)
+            nk = jnp.where(bkeys == C.EMPTY_KEY, sentinel, bkeys)
+            rk = coll.all_to_all_tiled(nk.astype(wire_dtype))
+            rkeys = rk.astype(jnp.int32).reshape(-1)
+            rkeys = jnp.where(rkeys == sentinel, C.EMPTY_KEY, rkeys)
+        else:
+            rkeys = coll.all_to_all_tiled(bkeys).reshape(-1)
         rvals = coll.all_to_all_tiled(bvals)
         rvals = rvals.reshape((-1,) + rvals.shape[2:])
         rvalid = rkeys != C.EMPTY_KEY
-        # Received pairs may repeat across source shards: combine → insert.
-        ukeys, uvals, uvalid = C.unique_combine(rkeys, rvals, rvalid, red)
-        table = C.HashTable(table.keys, table.vals, table.overflow + dropped)
-        table = C.hashmap_insert(table, ukeys, uvals, uvalid, red)
-        return table, live_emitted, live_shipped
+        table = C.HashTable(
+            table.keys, table.vals, table.overflow + dropped + pre_drop
+        )
+        if use_kernel:
+            # Kernel merge into the target shard's table: received pairs may
+            # repeat across source shards, and the kernel folds duplicates
+            # natively — the second unique_combine and the hashmap_insert
+            # scatter loop both disappear.
+            n_recv = rkeys.shape[0]
+            mk = jnp.where(rvalid, rkeys, HK.EMPTY_KEY)
+            rflat = rvals.astype(val_dtype).reshape((n_recv, -1))
+            merge_probes = max(16, HK.choose_probe_depth(n_recv, table.capacity))
+            tk, tv, ovf = red.pallas_hash(
+                mk, rflat, table.capacity,
+                init=(
+                    table.keys,
+                    table.vals.reshape((table.capacity, -1)),
+                    table.overflow,
+                ),
+                max_probes=merge_probes,
+            )
+            table = C.HashTable(
+                tk, tv.reshape(table.vals.shape).astype(val_dtype), ovf
+            )
+            kernel_meta.setdefault("merge_probe_depth", merge_probes)
+        else:
+            ukeys, uvals, uvalid = C.unique_combine(rkeys, rvals, rvalid, red)
+            # Same adaptive probe depth as the kernel merge: near-capacity
+            # tables need more rounds to *find* the free slots that exist.
+            merge_probes = max(
+                16, HK.choose_probe_depth(rkeys.shape[0], table.capacity)
+            )
+            table = C.hashmap_insert(
+                table, ukeys, uvals, uvalid, red, max_probes=merge_probes
+            )
+        return table, live_emitted, live_shipped, kernel_pairs
 
-    return stage
+    return stage, kernel_meta
 
 
 def _map_reduce_hash(
     kind, source, mapper, red, target, mesh, n_shards, engine, slack, env,
-    cache=None,
+    key_range=None, cache=None,
 ):
-    """DistHashMap target: eager-combine → hash-partition → all_to_all → merge."""
+    """DistHashMap target: local combine → hash-partition → all_to_all → merge."""
     axis = C.DATA_AXIS
     cache = cache if cache is not None else {}
 
     cache_key = (
-        "hash", mapper, red.name, red, engine, slack, mesh, kind,
+        "hash", mapper, red.name, red, engine, slack, mesh, kind, key_range,
         _abstract(_source_operands(kind, source)[0]),
         getattr(source, "n", None) if kind == "vector" else
         (source.start, source.stop, source.step) if kind == "range" else None,
@@ -705,50 +821,63 @@ def _map_reduce_hash(
 
     compiled_now = cache_key not in cache
     if compiled_now:
-        stage = hash_shard_stage(
+        stage, kernel_meta = hash_shard_stage(
             kind, source, mapper, red, target.table.vals.dtype, engine,
-            slack, n_shards,
+            slack, n_shards, key_range=key_range,
         )
 
         def shard_fn(env_, tkeys, tvals, tovf, *operands):
             coll = RealCollectives(axis, n_shards)
             local = _local_view(kind, source, operands)
             table = C.HashTable(tkeys[0], tvals[0], tovf[0])
-            table, live_emitted, live_shipped = stage(env_, table, local, coll)
+            table, live_emitted, live_shipped, kernel_pairs = stage(
+                env_, table, local, coll
+            )
             return (
                 table.keys[None],
                 table.vals[None],
                 table.overflow[None],
                 live_emitted[None],
                 live_shipped[None],
+                kernel_pairs[None],
             )
 
         d = P(C.DATA_AXIS)
         in_specs = (P(), d, d, d) + tuple(_source_operands(kind, source)[1])
-        cache[cache_key] = jax.jit(
-            shard_map(
-                shard_fn,
-                mesh=mesh,
-                in_specs=in_specs,
-                out_specs=(d, d, d, d, d),
-                check_vma=False,
-            )
+        cache[cache_key] = (
+            jax.jit(
+                shard_map(
+                    shard_fn,
+                    mesh=mesh,
+                    in_specs=in_specs,
+                    out_specs=(d, d, d, d, d, d),
+                    check_vma=False,
+                )
+            ),
+            kernel_meta,
         )
 
+    run_fn, kernel_meta = cache[cache_key]
     operands, _ = _source_operands(kind, source)
-    nk, nv, novf, emitted, shipped = cache[cache_key](
+    nk, nv, novf, emitted, shipped, kernel_pairs = run_fn(
         env, target.table.keys, target.table.vals, target.table.overflow, *operands
     )
     out = C.DistHashMap(C.HashTable(nk, nv, novf), reducer_name=red.name)
     val_bytes = jnp.dtype(target.table.vals.dtype).itemsize
+    key_bytes = _wire_key_dtype(key_range).itemsize
     stats = MapReduceStats(
         engine=engine,
-        collective="all_to_all",
+        collective=f"all_to_all[pairs x {key_bytes + val_bytes}B]",
         pairs_emitted=emitted,
         pairs_shipped=shipped,
-        shuffle_payload_bytes=jnp.sum(shipped) * (4 + val_bytes),
+        shuffle_payload_bytes=jnp.sum(shipped) * (key_bytes + val_bytes),
         overflow=novf,
         compiles=int(compiled_now),
         cache_hits=int(not compiled_now),
+        kernel_block_n=kernel_meta.get("block_n"),
+        kernel_lanes=kernel_meta.get("lanes"),
+        kernel_pairs=kernel_pairs if kernel_meta else None,
+        kernel_table_cap=kernel_meta.get("table_cap"),
+        kernel_probe_depth=kernel_meta.get("probe_depth"),
     )
     return out, stats

@@ -48,9 +48,17 @@ enter as sharded operands.  Per-iteration *sharded* intermediates (GMM's
 densities/memberships) stay on-shard as ``LocalVector``s produced by
 ``ctx.foreach`` — they never cross the wire and never leave the executable.
 
-Hash targets are rejected inside programs: a ``DistHashMap`` is per-shard
-state, while program state is replicated — run hash-target ops per-op
-outside the program (the per-op path is unchanged).
+Hash targets (``DistHashMap``) are per-shard state, while the user state
+pytree is replicated — so their tables are threaded through the fused loop
+the same way int8 error-feedback residuals are: discovery records each
+target (keyed by the identity of its backing buffers), the executable takes
+the per-shard ``HashTable`` arrays as sharded operands, carries them through
+the ``fori_loop``, and returns them updated; ``Program`` keeps the returned
+tables across dispatches and ``program.hash_result(hm)`` materialises the
+accumulated ``DistHashMap``.  Inside the step, ``ctx.map_reduce`` on a hash
+target returns a ``LocalHashMap`` — this shard's updated table — usable as a
+source for later ops in the same iteration (multi-pass aggregation without
+leaving the executable).
 """
 from __future__ import annotations
 
@@ -68,7 +76,14 @@ from repro.core.reducers import get_reducer
 
 Array = jax.Array
 
-__all__ = ["LocalVector", "LoopInfo", "Program", "ProgramContext", "ProgramStats"]
+__all__ = [
+    "LocalHashMap",
+    "LocalVector",
+    "LoopInfo",
+    "Program",
+    "ProgramContext",
+    "ProgramStats",
+]
 
 
 @jax.tree_util.register_dataclass
@@ -83,6 +98,21 @@ class LocalVector:
 
     data: Array
     n: int = dataclasses.field(metadata=dict(static=True))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class LocalHashMap:
+    """THIS shard's view of a hash target inside a program trace.
+
+    Returned by ``ctx.map_reduce`` when the target is a ``DistHashMap``:
+    ``table`` is the shard's updated ``HashTable`` (post-shuffle, post-merge).
+    Usable as a source for later ops in the same program — the second pass
+    reads the table in place, no collective, nothing leaves the executable.
+    """
+
+    table: C.HashTable
+    reducer_name: str = dataclasses.field(metadata=dict(static=True))
 
 
 @dataclasses.dataclass
@@ -131,7 +161,7 @@ class ProgramContext:
 
     def __init__(
         self, n_shards: int, mode: str, coll=None, operands=None,
-        residuals=None,
+        residuals=None, hash_tables=None,
     ):
         self._n_shards = n_shards
         self._mode = mode  # "discover" | "execute"
@@ -141,6 +171,13 @@ class ProgramContext:
         self._residual_specs: list[tuple] = []  # discover: feedback op shapes
         self._residuals = residuals if residuals is not None else []
         self._res_i = 0
+        # hash-target state: key -> this shard's HashTable (current value).
+        # Discover mode also records key -> the original DistHashMap in
+        # ``_hash_targets`` (op order = dict order).
+        self._hash_tables: dict[tuple, C.HashTable] = (
+            hash_tables if hash_tables is not None else {}
+        )
+        self._hash_targets: dict[tuple, Any] = {}
 
     # -- source resolution ----------------------------------------------------
 
@@ -173,39 +210,49 @@ class ProgramContext:
         """This shard's mesh coordinate (0 under discovery)."""
         return self._coll.axis_index()
 
+    def _resolve_program_source(self, source):
+        """(kind, static source, local view) for any in-program source —
+        the session containers plus the program-local ``LocalVector`` /
+        ``LocalHashMap`` intermediates."""
+        if isinstance(source, LocalVector):
+            return "vector", None, (source.data, source.n)
+        if isinstance(source, LocalHashMap):
+            return "hashmap", None, (source.table.keys, source.table.vals)
+        kind = _mr._source_kind(source)
+        return kind, source, self._local_for(kind, source)
+
     def map_reduce(
         self, source, mapper: Callable, reducer, target, *,
         engine: str = "eager", wire: str = "none", env: Any = None,
+        shuffle_slack: float = 2.0, key_range: int | None = None,
     ):
         """One MapReduce op, fused into the surrounding program.
 
-        Same contract as ``BlazeSession.map_reduce`` for dense targets,
-        except the result is a traced array inside the program (merge into
-        ``target`` included) and no per-op stats exist — the whole program
-        is one dispatch.  ``wire="int8"`` sums additionally get error
-        feedback: the per-shard quantization residual is carried through the
-        device-resident loop *and* across dispatches (the executable returns
-        it and the next block feeds it back in), so iterative reductions
-        stay unbiased for the lifetime of the program
-        (``RealCollectives.reduce_feedback``).
+        Same contract as ``BlazeSession.map_reduce``, except the result is a
+        traced value inside the program and no per-op stats exist — the
+        whole program is one dispatch.  Dense targets return the merged
+        array (merge into ``target`` included).  ``DistHashMap`` targets
+        return a ``LocalHashMap`` — this shard's updated table, readable as
+        a source by later ops in the same iteration; the table itself is
+        per-shard state threaded through the fused loop and across
+        dispatches (``Program.hash_result`` materialises it).
+        ``wire="int8"`` sums additionally get error feedback: the per-shard
+        quantization residual is carried through the device-resident loop
+        *and* across dispatches (the executable returns it and the next
+        block feeds it back in), so iterative reductions stay unbiased for
+        the lifetime of the program (``RealCollectives.reduce_feedback``).
         """
         from repro.core.session import resolve_engine
 
         red = get_reducer(reducer)
         if isinstance(target, C.DistHashMap):
-            raise NotImplementedError(
-                "programs support dense targets only; run hash-target ops "
-                "per-op outside the program"
+            return self._map_reduce_hash(
+                source, mapper, red, target, engine=engine, env=env,
+                shuffle_slack=shuffle_slack, key_range=key_range,
             )
         target = jnp.asarray(target)
         engine = resolve_engine(engine, target, red)
-        if isinstance(source, LocalVector):
-            kind, src_static = "vector", None
-            local = (source.data, source.n)
-        else:
-            kind = _mr._source_kind(source)
-            src_static = source
-            local = self._local_for(kind, source)
+        kind, src_static, local = self._resolve_program_source(source)
 
         feedback = (
             wire == "int8" and red.name == "sum"
@@ -230,6 +277,47 @@ class ProgramContext:
                 self._residuals[self._res_i] = new_residual
             self._res_i += 1
         return red.combine(target, total.astype(target.dtype))
+
+    def _map_reduce_hash(
+        self, source, mapper, red, target, *, engine, env, shuffle_slack,
+        key_range,
+    ):
+        """Hash-target op inside a program: per-shard table state.
+
+        The target is identified by its backing buffers (stable across
+        iterations — drivers capture the same ``DistHashMap``); its table is
+        fetched from / written back to the threaded hash state, so several
+        ops (or iterations) targeting the same map compose sequentially.
+        """
+        from repro.core.session import resolve_engine
+
+        engine = resolve_engine(engine, target, red)
+        kind, src_static, local = self._resolve_program_source(source)
+        tkey = ("hashtarget",) + _source_key("hashmap", target)[1:]
+        if tkey not in self._hash_tables:
+            if self._mode != "discover":
+                raise ValueError(
+                    "hash target not registered during discovery — targets "
+                    "must be the same DistHashMap objects across iterations"
+                )
+            # Shape-faithful per-shard stand-in (strip the [n_shards] dim).
+            keys, vals = target.table.keys, target.table.vals
+            self._hash_tables[tkey] = C.HashTable(
+                jnp.full(keys.shape[1:], C.EMPTY_KEY, keys.dtype),
+                jnp.full(
+                    vals.shape[1:], red.identity(vals.dtype), vals.dtype
+                ),
+                jnp.zeros((), jnp.int32),
+            )
+        self._hash_targets.setdefault(tkey, target)
+        table = self._hash_tables[tkey]
+        stage, _meta = _mr.hash_shard_stage(
+            kind, src_static, mapper, red, target.table.vals.dtype, engine,
+            shuffle_slack, self._n_shards, key_range=key_range,
+        )
+        table, _le, _ls, _kp = stage(env, table, local, self._coll)
+        self._hash_tables[tkey] = table
+        return LocalHashMap(table, red.name)
 
     def foreach(self, v, fn: Callable, env: Any = None) -> LocalVector:
         """Elementwise map over a ``DistVector`` source or a ``LocalVector``.
@@ -271,8 +359,14 @@ class Program:
         # state signature -> live per-shard error-feedback residuals, carried
         # ACROSS dispatches for the lifetime of this Program
         self._residual_state: dict = {}
+        # state signature -> (hash-target key order, tuple of per-target
+        # (keys, vals, overflow) sharded arrays) — like residuals, hash
+        # tables are per-shard state that outlives each dispatch
+        self._hash_state: dict = {}
+        self._last_sig = None  # signature of the most recent dispatch
         self.stats = ProgramStats()
         self.feedback_slots = 0  # error-feedback residual slots (int8 sums)
+        self.hash_slots = 0  # hash-target table slots threaded per iteration
 
     # -- build ---------------------------------------------------------------
 
@@ -294,14 +388,19 @@ class Program:
                     f"fori_loop carry); leaf {i} went from {a_shape}/{a_dt} "
                     f"to {b.shape}/{b.dtype}"
                 )
-        return list(ctx._sources.values()), list(ctx._residual_specs)
+        return (
+            list(ctx._sources.values()),
+            list(ctx._residual_specs),
+            dict(ctx._hash_targets),
+        )
 
     def _build(self, state):
         key = _mr._abstract(state)
         if key in self._cache:
             return self._cache[key]
-        sources, residual_specs = self._discover(state)
+        sources, residual_specs, hash_targets = self._discover(state)
         self.feedback_slots = len(residual_specs)
+        self.hash_slots = len(hash_targets)
         axis = C.DATA_AXIS
         n_shards = self._n_shards
         step_fn = self._step_fn
@@ -318,11 +417,16 @@ class Program:
             source_keys.append(_source_key(kind, s))
             sizes.append(len(ops))
         n_res = len(residual_specs)
+        hash_keys = list(hash_targets)
+        n_hash = len(hash_keys)
 
         def shard_body(state_, n_iters, *flat):
-            # flat = per-op feedback residuals (sharded: each shard carries
-            # its own quantization error), then the source operands.
-            res_in, flat_ops = flat[:n_res], flat[n_res:]
+            # flat = per-op feedback residuals, then per-target hash tables
+            # (both sharded: each shard carries its own), then the source
+            # operands.
+            res_in = flat[:n_res]
+            hash_in = flat[n_res:n_res + 3 * n_hash]
+            flat_ops = flat[n_res + 3 * n_hash:]
             coll = _mr.RealCollectives(axis, n_shards)
             op_map, i = {}, 0
             for sk, k in zip(source_keys, sizes):
@@ -330,34 +434,60 @@ class Program:
                 i += k
 
             def one_step(_, carry):
-                st, residuals = carry
+                st, residuals, tables = carry
                 ctx = ProgramContext(
                     n_shards, "execute", coll=coll, operands=op_map,
                     residuals=list(residuals),
+                    hash_tables=dict(zip(hash_keys, tables)),
                 )
                 new_st = step_fn(ctx, st)
-                return new_st, tuple(ctx._residuals)
+                return (
+                    new_st,
+                    tuple(ctx._residuals),
+                    tuple(ctx._hash_tables[hk] for hk in hash_keys),
+                )
 
             res0 = tuple(r[0] for r in res_in)  # drop the local shard dim
-            out_state, res_out = jax.lax.fori_loop(
-                0, n_iters, one_step, (state_, res0)
+            h0 = tuple(
+                C.HashTable(
+                    hash_in[3 * i_][0], hash_in[3 * i_ + 1][0],
+                    hash_in[3 * i_ + 2][0],
+                )
+                for i_ in range(n_hash)
             )
-            return out_state, tuple(r[None] for r in res_out)
+            out_state, res_out, h_out = jax.lax.fori_loop(
+                0, n_iters, one_step, (state_, res0, h0)
+            )
+            return (
+                out_state,
+                tuple(r[None] for r in res_out),
+                tuple(
+                    (t.keys[None], t.vals[None], t.overflow[None])
+                    for t in h_out
+                ),
+            )
 
         d = P(C.DATA_AXIS)
         fused = shard_map(
             shard_body,
             mesh=self._mesh,
-            in_specs=(P(), P()) + (d,) * n_res + tuple(specs),
-            out_specs=(P(), d),
+            in_specs=(P(), P()) + (d,) * (n_res + 3 * n_hash) + tuple(specs),
+            out_specs=(P(), d, d),
             check_vma=False,
         )
-        # Residual state outlives the dispatch: the executable returns the
-        # updated per-shard residuals and the next dispatch feeds them back
-        # in, so error feedback stays live across blocks (even unroll=1).
+        # Residual AND hash-table state outlive the dispatch: the executable
+        # returns the updated per-shard arrays and the next dispatch feeds
+        # them back in, so both stay live across blocks (even unroll=1).
         self._residual_state[key] = tuple(
             jnp.zeros((n_shards,) + shape, dtype)
             for shape, dtype in residual_specs
+        )
+        self._hash_state[key] = (
+            hash_keys,
+            tuple(
+                (hm.table.keys, hm.table.vals, hm.table.overflow)
+                for hm in hash_targets.values()
+            ),
         )
         entry = (jax.jit(fused), tuple(operands))
         self._cache[key] = entry
@@ -372,12 +502,39 @@ class Program:
         key = _mr._abstract(state)
         fn, operands = self._build(state)
         residuals = self._residual_state[key]
-        out, new_residuals = fn(
-            state, jnp.asarray(n_iters, jnp.int32), *residuals, *operands
+        hash_keys, hash_tuples = self._hash_state[key]
+        flat_hash = [a for t in hash_tuples for a in t]
+        out, new_residuals, new_hash = fn(
+            state, jnp.asarray(n_iters, jnp.int32), *residuals, *flat_hash,
+            *operands,
         )
         self._residual_state[key] = new_residuals
+        self._hash_state[key] = (hash_keys, tuple(new_hash))
+        self._last_sig = key
         self.stats.dispatches += 1
         self.stats.iterations += int(n_iters)
         self._session.stats.dispatches += 1
         self._session.stats.program_dispatches += 1
         return out
+
+    def hash_result(self, target: C.DistHashMap) -> C.DistHashMap:
+        """The accumulated state of a hash target used by this program.
+
+        ``target`` must be the same ``DistHashMap`` object the step function
+        captured; the returned map holds the tables as of the most recent
+        dispatch (the original object is never mutated).
+        """
+        tkey = ("hashtarget",) + _source_key("hashmap", target)[1:]
+        sig = self._last_sig
+        if sig is None or sig not in self._hash_state:
+            raise ValueError("program has not dispatched yet")
+        hash_keys, hash_tuples = self._hash_state[sig]
+        if tkey not in hash_keys:
+            raise KeyError(
+                "not a hash target of this program (targets are keyed by "
+                "the identity of their backing buffers)"
+            )
+        keys, vals, ovf = hash_tuples[hash_keys.index(tkey)]
+        return C.DistHashMap(
+            C.HashTable(keys, vals, ovf), reducer_name=target.reducer_name
+        )

@@ -28,6 +28,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.hash_combine import hash_aggregate as _pallas_hash_aggregate
 from repro.kernels.segment_reduce import segment_reduce as _pallas_segment_reduce
 
 Array = jax.Array
@@ -50,6 +51,11 @@ class Reducer:
     # dense [n, V] in the kernel's accumulator dtype (f32/i32).  ids outside
     # [0, n) are dropped.  None → engine="pallas" falls back to ``segment``.
     pallas_segment: Callable[..., Array] | None = None
+    # the unbounded-key mirror: reduce-by-key into an open-addressing VMEM
+    # hash table (repro.kernels.hash_combine.hash_aggregate) — what
+    # ``engine="pallas"`` runs for ``DistHashMap`` targets.  None → the
+    # eager sort-based plan.
+    pallas_hash: Callable[..., Array] | None = None
 
     def identity(self, dtype) -> Array:
         return self.identity_fn(dtype)
@@ -98,6 +104,10 @@ def _kernel_segment(reducer_name: str) -> Callable[..., Array]:
     return functools.partial(_pallas_segment_reduce, reducer=reducer_name)
 
 
+def _kernel_hash(reducer_name: str) -> Callable[..., Array]:
+    return functools.partial(_pallas_hash_aggregate, reducer=reducer_name)
+
+
 SUM = Reducer(
     name="sum",
     identity_fn=lambda dt: jnp.asarray(0, dt),
@@ -106,6 +116,7 @@ SUM = Reducer(
     collective=lambda x, ax: jax.lax.psum(x, ax),
     axis_reduce=jnp.sum,
     pallas_segment=_kernel_segment("sum"),
+    pallas_hash=_kernel_hash("sum"),
 )
 
 PROD = Reducer(
@@ -116,6 +127,7 @@ PROD = Reducer(
     collective=_prod_collective,
     axis_reduce=jnp.prod,
     pallas_segment=_kernel_segment("prod"),
+    pallas_hash=_kernel_hash("prod"),
 )
 
 MIN = Reducer(
@@ -126,6 +138,7 @@ MIN = Reducer(
     collective=lambda x, ax: jax.lax.pmin(x, ax),
     axis_reduce=jnp.min,
     pallas_segment=_kernel_segment("min"),
+    pallas_hash=_kernel_hash("min"),
 )
 
 MAX = Reducer(
@@ -136,6 +149,7 @@ MAX = Reducer(
     collective=lambda x, ax: jax.lax.pmax(x, ax),
     axis_reduce=jnp.max,
     pallas_segment=_kernel_segment("max"),
+    pallas_hash=_kernel_hash("max"),
 )
 
 _BUILTIN: dict[str, Reducer] = {r.name: r for r in (SUM, PROD, MIN, MAX)}

@@ -57,27 +57,35 @@ PALLAS_AUTO_MAX_KEYS = 4096
 
 
 def resolve_engine(engine: str, target, reducer: Reducer) -> str:
-    """The ``engine="auto"`` policy, plus target-compatibility fallbacks.
+    """The ``engine="auto"`` policy, plus reducer-compatibility fallbacks.
 
-    * hash targets have no dense accumulator for the kernel to own, and a
-      reducer without a ``pallas_segment`` impl has no kernel to run → the
-      eager plan (``engine="pallas"`` falls back rather than erroring, so
-      drivers can pass one engine for mixed-target pipelines, and the
-      resolved name in ``MapReduceStats.engine`` matches the plan that ran);
-    * ``"auto"``: dense target with a small static key range and a reducer
-      with a ``pallas_segment`` impl → ``"pallas"``;
-    * everything else → ``"eager"``.
+    Every target kind now has a kernel: dense targets run the segment-reduce
+    kernel (``Reducer.pallas_segment``), ``DistHashMap`` targets the
+    hash-aggregation kernel (``Reducer.pallas_hash``).  Only a *custom*
+    reducer — which carries neither — falls back to the eager plan
+    (``engine="pallas"`` degrades rather than erroring, so drivers can pass
+    one engine for mixed pipelines, and the resolved name in
+    ``MapReduceStats.engine`` matches the plan that ran).
+
+    ``"auto"`` picks the kernel exactly when its accumulator plausibly stays
+    VMEM-resident: dense targets with ``K <= PALLAS_AUTO_MAX_KEYS``, hash
+    targets with ``capacity_per_shard <= PALLAS_AUTO_MAX_KEYS``; eager
+    otherwise.
     """
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; choose from {ENGINES}")
     hash_target = isinstance(target, C.DistHashMap)
-    if engine == "pallas" and (hash_target or reducer.pallas_segment is None):
+    kernel = reducer.pallas_hash if hash_target else reducer.pallas_segment
+    if engine == "pallas" and kernel is None:
         return "eager"
     if engine != "auto":
         return engine
-    if hash_target or reducer.pallas_segment is None:
+    if kernel is None:
         return "eager"
-    k = jnp.asarray(target).shape[0] if jnp.ndim(target) else 0
+    if hash_target:
+        k = target.capacity_per_shard
+    else:
+        k = jnp.asarray(target).shape[0] if jnp.ndim(target) else 0
     return "pallas" if 0 < k <= PALLAS_AUTO_MAX_KEYS else "eager"
 
 
@@ -139,6 +147,7 @@ class BlazeSession:
         wire: str = "none",
         env: Any = None,
         shuffle_slack: float = 2.0,
+        key_range: int | None = None,
         return_stats: bool = False,
     ):
         """Run one MapReduce op, reusing this session's compiled executables.
@@ -147,10 +156,12 @@ class BlazeSession:
         overrides the session mesh for this call only (the override is part
         of the cache key, so mixed-mesh sessions stay correct).  ``engine``
         is one of ``"eager" | "pallas" | "naive" | "auto"``; ``"auto"`` (and
-        the hash-target fallback for ``"pallas"``) resolves via
+        the custom-reducer fallback for ``"pallas"``) resolves via
         ``resolve_engine`` *before* the cache key is built, so the resolved
         engine — reported in ``MapReduceStats.engine`` — is what keys the
-        executable.
+        executable.  ``key_range`` (hash targets only) promises keys lie in
+        ``[0, key_range)``: the shuffle then ships narrowed bucket keys and
+        the pallas kernel sizes its combine table by the distinct-key bound.
         """
         red = get_reducer(reducer)
         engine = resolve_engine(engine, target, red)
@@ -161,7 +172,8 @@ class BlazeSession:
         if isinstance(target, C.DistHashMap):
             out, stats = _mr._map_reduce_hash(
                 kind, source, mapper, red, target, mesh, n_shards, engine,
-                shuffle_slack, env, cache=self._exec_cache,
+                shuffle_slack, env, key_range=key_range,
+                cache=self._exec_cache,
             )
         else:
             out, stats = _mr._map_reduce_dense(

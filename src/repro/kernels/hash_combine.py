@@ -1,0 +1,311 @@
+"""Pallas hash-aggregation: eager reduction for *unbounded* key ranges.
+
+The segment-reduce kernel (``segment_reduce.py``) is the paper's §2.3.3
+small-fixed-key-range accumulator: key == index into a dense ``[K, V]`` VMEM
+tile.  Word-count-shaped workloads break its premise — the key space is open
+(any int32 word id) — and the hash path previously paid for it three times per
+MapReduce: a sort-based ``unique_combine`` before the shuffle, another one
+after it, and a 16-round scatter ``fori_loop`` (``hashmap_insert``) to merge
+into the target table.
+
+``hash_aggregate`` replaces all three with ONE streaming pass: an
+open-addressing (linear probing) hash table — ``keys [C]`` + ``vals [C, V]``
+— resident in VMEM for the whole pass, fed pair-blocks by the grid.  Per
+block, per probe round:
+
+1. every unplaced lane computes its slot ``(h + r) mod C`` and *gathers* the
+   resident key via a one-hot max over the table axis (no dynamic indexing);
+2. lanes whose slot is FREE race to claim it — the winner is the max key
+   among claimants (deterministic, matches ``containers.hashmap_insert``);
+3. lanes whose key is now resident at their slot *deposit*: the block's
+   contributions are folded into the table rows with the reducer monoid —
+   a one-hot matmul on the MXU for float sums, a select-scatter VPU fold for
+   min/max/prod and exact integer sums (the same two strategies as
+   ``segment_reduce``).  Duplicate keys within a block all deposit in the
+   same round, so no pre-combine (``unique_combine``) is ever needed;
+4. losers (slot taken by a different key) continue to round ``r+1``.
+
+The probe loop is a ``while_loop`` with an all-placed early exit: duplicate-
+heavy streams (word counts) finish most blocks in one or two rounds
+regardless of the configured ``max_probes``.  Lanes still unplaced after
+``max_probes`` rounds are *counted* into the overflow output, never silently
+dropped.  An existing table can be passed as ``init`` — the kernel then
+*merges* into it (the post-shuffle use), bit-compatible with
+``hashmap_insert``'s probe sequence, so eager- and kernel-built tables place
+keys identically.
+
+``choose_table_cap`` autotunes (capacity, block size, probe depth) under a
+VMEM budget; ``interpret=None`` resolves via ``pallas_interpret_default`` —
+interpret off-TPU, forced either way by ``BLAZE_PALLAS_INTERPRET`` — so CPU
+CI runs the exact kernel program TPUs run.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels.segment_reduce import (
+    _acc_dtype,
+    _combine,
+    _fold,
+    _identity,
+    _use_matmul,
+    pallas_interpret_default,
+)
+
+REDUCERS = ("sum", "prod", "min", "max")
+
+# "slot free" sentinel — MUST match repro.core.containers.EMPTY_KEY (importing
+# it would be cyclic: containers → reducers → kernels).  Asserted equal in
+# tests/test_hash_kernel.py.
+EMPTY_KEY = np.iinfo(np.int32).min
+
+# VMEM budget for the autotuner (bytes): the [C, V] value tile, the [C] key
+# row and ~4 [bn, C] probe-round intermediates must all stay resident.
+_VMEM_BUDGET = 4 * 1024 * 1024
+
+
+def hash32(x: jax.Array) -> jax.Array:
+    """splitmix32 finaliser → uint32.  Kernel-side copy of
+    ``containers.hash32`` — identical constants, so kernel- and eager-built
+    tables agree on every slot."""
+    x = x.astype(jnp.uint32)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    return x ^ (x >> 16)
+
+
+def choose_probe_depth(n: int, table_cap: int) -> int:
+    """Probe rounds to configure for ``n`` pairs into a ``table_cap`` table.
+
+    Linear-probing cluster lengths grow with the load factor α = n/C: ~16
+    probes cover α ≤ 0.5 comfortably, near-full tables need more rounds to
+    *find* the free slots that do exist.  The while-loop early exit makes a
+    generous depth nearly free in the common case — this bound only matters
+    under collision pressure, where overflow counting must be honest.
+    """
+    alpha = min(1.0, n / max(1, table_cap))
+    if alpha <= 0.5:
+        depth = 16
+    elif alpha <= 0.75:
+        depth = 32
+    else:
+        depth = 64
+    return min(table_cap, depth)
+
+
+def choose_table_cap(
+    n: int,
+    v: int,
+    reducer: str = "sum",
+    dtype=jnp.float32,
+    *,
+    distinct_hint: int | None = None,
+    vmem_budget: int = _VMEM_BUDGET,
+) -> tuple[int, int, int]:
+    """(table_cap, block_n, max_probes) for a fresh-table combine of ``n``
+    pairs.
+
+    Capacity targets load factor ≤ 0.5 over the *distinct*-key bound —
+    ``distinct_hint`` (e.g. a known vocabulary size / ``key_range``) when the
+    caller has one, else the stream length — rounded up to a power of two,
+    then clamped so the per-round working set (``[C, V]`` + ``[C]`` table,
+    ~4 ``[bn, C]``-shaped probe intermediates for the matmul strategy, the
+    ``[bn, C, V]`` select-scatter fold otherwise) fits the VMEM budget at
+    ``block_n >= 8``.  Probe depth follows the resulting load factor
+    (``choose_probe_depth``).
+    """
+    distinct = min(n, distinct_hint) if distinct_hint else n
+    cap = 128
+    while cap < 2 * max(1, distinct) and cap < (1 << 20):
+        cap *= 2
+
+    def fits(cap_: int, bn_: int) -> bool:
+        acc = _acc_dtype(dtype)
+        table = cap_ * (max(v, 1) + 1) * 4
+        if _use_matmul(reducer, acc):
+            per_round = 4 * bn_ * cap_ * 4 + bn_ * max(v, 1) * 4
+        else:
+            per_round = bn_ * cap_ * max(v, 1) * 4 + 2 * bn_ * cap_ * 4
+        return table + per_round <= vmem_budget
+
+    while cap > 128 and not fits(cap, 8):
+        cap //= 2
+    bn = 8
+    while bn < 1024 and bn < n and fits(cap, 2 * bn):
+        bn *= 2
+    return cap, max(8, min(bn, max(8, n))), choose_probe_depth(n, cap)
+
+
+def _hash_kernel(
+    keys_ref, vals_ref, ikeys_ref, ivals_ref, iovf_ref,
+    okeys_ref, ovals_ref, oovf_ref, *, cap, bn, probes, reducer, acc_dtype,
+):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        okeys_ref[...] = ikeys_ref[...]
+        ovals_ref[...] = ivals_ref[...].astype(acc_dtype)
+        oovf_ref[...] = iovf_ref[...]
+
+    keys = keys_ref[...]  # [bn] int32; EMPTY_KEY marks a dead lane
+    vals = vals_ref[...].astype(acc_dtype)  # [bn, V]
+    ident = _identity(reducer, acc_dtype)
+    active0 = keys != EMPTY_KEY
+    if _use_matmul(reducer, acc_dtype):
+        # Zero dead-lane values up front: an all-False one-hot row still
+        # contracts 0·NaN = NaN into every slot (same hazard as the dense
+        # kernel).
+        vals = jnp.where(active0[:, None], vals, 0)
+    h = (hash32(keys) % jnp.uint32(cap)).astype(jnp.int32)
+    iota_c = jax.lax.broadcasted_iota(jnp.int32, (bn, cap), 1)
+
+    def gather_slot_keys(tkeys, onehot):
+        # tkeys[slot_i] for every lane, without dynamic indexing: a masked
+        # max over the table axis (EMPTY_KEY = int32 min is the floor).
+        return jnp.max(
+            jnp.where(onehot, tkeys[None, :], EMPTY_KEY), axis=1
+        )
+
+    def probe_round(carry):
+        r, tkeys, tvals, active = carry
+        slot = (h + r) % cap  # [bn]
+        onehot = slot[:, None] == iota_c  # [bn, C]
+        slot_key = gather_slot_keys(tkeys, onehot)
+
+        # Claim free slots: winner per slot = max key among claimants —
+        # deterministic, and the same tie-break hashmap_insert uses.
+        want = active & (slot_key == EMPTY_KEY)
+        claim = jnp.max(
+            jnp.where(onehot & want[:, None], keys[:, None], EMPTY_KEY),
+            axis=0,
+        )  # [C]
+        tkeys = jnp.where(
+            (tkeys == EMPTY_KEY) & (claim != EMPTY_KEY), claim, tkeys
+        )
+
+        # Deposit where our key is now resident at our slot.  Duplicate keys
+        # in the block all match the same row and are folded together by the
+        # monoid — the kernel subsumes unique_combine.
+        slot_key = gather_slot_keys(tkeys, onehot)
+        deposit = active & (slot_key == keys)
+        match = onehot & deposit[:, None]  # [bn, C]
+        if _use_matmul(reducer, acc_dtype):
+            tvals = tvals + jax.lax.dot_general(
+                match.astype(acc_dtype), vals,
+                (((0,), (0,)), ((), ())),
+                preferred_element_type=acc_dtype,
+            )
+        else:
+            masked = jnp.where(match[:, :, None], vals[:, None, :], ident)
+            tvals = _combine(reducer)(tvals, _fold(reducer)(masked, axis=0))
+        return r + 1, tkeys, tvals, active & ~deposit
+
+    def keep_probing(carry):
+        r, _, _, active = carry
+        return (r < probes) & jnp.any(active)
+
+    _, tkeys, tvals, active = jax.lax.while_loop(
+        keep_probing, probe_round,
+        (jnp.zeros((), jnp.int32), okeys_ref[...], ovals_ref[...], active0),
+    )
+    okeys_ref[...] = tkeys
+    ovals_ref[...] = tvals
+    oovf_ref[...] = oovf_ref[...] + jnp.sum(active).astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "table_cap", "reducer", "max_probes", "block_n", "interpret"
+    ),
+)
+def hash_aggregate(
+    keys: jax.Array,  # [N] int32; lanes with key == EMPTY_KEY are dead
+    vals: jax.Array,  # [N, V]
+    table_cap: int,
+    *,
+    reducer: str = "sum",
+    init: tuple[jax.Array, jax.Array, jax.Array] | None = None,
+    max_probes: int | None = None,
+    block_n: int | None = None,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Reduce-by-key into an open-addressing table; duplicates welcome.
+
+    Returns ``(tkeys [C] int32, tvals [C, V] acc-dtype, overflow [] int32)``
+    — free slots hold ``EMPTY_KEY`` / the reducer identity; ``overflow``
+    counts lanes that exhausted ``max_probes`` (plus whatever ``init``
+    carried).  ``init=(keys, vals, overflow)`` merges into an existing table
+    with the same probe sequence as ``containers.hashmap_insert``.
+    """
+    if reducer not in REDUCERS:
+        raise ValueError(f"unknown reducer {reducer!r}; supported: {REDUCERS}")
+    n = keys.shape[0]
+    v = vals.shape[1]
+    acc = _acc_dtype(vals.dtype)
+    if init is None:
+        ikeys = jnp.full((table_cap,), EMPTY_KEY, jnp.int32)
+        ivals = jnp.full((table_cap, v), _identity(reducer, acc), acc)
+        iovf = jnp.zeros((), jnp.int32)
+    else:
+        ikeys, ivals, iovf = init
+        ikeys = ikeys.astype(jnp.int32)
+        ivals = ivals.astype(acc)
+    if n == 0:
+        return ikeys, ivals, iovf.astype(jnp.int32)
+    if interpret is None:
+        interpret = pallas_interpret_default()
+    if max_probes is None:
+        max_probes = choose_probe_depth(n, table_cap)
+    if block_n is None:
+        _, block_n, _ = choose_table_cap(n, v, reducer, vals.dtype)
+    bn = min(block_n, n)
+    n_pad = -(-n // bn) * bn
+    keys_p = jnp.pad(keys, (0, n_pad - n), constant_values=EMPTY_KEY)
+    vals_p = jnp.pad(vals, ((0, n_pad - n), (0, 0)))
+
+    kernel = functools.partial(
+        _hash_kernel, cap=table_cap, bn=bn, probes=max_probes,
+        reducer=reducer, acc_dtype=acc,
+    )
+    tkeys, tvals, ovf = pl.pallas_call(
+        kernel,
+        grid=(n_pad // bn,),
+        in_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn, v), lambda i: (i, 0)),
+            pl.BlockSpec((table_cap,), lambda i: (0,)),
+            pl.BlockSpec((table_cap, v), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((table_cap,), lambda i: (0,)),
+            pl.BlockSpec((table_cap, v), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((table_cap,), jnp.int32),
+            jax.ShapeDtypeStruct((table_cap, v), acc),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ),
+        interpret=interpret,
+    )(keys_p, vals_p, ikeys, ivals, iovf.astype(jnp.int32)[None])
+    return tkeys, tvals, ovf[0]
+
+
+def hash_aggregate_lanes(
+    n: int, table_cap: int, v: int, reducer: str = "sum", dtype=jnp.float32,
+    block_n: int | None = None,
+) -> tuple[int, int]:
+    """(block_n, padded lane count) one ``hash_aggregate`` pass processes for
+    ``n`` pairs — the static half of the hash-kernel occupancy accounting."""
+    if block_n is None:
+        _, block_n, _ = choose_table_cap(n, v, reducer, dtype)
+    bn = min(block_n, max(n, 1))
+    return bn, -(-max(n, 1) // bn) * bn

@@ -172,12 +172,12 @@ def test_hash_target_matches_dict_oracle(reducer):
     for k, v, m in zip(keys.astype(np.int64), vals.astype(np.float64), mask):
         if m > 0:
             want[int(k)] = fn(want[int(k)], v) if int(k) in want else v
-    for engine in ("eager", "naive", "pallas"):  # pallas falls back to eager
+    for engine in ("eager", "naive", "pallas"):  # pallas = the hash kernel
         hm = make_dist_hashmap(SESS.mesh, 256, (), jnp.float32, reducer)
         hm, st = SESS.map_reduce(
             rows, _mapper, reducer, hm, engine=engine, return_stats=True
         )
-        assert st.engine == ("eager" if engine == "pallas" else engine)
+        assert st.engine == engine  # no hash-target fallback any more
         got = {int(k): float(v) for k, v in hm.to_dict().items()}
         assert set(got) == set(want)
         for k in want:

@@ -1,0 +1,297 @@
+"""Adversarial hash-path differentials: every engine (eager / pallas / naive)
+against a NumPy dict oracle on the streams that stress open addressing —
+Zipfian skew, all-pairs-collide-to-one-slot, duplicate-heavy batches, and
+table-near-capacity overflow — plus the wire-narrowing and stable-bucketing
+satellites and the fused program-mode wordcount acceptance counters."""
+import collections
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import BlazeSession, distribute, make_dist_hashmap
+from repro.core import containers as C
+from repro.core.mapreduce import bucket_by_dest
+
+ENGINES = ("eager", "pallas", "naive")
+
+SESS = BlazeSession()
+
+
+def _mapper(i, row, emit):
+    emit(row[0].astype(jnp.int32), row[1], mask=row[2] > 0)
+
+
+def _dict_oracle(keys, vals, mask, reducer="sum"):
+    fn = {
+        "sum": np.add, "prod": np.multiply,
+        "min": np.minimum, "max": np.maximum,
+    }[reducer]
+    want: dict = {}
+    for k, v, m in zip(keys.astype(np.int64), vals.astype(np.float64), mask):
+        if m > 0:
+            want[int(k)] = fn(want[int(k)], v) if int(k) in want else v
+    return want
+
+
+def _run(engine, keys, vals, mask, capacity, reducer="sum", **kw):
+    rows = distribute(
+        np.stack([keys, vals, mask], axis=1).astype(np.float32)
+    )
+    hm = make_dist_hashmap(SESS.mesh, capacity, (), jnp.float32, reducer)
+    return SESS.map_reduce(
+        rows, _mapper, reducer, hm, engine=engine, return_stats=True, **kw
+    )
+
+
+def _hash32_np(x: np.ndarray) -> np.ndarray:
+    """Host-side splitmix32 (mirrors containers.hash32) for crafting
+    collision sets."""
+    with np.errstate(over="ignore"):
+        x = x.astype(np.uint32)
+        x = (x ^ (x >> np.uint32(16))) * np.uint32(0x7FEB352D)
+        x = (x ^ (x >> np.uint32(15))) * np.uint32(0x846CA68B)
+        return x ^ (x >> np.uint32(16))
+
+
+def test_host_hash_mirror_is_faithful():
+    xs = np.arange(-512, 512, dtype=np.int32)
+    np.testing.assert_array_equal(
+        _hash32_np(xs), np.asarray(C.hash32(jnp.asarray(xs)))
+    )
+
+
+@pytest.mark.parametrize("reducer", ("sum", "min", "prod"))
+@pytest.mark.parametrize("engine", ENGINES)
+def test_zipfian_keys_match_oracle(engine, reducer):
+    """Heavy skew: a handful of keys hold most of the mass — the regime the
+    eager/kernel local combine exists for."""
+    rng = np.random.RandomState(5)
+    n = 256
+    keys = rng.zipf(1.3, n).clip(max=997).astype(np.float32)
+    if reducer == "prod":
+        vals = rng.choice([1.0, -1.0], n).astype(np.float32)
+    else:
+        vals = rng.randint(-8, 9, n).astype(np.float32)
+    mask = (rng.rand(n) > 0.15).astype(np.float32)
+    hm, st = _run(engine, keys, vals, mask, 4096, reducer)
+    st = st.finalize()
+    assert st.engine == engine and hm.total_overflow() == 0
+    got = {int(k): float(v) for k, v in hm.to_dict().items()}
+    want = _dict_oracle(keys, vals, mask, reducer)
+    assert set(got) == set(want)
+    for k in want:
+        assert abs(got[k] - want[k]) < 1e-4, (engine, reducer, k)
+    if engine == "pallas":
+        assert st.kernel_table_cap is not None
+        assert st.kernel_probe_depth >= 16
+        assert 0.0 < st.kernel_occupancy <= 1.0
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_all_pairs_collide_to_one_slot(engine):
+    """Keys crafted so EVERY pair hashes to the same home slot of the target
+    table — worst-case linear-probe clustering.  With probe room available,
+    every key must still land, exactly once, with exact sums."""
+    cap = 64
+    pool = np.arange(1, 200_000, dtype=np.int32)
+    same_slot = pool[(_hash32_np(pool) % np.uint32(cap)) == 7][:20]
+    assert len(same_slot) == 20
+    keys = np.repeat(same_slot, 3).astype(np.float32)  # duplicates too
+    vals = np.ones(len(keys), np.float32)
+    mask = np.ones(len(keys), np.float32)
+    hm, st = _run(engine, keys, vals, mask, cap)
+    assert hm.total_overflow() == 0
+    got = {int(k): float(v) for k, v in hm.to_dict().items()}
+    assert got == {int(k): 3.0 for k in same_slot}
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_duplicate_heavy_batch_matches_oracle(engine):
+    """64x duplication per key: the local combine must collapse the stream
+    (eager/pallas ship <= distinct * shards pairs; naive ships all)."""
+    rng = np.random.RandomState(9)
+    n, n_keys = 512, 8
+    keys = rng.randint(0, n_keys, n).astype(np.float32)
+    vals = rng.randint(1, 5, n).astype(np.float32)
+    mask = np.ones(n, np.float32)
+    hm, st = _run(engine, keys, vals, mask, 128)
+    st = st.finalize()
+    got = {int(k): float(v) for k, v in hm.to_dict().items()}
+    assert got == pytest.approx(_dict_oracle(keys, vals, mask))
+    n_shards = SESS.mesh.shape["data"]
+    if engine == "naive":
+        assert st.pairs_shipped == n
+    else:
+        assert st.pairs_shipped <= n_keys * n_shards
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_near_capacity_overflow_invariants(engine):
+    """More distinct keys than the table can hold: drops must be *counted*
+    (live + overflow covers every distinct key), survivors must hold their
+    exact oracle totals, and the table never exceeds capacity."""
+    n = 96
+    keys = np.arange(n, dtype=np.float32)
+    vals = np.full(n, 2.0, np.float32)
+    mask = np.ones(n, np.float32)
+    cap = 16
+    hm, st = _run(engine, keys, vals, mask, cap)
+    st = st.finalize()
+    n_shards = hm.n_shards
+    assert hm.size() <= cap * n_shards
+    assert hm.total_overflow() > 0
+    assert hm.size() + hm.total_overflow() == n  # conservation, exact
+    for k, v in hm.to_dict().items():
+        assert float(v) == pytest.approx(2.0)  # survivors exact
+
+
+# -- satellite: narrowed keys on the shuffle wire ------------------------------
+
+
+def test_key_range_narrows_wire_and_stays_exact():
+    rng = np.random.RandomState(3)
+    keys = rng.randint(0, 100, 128).astype(np.float32)
+    vals = rng.randint(-4, 5, 128).astype(np.float32)
+    mask = np.ones(128, np.float32)
+    results = {}
+    for key_range in (None, 100):
+        hm, st = _run("eager", keys, vals, mask, 512, key_range=key_range)
+        st = st.finalize()
+        results[key_range] = st
+        got = {int(k): float(v) for k, v in hm.to_dict().items()}
+        assert got == pytest.approx(_dict_oracle(keys, vals, mask))
+    wide, narrow = results[None], results[100]
+    assert wide.pairs_shipped == narrow.pairs_shipped
+    # int32+f32 = 8 B/pair -> int8 key + f32 val = 5 B/pair
+    assert wide.shuffle_payload_bytes == wide.pairs_shipped * 8
+    assert narrow.shuffle_payload_bytes == narrow.pairs_shipped * 5
+    assert "5B" in narrow.collective and "8B" in wide.collective
+
+
+def test_key_range_16bit_band():
+    """A vocab over int8 range narrows to int16 (6 B/pair)."""
+    rng = np.random.RandomState(4)
+    keys = rng.randint(0, 1000, 64).astype(np.float32)
+    vals = np.ones(64, np.float32)
+    hm, st = _run(
+        "pallas", keys, vals, np.ones(64, np.float32), 4096, key_range=1000
+    )
+    st = st.finalize()
+    assert st.shuffle_payload_bytes == st.pairs_shipped * 6
+    got = {int(k): float(v) for k, v in hm.to_dict().items()}
+    assert got == pytest.approx(
+        _dict_oracle(keys, vals, np.ones(64, np.float32))
+    )
+
+
+# -- satellite: stable bucketing ----------------------------------------------
+
+
+def test_bucket_by_dest_stable_rank_with_duplicate_destinations():
+    """With every pair bound for the SAME destination and a bucket smaller
+    than the stream, the kept pairs must be the first-emitted ones in
+    emission order — the stable-sort guarantee the rank logic assumes."""
+    n, cap = 32, 8
+    keys = jnp.full((n,), 5, jnp.int32)  # one key -> one destination
+    vals = jnp.arange(n, dtype=jnp.float32)  # emission-order tag
+    valid = jnp.ones((n,), bool)
+    bkeys, bvals, dropped = bucket_by_dest(keys, vals, valid, 1, cap, 0.0)
+    assert int(dropped) == n - cap
+    np.testing.assert_array_equal(
+        np.asarray(bvals[0]), np.arange(cap, dtype=np.float32)
+    )
+    # mixed destinations: each bucket keeps ITS first-emitted pairs in order
+    keys2 = jnp.asarray(np.arange(n) % 7, jnp.int32)
+    bkeys2, bvals2, dropped2 = bucket_by_dest(
+        keys2, vals, valid, 4, 4, 0.0
+    )
+    dests = np.asarray(C.shard_of_key(keys2, 4))
+    for dshard in range(4):
+        mine = np.asarray(vals)[dests == dshard][:4]
+        got = np.asarray(bvals2[dshard])[: len(mine)]
+        np.testing.assert_array_equal(got, mine)
+
+
+# -- program-mode wordcount acceptance ----------------------------------------
+
+
+@pytest.mark.parametrize("engine", ("eager", "pallas"))
+def test_program_mode_wordcount_fusion_counters(engine):
+    """10-iteration program-mode wordcount = 1 program compile,
+    ceil(10/5) = 2 dispatches, ZERO per-iteration host syncs — and the
+    counts are exactly 10x the single-pass oracle."""
+    from repro.core.algorithms import wordcount
+
+    rng = np.random.RandomState(0)
+    lines = rng.randint(0, 50, (32, 8)).astype(np.int32)
+    lines[rng.rand(32, 8) < 0.1] = -1
+    ref = collections.Counter(lines[lines >= 0].reshape(-1).tolist())
+
+    sess = BlazeSession()
+    res = wordcount(
+        lines, engine=engine, mode="program", iters=10, unroll=5,
+        session=sess,
+    )
+    assert res.program_compiles == 1
+    assert res.dispatches == 2
+    assert res.host_syncs == 0
+    assert res.iterations == 10
+    got = {int(k): int(v) for k, v in res.counts.to_dict().items()}
+    assert got == {k: 10 * v for k, v in ref.items()}
+    assert res.counts.total_overflow() == 0
+
+
+def test_program_vs_per_op_wordcount_dispatch_gap():
+    from repro.core.algorithms import wordcount
+
+    lines = np.random.RandomState(1).randint(0, 30, (16, 8)).astype(np.int32)
+    per_op = wordcount(
+        lines, mode="per_op", iters=10, session=BlazeSession()
+    )
+    prog = wordcount(
+        lines, mode="program", iters=10, unroll=5, session=BlazeSession()
+    )
+    assert per_op.dispatches == 10 and prog.dispatches == 2
+    assert (
+        {int(k): int(v) for k, v in per_op.counts.to_dict().items()}
+        == {int(k): int(v) for k, v in prog.counts.to_dict().items()}
+    )
+
+
+def test_program_multipass_hash_then_dense():
+    """A second fused pass reads the UPDATED hash table as a source —
+    multi-pass aggregation without leaving the executable."""
+    rng = np.random.RandomState(2)
+    lines = rng.randint(0, 30, (16, 8)).astype(np.int32)
+    ref = collections.Counter(lines.reshape(-1).tolist())
+
+    from repro.core.algorithms.wordcount import wordcount_mapper
+
+    sess = BlazeSession()
+    lines_v = distribute(lines, sess.mesh)
+    hm = make_dist_hashmap(sess.mesh, 256, (), jnp.int32, "sum")
+
+    def hist_mapper(k, v, emit):
+        emit(jnp.minimum(v, 15), 1)
+
+    def step(ctx, s):
+        counts = ctx.map_reduce(
+            lines_v, wordcount_mapper, "sum", hm, engine="pallas",
+            key_range=30,
+        )
+        hist = ctx.map_reduce(
+            counts, hist_mapper, "sum", jnp.zeros((16,), jnp.int32)
+        )
+        return {"hist": hist}
+
+    prog = sess.program(step)
+    state = prog({"hist": jnp.zeros((16,), jnp.int32)}, 1)
+    got = {int(k): int(v) for k, v in prog.hash_result(hm).to_dict().items()}
+    assert got == dict(ref)
+    hist_ref = collections.Counter(min(c, 15) for c in ref.values())
+    got_hist = {
+        i: int(v) for i, v in enumerate(np.asarray(state["hist"])) if v
+    }
+    assert got_hist == dict(hist_ref)
+    assert prog.hash_slots == 1 and prog.stats.compiles == 1

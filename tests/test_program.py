@@ -169,7 +169,9 @@ def test_program_recompiles_only_on_state_signature_change():
     assert prog2.stats.compiles == 2  # state signature change → deliberate miss
 
 
-def test_program_rejects_hash_targets_and_bad_state():
+def test_program_hash_target_threads_per_shard_state():
+    """Hash targets fuse: the table is threaded through the loop carry and
+    accumulates across fused iterations (previously a NotImplementedError)."""
     sess = BlazeSession()
     hm = make_dist_hashmap(sess.mesh, 64, (), jnp.float32, "sum")
 
@@ -179,8 +181,18 @@ def test_program_rejects_hash_targets_and_bad_state():
         )
         return s
 
-    with pytest.raises(NotImplementedError, match="dense targets"):
-        sess.program(hash_step)(jnp.zeros((), jnp.float32), 1)
+    prog = sess.program(hash_step)
+    prog(jnp.zeros((), jnp.float32), 3)
+    assert prog.hash_slots == 1
+    got = {int(k): float(v) for k, v in prog.hash_result(hm).to_dict().items()}
+    want = {k: 3.0 * sum(v * v for v in range(8) if v % 4 == k) for k in range(4)}
+    assert got == want
+    # the original container is never mutated
+    assert hm.size() == 0
+
+
+def test_program_rejects_bad_state():
+    sess = BlazeSession()
 
     def shape_shifting_step(ctx, s):
         t = ctx.map_reduce(

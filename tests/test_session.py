@@ -233,23 +233,29 @@ def test_auto_picks_pallas_for_small_dense_key_range():
     assert st.engine == "eager"
 
 
-def test_auto_falls_back_for_hash_targets_and_custom_reducers():
+def test_auto_picks_hash_kernel_and_falls_back_for_custom_reducers():
     from repro.core import custom_reducer, make_dist_hashmap
+    from repro.core.session import resolve_engine
+    from repro.core.reducers import get_reducer
 
     sess = BlazeSession()
     pts = distribute(_pts_rows())
+    # auto on a VMEM-sized hash target → the hash-aggregation kernel
     hm = make_dist_hashmap(sess.mesh, 128, (), jnp.float32, "sum")
     _, st = sess.map_reduce(
         pts, _dyn_key_mapper, "sum", hm, engine="auto", return_stats=True
     )
-    assert st.engine == "eager"
-    # explicit pallas on a hash target also falls back (no dense accumulator)
+    assert st.engine == "pallas"
+    # explicit pallas on a hash target runs the kernel too (no fallback)
     hm2 = make_dist_hashmap(sess.mesh, 128, (), jnp.float32, "sum")
     _, st = sess.map_reduce(
         pts, _dyn_key_mapper, "sum", hm2, engine="pallas", return_stats=True
     )
-    assert st.engine == "eager"
-    # custom reducer has no pallas_segment impl → auto resolves to eager
+    assert st.engine == "pallas"
+    # ... but an over-VMEM-sized table resolves auto to eager
+    big = make_dist_hashmap(sess.mesh, 8192, (), jnp.float32, "sum")
+    assert resolve_engine("auto", big, get_reducer("sum")) == "eager"
+    # custom reducer has no pallas_segment/pallas_hash impl → eager
     maxish = custom_reducer(
         "maxish", jnp.maximum, lambda dt: jnp.asarray(-jnp.inf, dt)
     )
