@@ -505,6 +505,112 @@ def program_fusion():
     return rows
 
 
+def bench5_plan_batching():
+    """The plan-optimizer benchmark (PR 5): every program-able algorithm
+    built twice from the same step function — once through the full
+    optimizer (collective batching + CSE + pruning) and once with
+    ``passes=()`` — reporting collectives-per-iteration before/after plus
+    fused-block wall time, and writing machine-readable
+    ``results/BENCH_5.json`` so the batching pass's effect is tracked from
+    this PR on.  GMM is the headline: its EM round's 4 independent psums
+    fuse into 2 collectives."""
+    import importlib
+
+    iters = 10
+    rows, algos = [], []
+    _alg = "repro.core.algorithms."
+    pr_mod = importlib.import_module(_alg + "pagerank")
+    km_mod = importlib.import_module(_alg + "kmeans")
+    gmm_mod = importlib.import_module(_alg + "gmm")
+    wc_mod = importlib.import_module(_alg + "wordcount")
+    pi_mod = importlib.import_module(_alg + "pi")
+
+    from repro.core import distribute as _dist, make_dist_hashmap as _mk
+    from repro.data.synthetic import zipf_corpus
+
+    sess = BlazeSession()
+
+    # (name, (step_fn, state)) builders — all six shapes that can fuse
+    cases = []
+    scale = 8 if SMOKE else 10
+    edges = rmat_edges(scale, 16, seed=0)
+    n = 1 << scale
+    deg = jnp.asarray(np.bincount(edges[:, 0], minlength=n).astype(np.int32))
+    step, st0 = pr_mod._program_step(
+        _dist(edges.astype(np.int32), sess.mesh), deg, n, 0.85, "eager",
+        "none",
+    )
+    cases.append(("pagerank", step,
+                  st0(jnp.full((n,), 1.0 / n, jnp.float32))))
+
+    pts, _ = cluster_points(50_000 // D, 3, 5, seed=0)
+    step, st0 = km_mod._program_step(
+        _dist(pts.astype(np.float32), sess.mesh), 5, 3, "eager", "none"
+    )
+    cases.append(("kmeans", step, st0(jnp.asarray(pts[:5], jnp.float32))))
+
+    gpts, _ = cluster_points(5_000 // D + 500, 3, 5, seed=1)
+    grows = np.concatenate(
+        [gpts, np.zeros((len(gpts), 5), np.float32)], axis=1
+    )
+    step, st0 = gmm_mod._program_step(
+        _dist(grows.astype(np.float32), sess.mesh), 5, 3, len(gpts), "eager"
+    )
+    cases.append(("gmm", step, st0(
+        np.full(5, 0.2, np.float32), gpts[:5].astype(np.float32),
+        np.tile(np.eye(3, dtype=np.float32), (5, 1, 1)),
+    )))
+
+    lines, _ = zipf_corpus(200, 16, 200, seed=0)
+    hm = _mk(sess.mesh, 4 * 200, (), jnp.int32, "sum")
+    step, st0 = wc_mod._program_step(
+        _dist(lines, sess.mesh), hm, 200, "eager"
+    )
+    cases.append(("wordcount", step, st0))
+
+    step, st0 = pi_mod._program_step(100_000 // D, "eager")
+    cases.append(("pi", step, st0))
+
+    for name, step, state in cases:
+        entry = {"name": name, "iters": iters}
+        for label, passes in (("optimized", None), ("unbatched", ())):
+            prog = sess.program(step, passes=passes)
+            plan = prog.build(state)
+            t0 = time.perf_counter()
+            out = prog(state, iters)
+            jax.block_until_ready(jax.tree_util.tree_leaves(out)[0])
+            wall = time.perf_counter() - t0
+            entry[label] = {
+                "collectives_per_iter": plan.collectives_per_iter,
+                "cse_hits": plan.cse_hits,
+                "pruned_sources": plan.pruned_sources,
+                "plan_hash": plan.hash,
+                "wall_s_cold_block": round(wall, 6),
+            }
+        algos.append(entry)
+        before = entry["unbatched"]["collectives_per_iter"]
+        after = entry["optimized"]["collectives_per_iter"]
+        rows.append(
+            (
+                f"bench5_{name}",
+                entry["optimized"]["wall_s_cold_block"] * 1e6 / iters,
+                f"collectives/iter={after} (unbatched {before});"
+                f"plan={entry['optimized']['plan_hash']}",
+            )
+        )
+
+    os.makedirs("results", exist_ok=True)
+    payload = {
+        "bench": "BENCH_5",
+        "config": {"iters": iters, "smoke": SMOKE},
+        "algorithms": algos,
+    }
+    with open("results/BENCH_5.json", "w") as f:
+        json.dump(payload, f, indent=1)
+    rows.append(("bench5_json", 0.0, "written=results/BENCH_5.json"))
+    return rows
+
+
 def sec232_serialization():
     """§2.3.2 claim: small-int pairs are 2 B (tag-free) vs 4 B (Protobuf)."""
     rng = np.random.RandomState(0)
@@ -533,5 +639,6 @@ ALL = [
     fig10_cognitive,
     session_reuse,
     program_fusion,
+    bench5_plan_batching,
     sec232_serialization,
 ]

@@ -12,7 +12,15 @@ from repro.core.containers import (
     topk,
 )
 from repro.core.mapreduce import MapReduceStats, map_reduce
-from repro.core.program import LocalVector, LoopInfo, Program, ProgramStats
+from repro.core.plan import Plan
+from repro.core.program import (
+    LocalHashMap,
+    LocalVector,
+    LoopInfo,
+    PlanValue,
+    Program,
+    ProgramStats,
+)
 from repro.core.session import (
     PALLAS_AUTO_MAX_KEYS,
     BlazeSession,
@@ -32,9 +40,12 @@ __all__ = [
     "DistHashMap",
     "DistRange",
     "DistVector",
+    "LocalHashMap",
     "LocalVector",
     "LoopInfo",
     "MapReduceStats",
+    "Plan",
+    "PlanValue",
     "Program",
     "ProgramStats",
     "Reducer",

@@ -112,6 +112,70 @@ class GMMResult:
     program_compiles: int = 0  # fused-program executables (mode="program")
     dispatches: int = 0  # executable launches across the loop
     host_syncs: int = 0  # blocking host materialisations across the loop
+    collectives_per_iter: int = 0  # optimized plan's collectives (program mode)
+
+
+def _program_step(rows_v, k: int, d: int, n: int, engine: str):
+    """(step_fn, state builder) for the planned EM round.
+
+    The round's four dense reductions issue only TWO collectives under the
+    plan optimizer: the log-likelihood, N_k and Σwx psums are independent
+    f32 sums and batch into one fused collective (their results are first
+    consumed together at the M-step glue); Σw(x−μ)(x−μ)ᵀ depends on the new
+    mean and ships alone.  ``Plan.collectives_per_iter`` asserts 2 vs the
+    4 an unoptimized plan issues (``tests/test_plan.py``).
+    """
+    eye = jnp.eye(d, dtype=jnp.float32)
+
+    def step(ctx, s):
+        alpha_, mu_, sigma_ = s["alpha"], s["mu"], s["sigma"]
+        # _gauss_env, on-device (K is tiny; inv/slogdet fuse into the step)
+        prec = jnp.linalg.inv(sigma_).astype(jnp.float32)
+        logdet = jnp.linalg.slogdet(sigma_)[1]
+        logcoef = (
+            -0.5 * (d * jnp.log(2.0 * jnp.pi) + logdet)
+        ).astype(jnp.float32)
+        env = (alpha_, mu_, prec, logcoef)
+        rows_p = ctx.foreach(rows_v, density_fn, env=env)  # op 1
+        ll = ctx.map_reduce(  # op 6 (current model, reads the p-block)
+            rows_p, loglik_mapper, "sum", jnp.zeros((1,), jnp.float32),
+            engine=engine, env=alpha_,
+        )[0]
+        rows_w = ctx.foreach(rows_p, membership_fn, env=env)  # op 2
+        nk = ctx.map_reduce(  # op 3
+            rows_w, nk_mapper, "sum", jnp.zeros((k,), jnp.float32),
+            engine=engine, env=mu_,
+        )
+        musum = ctx.map_reduce(  # op 4
+            rows_w, musum_mapper, "sum", jnp.zeros((k, d), jnp.float32),
+            engine=engine, env=mu_,
+        )
+        nk_c = jnp.maximum(nk, 1e-8)  # first consumption: ll/nk/musum flush
+        new_mu = musum / nk_c[:, None]
+        sigsum = ctx.map_reduce(  # op 5 (depends on new_mu -> own collective)
+            rows_w, sigmasum_mapper, "sum",
+            jnp.zeros((k, d, d), jnp.float32),
+            engine=engine, env=new_mu,
+        )
+        new_sigma = sigsum / nk_c[:, None, None] + 1e-4 * eye
+        return {
+            "alpha": (nk_c / n).astype(jnp.float32),
+            "mu": new_mu,
+            "sigma": new_sigma,
+            "ll": jnp.asarray(ll).reshape(()),
+            "prev_ll": s["ll"],
+        }
+
+    def state0(alpha, mu, sigma):
+        return {
+            "alpha": jnp.asarray(alpha),
+            "mu": jnp.asarray(mu),
+            "sigma": jnp.asarray(sigma),
+            "ll": jnp.asarray(-jnp.inf, jnp.float32),
+            "prev_ll": jnp.asarray(-jnp.inf, jnp.float32),
+        }
+
+    return step, state0
 
 
 def gmm_em(
@@ -146,61 +210,16 @@ def gmm_em(
     syncs0 = sess.stats.host_syncs
 
     if mode == "program":
-        eye = jnp.eye(d, dtype=jnp.float32)
-
-        def step(ctx, s):
-            alpha_, mu_, sigma_ = s["alpha"], s["mu"], s["sigma"]
-            # _gauss_env, on-device (K is tiny; inv/slogdet fuse into the step)
-            prec = jnp.linalg.inv(sigma_).astype(jnp.float32)
-            logdet = jnp.linalg.slogdet(sigma_)[1]
-            logcoef = (
-                -0.5 * (d * jnp.log(2.0 * jnp.pi) + logdet)
-            ).astype(jnp.float32)
-            env = (alpha_, mu_, prec, logcoef)
-            rows_p = ctx.foreach(rows_v, density_fn, env=env)  # op 1
-            ll = ctx.map_reduce(  # op 6 (current model, reads the p-block)
-                rows_p, loglik_mapper, "sum", jnp.zeros((1,), jnp.float32),
-                engine=engine, env=alpha_,
-            )[0]
-            rows_w = ctx.foreach(rows_p, membership_fn, env=env)  # op 2
-            nk = ctx.map_reduce(  # op 3
-                rows_w, nk_mapper, "sum", jnp.zeros((k,), jnp.float32),
-                engine=engine, env=mu_,
-            )
-            musum = ctx.map_reduce(  # op 4
-                rows_w, musum_mapper, "sum", jnp.zeros((k, d), jnp.float32),
-                engine=engine, env=mu_,
-            )
-            nk_c = jnp.maximum(nk, 1e-8)
-            new_mu = musum / nk_c[:, None]
-            sigsum = ctx.map_reduce(  # op 5
-                rows_w, sigmasum_mapper, "sum",
-                jnp.zeros((k, d, d), jnp.float32),
-                engine=engine, env=new_mu,
-            )
-            new_sigma = sigsum / nk_c[:, None, None] + 1e-4 * eye
-            return {
-                "alpha": (nk_c / n).astype(jnp.float32),
-                "mu": new_mu,
-                "sigma": new_sigma,
-                "ll": ll,
-                "prev_ll": s["ll"],
-            }
+        step, state0 = _program_step(rows_v, k, d, n, engine)
 
         def cond(s):
             ll_, prev = float(s["ll"]), float(s["prev_ll"])
             return abs(ll_ - prev) < tol * max(1.0, abs(prev))
 
         prog = sess.program(step, mesh=mesh)
-        state = {
-            "alpha": jnp.asarray(alpha),
-            "mu": jnp.asarray(mu),
-            "sigma": jnp.asarray(sigma),
-            "ll": jnp.asarray(-jnp.inf, jnp.float32),
-            "prev_ll": jnp.asarray(-jnp.inf, jnp.float32),
-        }
         state, info = sess.run_loop(
-            prog, state, cond=cond, max_iters=max_iters, unroll=unroll,
+            prog, state0(alpha, mu, sigma), cond=cond, max_iters=max_iters,
+            unroll=unroll,
         )
         return GMMResult(
             alpha=np.asarray(state["alpha"]),
@@ -214,6 +233,7 @@ def gmm_em(
             program_compiles=info.compiles,
             dispatches=sess.stats.dispatches - dispatches0,
             host_syncs=sess.stats.host_syncs - syncs0,
+            collectives_per_iter=prog.plan.collectives_per_iter,
         )
 
     prev_ll, it, converged, stats = -np.inf, 0, False, None

@@ -14,6 +14,16 @@ refinement glue into one executable (``session.program``) and runs
 ``unroll`` iterations per dispatch device-resident (``session.run_loop``):
 1 program compile, ``≤ ⌈iters/unroll⌉`` dispatches/host-syncs, vs one
 dispatch + one sync per iteration in ``mode="per_op"``.
+
+In program mode the **inertia rides the assignment pass**: the step's mapper
+emits ``(centre, [x…, 1, min_d2])`` into one ``[K, dim+2]`` target, so the
+distance computation that picks the centre also yields the point's inertia
+contribution — the separate ``inertia_mapper`` pass (which recomputed every
+distance) disappears from the plan.  The final inertia w.r.t. the CONVERGED
+centres comes from one extra dispatch of the same fused executable (its
+centre update is discarded): no per-op executable is ever built, so
+10-iteration program k-means reports 0 map_reduce compiles and
+``⌈10/unroll⌉ + 1`` dispatches.
 """
 from __future__ import annotations
 
@@ -33,6 +43,15 @@ def assign_mapper(i, x, emit, centers):
     emit(c, jnp.concatenate([x, jnp.ones((1,), x.dtype)]))
 
 
+def assign_inertia_mapper(i, x, emit, centers):
+    """Program-mode mapper: one distance computation serves both the centre
+    assignment AND the point's inertia contribution (``min d²``) — emitted
+    together as ``(centre, [x…, 1, min_d2])`` into a ``[K, dim+2]`` target."""
+    d2 = jnp.sum((centers - x[None, :]) ** 2, axis=1)
+    c = jnp.argmin(d2)
+    emit(c, jnp.concatenate([x, jnp.ones((1,), x.dtype), jnp.min(d2)[None]]))
+
+
 def inertia_mapper(i, x, emit, centers):
     d2 = jnp.sum((centers - x[None, :]) ** 2, axis=1)
     emit(0, jnp.min(d2))
@@ -49,6 +68,35 @@ class KMeansResult:
     program_compiles: int = 0  # fused-program executables (mode="program")
     dispatches: int = 0  # executable launches across the loop
     host_syncs: int = 0  # blocking host materialisations across the loop
+    collectives_per_iter: int = 0  # optimized plan's collectives (program mode)
+
+
+def _program_step(pts_v: DistVector, k: int, dim: int, engine: str, wire: str):
+    """(step_fn, state builder) for the planned k-means iteration: ONE
+    ``[K, dim+2]`` MapReduce (sums | counts | inertia) + the refinement glue."""
+
+    def step(ctx, s):
+        c = s["centers"]
+        sums = ctx.map_reduce(
+            pts_v, assign_inertia_mapper, "sum",
+            jnp.zeros((k, dim + 2), jnp.float32),
+            engine=engine, wire=wire, env=c,
+        )
+        counts = jnp.maximum(sums[:, dim:dim + 1], 1.0)
+        new_c = sums[:, :dim] / counts  # serial refinement step, fused
+        move = jnp.max(jnp.sum((new_c - c) ** 2, axis=1))
+        # inertia of the CURRENT centres — the same distances that chose them
+        inertia = jnp.sum(sums[:, dim + 1])
+        return {"centers": new_c, "move": move, "inertia": inertia}
+
+    def state0(centers):
+        return {
+            "centers": centers,
+            "move": jnp.asarray(jnp.inf, jnp.float32),
+            "inertia": jnp.asarray(0.0, jnp.float32),
+        }
+
+    return step, state0
 
 
 def kmeans(
@@ -86,42 +134,33 @@ def kmeans(
     syncs0 = sess.stats.host_syncs
 
     if mode == "program":
-
-        def step(ctx, s):
-            c = s["centers"]
-            sums = ctx.map_reduce(
-                pts_v, assign_mapper, "sum",
-                jnp.zeros((k, dim + 1), jnp.float32),
-                engine=engine, wire=wire, env=c,
-            )
-            counts = jnp.maximum(sums[:, dim:], 1.0)
-            new_c = sums[:, :dim] / counts  # serial refinement step, fused
-            move = jnp.max(jnp.sum((new_c - c) ** 2, axis=1))
-            return {"centers": new_c, "move": move}
-
+        step, state0 = _program_step(pts_v, k, dim, engine, wire)
         prog = sess.program(step, mesh=mesh)
-        state = {"centers": centers, "move": jnp.asarray(jnp.inf, jnp.float32)}
         state, info = sess.run_loop(
-            prog, state, cond=lambda s: float(s["move"]) < tol * tol,
+            prog, state0(centers),
+            cond=lambda s: float(s["move"]) < tol * tol,
             max_iters=max_iters, unroll=unroll,
         )
         centers = state["centers"]
-        inertia = sess.map_reduce(
-            pts_v, inertia_mapper, "sum", jnp.zeros((1,), jnp.float32),
-            mesh=mesh, engine=engine, env=centers,
-        )[0]
+        # Inertia w.r.t. the FINAL centres: one more dispatch of the same
+        # fused executable — its assignment pass IS the inertia pass (the
+        # centre update it also computes is discarded).  No per-op
+        # executable is ever built for k-means in program mode.
+        probe = prog(state, 1)
+        inertia = float(np.asarray(sess.host_value(probe["inertia"])))
         return KMeansResult(
             centers=np.asarray(centers),
             iterations=info.iterations,
             converged=info.converged,
-            inertia=float(inertia),
+            inertia=inertia,
             shuffle_bytes_per_iter=0,
             compiles=sess.stats.compiles - compiles0,
             program_compiles=info.compiles,
-            # session delta, not info.dispatches: includes the final per-op
-            # inertia pass, so per_op and program rows compare like-for-like
+            # session delta, not info.dispatches: includes the final inertia
+            # probe, so per_op and program rows compare like-for-like
             dispatches=sess.stats.dispatches - dispatches0,
             host_syncs=sess.stats.host_syncs - syncs0,
+            collectives_per_iter=prog.plan.collectives_per_iter,
         )
 
     it, converged, stats = 0, False, None
@@ -140,17 +179,19 @@ def kmeans(
             converged = True
             break
 
-    # Final inertia via one more MapReduce (dense [1] target).
+    # Final inertia via one more MapReduce (dense [1] target), materialised
+    # through the session so the sync is counted.
     inertia = sess.map_reduce(
         pts_v, inertia_mapper, "sum", jnp.zeros((1,), jnp.float32),
         mesh=mesh, engine=engine, env=centers,
     )[0]
+    inertia = float(np.asarray(sess.host_value(inertia)))
     fs = stats.finalize() if stats is not None else None
     return KMeansResult(
         centers=np.asarray(centers),
         iterations=it,
         converged=converged,
-        inertia=float(inertia),
+        inertia=inertia,
         shuffle_bytes_per_iter=fs.shuffle_payload_bytes if fs else 0,
         compiles=sess.stats.compiles - compiles0,
         dispatches=sess.stats.dispatches - dispatches0,

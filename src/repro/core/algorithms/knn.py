@@ -5,6 +5,20 @@ custom comparison (negative Euclidean distance to the query): each shard
 selects its local top-k, and only k·n_shards candidates cross the wire —
 O(n + k log k) work, O(k) space.  ``knn_full_sort`` is the naive baseline that
 materialises and sorts every distance (what a shuffle-everything plan does).
+
+kNN's plan is **container-level**: the ``topk`` container fixes the whole
+execution plan, so an ``engine=`` request cannot change anything.  The
+driver used to validate the argument and silently drop it; now the request
+is *surfaced* — ``KNNResult.engine`` reports ``"container:topk"`` with the
+ignored request in ``KNNResult.engine_requested``, and ``mode="program"``
+shows the same on the plan's ``topk`` node in ``session.explain``.
+
+``mode="program"`` routes the selection through the planner
+(``session.program`` + ``ctx.topk``): per-shard ``lax.top_k``, one
+all_gather of candidates, global re-select — all inside one executable.
+Either mode materialises results through the session (``session.topk`` /
+``session.host_value``), so ``stats.host_syncs`` counts kNN's blocking sync
+(raw ``device_get`` used to bypass the counter).
 """
 from __future__ import annotations
 
@@ -14,8 +28,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.core import DistVector, distribute, topk
-from repro.core.session import BlazeSession
+from repro.core import DistVector, distribute
+from repro.core.session import BlazeSession, resolve
 
 
 def _neg_sq_dist(x, q):
@@ -28,6 +42,20 @@ class KNNResult:
     neighbors: np.ndarray  # [k, dim]
     distances: np.ndarray  # [k]
     wire_candidates: int  # how many rows crossed the wire
+    engine: str = "container:topk"  # the plan is fixed by the container
+    engine_requested: str = "auto"  # surfaced, never applied
+
+
+def _program_step(pts_v: DistVector, k: int, engine: str):
+    """step_fn for the planned spelling of kNN (one ``ctx.topk`` node)."""
+
+    def step(ctx, s):
+        nbrs, scores = ctx.topk(
+            pts_v, k, score_fn=_neg_sq_dist, env=s["q"], engine=engine,
+        )
+        return {"q": s["q"], "neighbors": nbrs, "scores": scores}
+
+    return step
 
 
 def knn(
@@ -37,29 +65,57 @@ def knn(
     *,
     mesh: Mesh | None = None,
     engine: str = "auto",
+    mode: str = "per_op",
     session: BlazeSession | None = None,
 ) -> KNNResult:
     # Uniform driver interface: knn's plan is container-level (``topk``), so
-    # the engine choice cannot change it — validate and move on.
-    from repro.core.session import ENGINES
+    # the engine choice cannot change it — validate, then SURFACE the
+    # request in the result/plan instead of accepting-and-dropping it.
+    from repro.core.plan import ENGINES
 
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; choose from {ENGINES}")
-    if mesh is None and session is not None:
-        mesh = session.mesh
+    if mode not in ("per_op", "program"):
+        raise ValueError(f"unknown mode {mode!r}; choose 'per_op' or 'program'")
+    sess, mesh = resolve(session, mesh)
     if isinstance(points, DistVector):
         pts_v = points
     else:
-        pts_v = distribute(points.astype(np.float32), mesh) if mesh else distribute(
-            points.astype(np.float32)
-        )
+        pts_v = distribute(points.astype(np.float32), mesh)
     q = jnp.asarray(query, jnp.float32)
+    n_shards = mesh.shape.get("data", 1)
+
+    if mode == "program":
+        per = pts_v.data.shape[0] // n_shards
+        kk = min(k, per)
+        m = min(k, kk * n_shards)
+        dim = pts_v.data.shape[1]
+        step = _program_step(pts_v, k, engine)
+        prog = sess.program(step, mesh=mesh)
+        state = {
+            "q": q,
+            "neighbors": jnp.zeros((m, dim), pts_v.data.dtype),
+            "scores": jnp.full((m,), -jnp.inf, jnp.float32),
+        }
+        state, _info = sess.run_loop(prog, state, max_iters=1)
+        host = sess.host_value((state["neighbors"], state["scores"]))
+        nbrs = np.asarray(host[0])
+        d = np.sqrt(np.maximum(-np.asarray(host[1]), 0.0))
+        return KNNResult(
+            neighbors=nbrs, distances=d, wire_candidates=kk * n_shards,
+            engine="container:topk", engine_requested=engine,
+        )
+
     # Query goes through env (a traced operand), keeping the topk executable
-    # memoized across calls with different query points.
-    nbrs = topk(pts_v, k, score_fn=_neg_sq_dist, mesh=mesh, env=q)
+    # memoized across calls with different query points.  session.topk counts
+    # the blocking candidate materialisation in stats.host_syncs.
+    nbrs = sess.topk(pts_v, k, score_fn=_neg_sq_dist, mesh=mesh, env=q)
     d = np.sqrt(((nbrs - np.asarray(query)[None]) ** 2).sum(1))
-    n_shards = 1 if mesh is None else mesh.shape.get("data", 1)
-    return KNNResult(neighbors=nbrs, distances=d, wire_candidates=k * max(n_shards, 1))
+    return KNNResult(
+        neighbors=nbrs, distances=d,
+        wire_candidates=k * max(n_shards, 1),
+        engine="container:topk", engine_requested=engine,
+    )
 
 
 def knn_full_sort(points: np.ndarray, query: np.ndarray, k: int = 100) -> KNNResult:

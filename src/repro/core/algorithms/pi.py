@@ -13,6 +13,14 @@ remark.
 ``engine=`` accepts ``"eager" | "pallas" | "naive" | "auto"``; the ``emit(0,
 …)`` key is trace-time constant, so eager/pallas/auto all lower to the same
 fused whole-axis reduction (the kernel only enters for dynamic keys).
+
+``mode="program"`` routes the same single op through the planner
+(``session.program``): the op becomes a one-node logical plan whose node
+hash equals the per-op call's ``MapReduceStats.plan_hash`` — the
+per-op/program agreement the plan IR guarantees (see ``tests/test_plan.py``).
+Either mode materialises the count through ``session.host_value``, so
+``stats.host_syncs`` counts π's one blocking sync (it used to bypass the
+session with a raw ``float(...)``).
 """
 from __future__ import annotations
 
@@ -21,9 +29,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import DistRange, map_reduce
+from repro.core import DistRange
 from repro.core.containers import hash32
-from repro.core.session import BlazeSession
+from repro.core.session import BlazeSession, resolve
 
 
 def _uniform01(x: jnp.ndarray, salt: int) -> jnp.ndarray:
@@ -37,29 +45,59 @@ def pi_mapper(v, emit):
     emit(0, jnp.where(x * x + y * y < 1.0, 1, 0))
 
 
+def _program_step(n_samples: int, engine: str):
+    """(step_fn, initial state) for the fused/planned spelling of π."""
+
+    def step(ctx, s):
+        counts = ctx.map_reduce(
+            DistRange(0, n_samples, 1), pi_mapper, "sum",
+            jnp.zeros((1,), jnp.int32), engine=engine,
+        )
+        return {"counts": jnp.asarray(counts)}
+
+    return step, {"counts": jnp.zeros((1,), jnp.int32)}
+
+
 def estimate_pi(
     n_samples: int,
     *,
     mesh=None,
     engine: str = "eager",
+    mode: str = "per_op",
     return_stats: bool = False,
     session: BlazeSession | None = None,
 ):
-    target = jnp.zeros((1,), jnp.int32)
-    out = map_reduce(
+    if mode not in ("per_op", "program"):
+        raise ValueError(f"unknown mode {mode!r}; choose 'per_op' or 'program'")
+    sess, mesh = resolve(session, mesh)
+    if mode == "program":
+        if return_stats:
+            raise ValueError(
+                "return_stats is a per-op feature; inside a program the op "
+                "has no standalone stats — inspect session.explain instead"
+            )
+        step, state = _program_step(n_samples, engine)
+        prog = sess.program(step, mesh=mesh)
+        state, _info = sess.run_loop(prog, state, max_iters=1)
+        counts = sess.host_value(state["counts"])
+        return 4.0 * float(counts[0]) / n_samples
+    out = sess.map_reduce(
         DistRange(0, n_samples, 1),
         pi_mapper,
         "sum",
-        target,
+        jnp.zeros((1,), jnp.int32),
         mesh=mesh,
         engine=engine,
         return_stats=return_stats,
-        session=session,
     )
     if return_stats:
         counts, stats = out
-        return 4.0 * float(counts[0]) / n_samples, stats
-    return 4.0 * float(out[0]) / n_samples
+    else:
+        counts, stats = out, None
+    # The blocking materialisation goes through the session so host_syncs
+    # counts it (the raw float(...) spelling undercounted).
+    pi = 4.0 * float(sess.host_value(counts)[0]) / n_samples
+    return (pi, stats) if return_stats else pi
 
 
 @functools.partial(jax.jit, static_argnums=0)

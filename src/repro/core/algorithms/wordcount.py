@@ -43,6 +43,20 @@ def wordcount_mapper(i, tokens, emit):
     emit(tokens, 1, mask=tokens >= 0)
 
 
+def _program_step(lines_v, hm, vocab_bound: int, engine: str):
+    """(step_fn, initial state) for the planned streaming word count: one
+    hash-target node per pass, the table threaded through the fused loop."""
+
+    def step(ctx, s):
+        ctx.map_reduce(
+            lines_v, wordcount_mapper, "sum", hm,
+            engine=engine, key_range=vocab_bound,
+        )
+        return {"it": s["it"] + 1}
+
+    return step, {"it": jnp.zeros((), jnp.int32)}
+
+
 @dataclasses.dataclass
 class WordCountResult:
     """Multi-pass (streaming) word count: counts + the fusion counters."""
@@ -122,16 +136,8 @@ def wordcount(
     syncs0 = sess.stats.host_syncs
 
     if mode == "program":
-
-        def step(ctx, s):
-            ctx.map_reduce(
-                lines_v, wordcount_mapper, "sum", hm,
-                engine=engine, key_range=vocab_bound,
-            )
-            return {"it": s["it"] + 1}
-
+        step, state = _program_step(lines_v, hm, vocab_bound, engine)
         prog = sess.program(step, mesh=mesh)
-        state = {"it": jnp.zeros((), jnp.int32)}
         state, info = sess.run_loop(
             prog, state, max_iters=iters, unroll=unroll
         )

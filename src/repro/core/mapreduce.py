@@ -43,9 +43,10 @@ Engines:
 * ``engine="naive"`` (conventional MapReduce / Spark's wide shuffle): every
   emitted pair goes on the wire unreduced; reduction happens only at the
   destination shard.
-* ``engine="auto"``: resolved by the session — pallas for built-in reducers
-  whose accumulator (dense ``[K]`` / hash table) stays VMEM-sized, eager
-  otherwise.
+* ``engine="auto"``: resolved by the planner (``repro.core.plan``'s
+  resolve-engines pass, applied per plan node) — pallas for built-in
+  reducers whose accumulator (dense ``[K]`` / hash table) stays VMEM-sized,
+  eager otherwise.
 
 ``wire`` ∈ {"none", "bf16", "int8"} applies the fast-serialization analogue to
 the collective payload (dense-sum targets).
@@ -64,6 +65,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.compat import shard_map
 
 from repro.core import containers as C
+from repro.core.plan import abstract_sig as _abstract
 from repro.core.reducers import Reducer, get_reducer
 from repro.core.serialization import narrowest_int_dtype
 
@@ -97,6 +99,9 @@ class MapReduceStats:
     # hash-aggregation kernel only: table geometry + probe depth.
     kernel_table_cap: int | None = None  # pre-shuffle combine table capacity
     kernel_probe_depth: int | None = None  # configured max probe rounds
+    # stable digest of this op's plan node (repro.core.plan) — identical for
+    # the per-op and program spellings of the same op.
+    plan_hash: str | None = None
 
     def finalize(self) -> "MapReduceStats":
         def _get(x):
@@ -126,6 +131,7 @@ class MapReduceStats:
             kernel_occupancy=occupancy,
             kernel_table_cap=self.kernel_table_cap,
             kernel_probe_depth=self.kernel_probe_depth,
+            plan_hash=self.plan_hash,
         )
 
 
@@ -366,15 +372,6 @@ def _source_kind(source) -> str:
     raise TypeError(f"unsupported source {type(source)}")
 
 
-def _abstract(tree):
-    """Hashable (treedef, shapes/dtypes) signature — cheap cache key."""
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
-    return treedef, tuple(
-        (getattr(x, "shape", ()), str(getattr(x, "dtype", type(x))))
-        for x in leaves
-    )
-
-
 def map_reduce(
     source,
     mapper: Callable,
@@ -429,7 +426,7 @@ def _local_view(kind, source, operands):
 
 def dense_shard_stage(
     kind, source, mapper, red, target, engine, wire, n_shards,
-    with_stats=True, feedback=False,
+    with_stats=True, feedback=False, collect=True,
 ):
     """Build a pure, composable shard stage for a dense ``[K, ...]`` target.
 
@@ -447,6 +444,12 @@ def dense_shard_stage(
       ``shard_map``, ``AbstractCollectives`` under program discovery);
     * ``residual`` — per-shard error-feedback carry when ``feedback=True``
       (``wire="int8"`` sums in an iterative program), else passed through.
+
+    ``collect=False`` (eager/pallas only) makes the stage stop at the
+    per-shard PARTIAL: ``total`` comes back *unreduced* and the caller owns
+    the collective.  This is the seam the plan optimizer's
+    ``batch-collectives`` pass rides — a program flushes several pending
+    partials through ONE concatenated collective (``repro.core.program``).
 
     ``total`` is the merged (replicated) dense result *excluding* the target
     — callers fold it in with ``red.combine(target, total)``.  Standalone
@@ -533,7 +536,9 @@ def dense_shard_stage(
                     )
                     seg = red.segment(dvals, ids, K + 1)[:K]
                 partial = red.combine(partial, seg.astype(target_dtype))
-            if feedback:
+            if not collect:
+                total = partial  # caller runs the (possibly batched) collective
+            elif feedback:
                 total, residual = coll.reduce_feedback(
                     partial, red, wire, residual
                 )
@@ -557,7 +562,7 @@ def dense_shard_stage(
 
 def _map_reduce_dense(
     kind, source, mapper, red, target, mesh, n_shards, engine, wire, env,
-    with_stats=True, cache=None,
+    with_stats=True, cache=None, node=None,
 ):
     """Dense [K, ...] target — the paper's small fixed key range fast path."""
     K = target.shape[0]
@@ -566,6 +571,9 @@ def _map_reduce_dense(
     if engine not in ("eager", "pallas", "naive"):
         raise ValueError(f"unknown engine {engine!r}")
 
+    # The executable cache key IS the plan node's identity-faithful cache
+    # signature: everything that shapes the lowered plan, with the mapper and
+    # reducer kept by object (two lambdas with one qualname stay distinct).
     cache_key = (
         "dense", mapper, red.name, red, engine, wire, mesh, kind, with_stats,
         _abstract(_source_operands(kind, source)[0]),
@@ -573,6 +581,8 @@ def _map_reduce_dense(
         (source.start, source.stop, source.step) if kind == "range" else None,
         _abstract(target), _abstract(env),
     )
+    if node is not None:
+        node.cache_sig = cache_key
 
     compiled_now = cache_key not in cache
     if compiled_now:
@@ -626,6 +636,7 @@ def _map_reduce_dense(
         kernel_block_n=kernel_meta.get("block_n"),
         kernel_lanes=kernel_meta.get("lanes"),
         kernel_pairs=kernel_pairs if kernel_meta else None,
+        plan_hash=node.hash if node is not None else None,
     )
     if engine == "naive":
         stats = dataclasses.replace(
@@ -805,7 +816,7 @@ def hash_shard_stage(
 
 def _map_reduce_hash(
     kind, source, mapper, red, target, mesh, n_shards, engine, slack, env,
-    key_range=None, cache=None,
+    key_range=None, cache=None, node=None,
 ):
     """DistHashMap target: local combine → hash-partition → all_to_all → merge."""
     axis = C.DATA_AXIS
@@ -818,6 +829,8 @@ def _map_reduce_hash(
         (source.start, source.stop, source.step) if kind == "range" else None,
         _abstract((target.table.keys, target.table.vals)), _abstract(env),
     )
+    if node is not None:
+        node.cache_sig = cache_key
 
     compiled_now = cache_key not in cache
     if compiled_now:
@@ -879,5 +892,6 @@ def _map_reduce_hash(
         kernel_pairs=kernel_pairs if kernel_meta else None,
         kernel_table_cap=kernel_meta.get("table_cap"),
         kernel_probe_depth=kernel_meta.get("probe_depth"),
+        plan_hash=node.hash if node is not None else None,
     )
     return out, stats

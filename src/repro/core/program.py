@@ -1,4 +1,4 @@
-"""Fused iteration programs: a whole iteration as ONE compiled executable.
+"""Fused iteration programs: a whole iteration as ONE optimized executable.
 
 The paper's iterative data-mining wins (PageRank, k-means, GMM/EM) come from
 keeping the hot loop resident.  ``BlazeSession`` already makes iteration
@@ -10,37 +10,44 @@ overhead is what separates in-memory MapReduce from MPI/OpenMP on iterative
 workloads — and BSP supersteps (Pace, arXiv:1203.2081) are the classical fix:
 batch the whole superstep, synchronise once.
 
-This module is that fix on SPMD JAX:
+This module is that fix on SPMD JAX, built around an explicit logical plan
+(``repro.core.plan``) since PR 5:
 
-* ``Program`` (built by ``BlazeSession.program(step_fn)``) traces a user
-  ``step_fn(ctx, state) -> state`` that may call several MapReduce ops plus
-  elementwise glue, and lowers the **entire iteration** into one
-  ``jit(shard_map(...))`` executable.  The ops compose because the engine
-  emits pure shard stages (``mapreduce.dense_shard_stage``) instead of
-  sealed executables — each op's local combine *and* its collective run
-  inline in the one shard body.
-* ``BlazeSession.run_loop(program, state, cond=..., max_iters=N, unroll=U)``
-  runs ``U`` iterations per dispatch via a device-resident ``lax.fori_loop``
-  (trip count is a *traced* scalar, so every block size shares one
-  executable) and evaluates the convergence test on the host only every
-  ``U`` steps.  N iterations therefore cost **1 compile**, ``≤ ⌈N/U⌉``
-  dispatches and ``≤ ⌈N/U⌉`` host syncs — counters asserted in
-  ``tests/test_session.py``.
+* **Discovery builds a ``Plan``.** ``step_fn`` runs once under
+  ``jax.eval_shape`` with shape-faithful collective stand-ins
+  (``AbstractCollectives``).  Instead of consuming the trace inline, the
+  context records every ``ctx.map_reduce`` / ``ctx.foreach`` / ``ctx.topk``
+  call as a plan node — sources, reducers, wire formats, residual and
+  hash-state edges — and the optimizer passes run on that plan:
 
-How a program is built (two traces, no user-visible difference):
+  - *resolve-engines*: each node gets its own resolved engine
+    (``repro.core.plan.resolve_engine``), so one program can mix
+    pallas-dense, pallas-hash and eager ops;
+  - *batch-collectives*: dense results come back as **lazy plan values**
+    (``PlanValue``).  The collective is deferred until the step function
+    actually consumes the result; everything pending at that moment with the
+    same (reducer, wire, dtype) is concatenated and reduced in ONE
+    collective.  GMM's EM round drops from 4 psums to 2 this way — asserted
+    via ``Plan.collectives_per_iter``;
+  - *cse*: a node identical to an earlier one (same source, mapper,
+    reducer, target, engine, wire, env) reuses its result instead of
+    recomputing and re-reducing;
+  - *prune-dead-sources*: nodes whose results are provably never consumed
+    (their lazy value is never forced and not part of the returned state)
+    are dropped, and sources referenced only by dropped nodes are never
+    shipped into the executable.
 
-1. **Discovery** — ``step_fn`` runs once under ``jax.eval_shape`` with
-   ``AbstractCollectives`` (shape-faithful local stand-ins, since no mesh
-   axis is bound outside ``shard_map``).  This records, in call order, which
-   source containers the step reads, which ops need an error-feedback
-   residual (``wire="int8"`` sums), and validates that the state pytree is a
-   fixed point (same treedef/shapes/dtypes out as in — required by
-   ``fori_loop``).
-2. **Execution** — one ``shard_map`` whose body binds ``RealCollectives``,
-   maps each source to its shard-local operands, and runs
-   ``fori_loop(0, n_iters, step)`` with the user state (replicated) plus the
-   per-shard feedback residuals as carry.  ``jax.jit`` around it makes the
-   whole block a single dispatch.
+* **Execution lowers the plan.** One ``shard_map`` whose body binds
+  ``RealCollectives``, maps each *live* source to its shard-local operands,
+  and runs ``fori_loop(0, n_iters, step)`` with the user state (replicated)
+  plus per-shard feedback residuals and hash tables as carry.  ``jax.jit``
+  around it makes the whole block a single dispatch.  The execution context
+  replays the same step function against the plan: pruned nodes are skipped,
+  CSE'd nodes reuse results, and pending partials flush through the same
+  batched collectives the plan recorded.
+
+``session.explain(program)`` renders the optimized plan Spark-EXPLAIN-style;
+golden snapshots for the paper's six algorithms live in ``tests/goldens/``.
 
 Iteration-varying values live in ``state``; distributed inputs (the edge
 list, the point set) are read through the captured source containers and
@@ -50,13 +57,13 @@ densities/memberships) stay on-shard as ``LocalVector``s produced by
 
 Hash targets (``DistHashMap``) are per-shard state, while the user state
 pytree is replicated — so their tables are threaded through the fused loop
-the same way int8 error-feedback residuals are: discovery records each
-target (keyed by the identity of its backing buffers), the executable takes
-the per-shard ``HashTable`` arrays as sharded operands, carries them through
+the same way int8 error-feedback residuals are: the plan records each target
+(keyed by the identity of its backing buffers), the executable takes the
+per-shard ``HashTable`` arrays as sharded operands, carries them through
 the ``fori_loop``, and returns them updated; ``Program`` keeps the returned
 tables across dispatches and ``program.hash_result(hm)`` materialises the
 accumulated ``DistHashMap``.  Inside the step, ``ctx.map_reduce`` on a hash
-target returns a ``LocalHashMap`` — this shard's updated table — usable as a
+target returns a ``LocalHashMap`` — this shard's updated table, usable as a
 source for later ops in the same iteration (multi-pass aggregation without
 leaving the executable).
 """
@@ -72,7 +79,17 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.compat import shard_map
 from repro.core import containers as C
 from repro.core import mapreduce as _mr
-from repro.core.reducers import get_reducer
+from repro.core import plan as plan_mod
+from repro.core.plan import (
+    ContainerOpNode,
+    DEFAULT_PASSES,
+    ForeachNode,
+    GlueNode,
+    MapReduceNode,
+    Plan,
+    SourceInfo,
+)
+from repro.core.reducers import _BUILTIN, get_reducer
 
 Array = jax.Array
 
@@ -80,6 +97,7 @@ __all__ = [
     "LocalHashMap",
     "LocalVector",
     "LoopInfo",
+    "PlanValue",
     "Program",
     "ProgramContext",
     "ProgramStats",
@@ -92,8 +110,8 @@ class LocalVector:
     """A shard-local vector inside a program trace (``ctx.foreach`` output).
 
     ``data`` is THIS shard's rows (``[per_shard, ...]``); ``n`` is the global
-    true (pre-padding) length.  Usable as a ``map_reduce``/``foreach`` source
-    within the same program — it never materialises globally.
+    true (pre-padding) length.  Usable as a ``map_reduce``/``foreach``/
+    ``topk`` source within the same program — it never materialises globally.
     """
 
     data: Array
@@ -149,35 +167,207 @@ def _source_key(kind: str, source) -> tuple:
     return ("hashmap", id(source.table.keys), id(source.table.vals))
 
 
+class PlanValue:
+    """A lazy dense MapReduce result inside a program trace.
+
+    ``ctx.map_reduce`` returns one for batchable dense ops: the per-shard
+    partial is computed eagerly, but the *collective* is deferred until the
+    step function consumes the value — at which point every pending partial
+    with the same (reducer, wire, dtype) ships in ONE concatenated
+    collective (the plan's ``batch-collectives`` pass).  Consumption happens
+    through the ``__jax_array__`` protocol (any jnp binary op / ``asarray``)
+    or the arithmetic dunders below; ``[...]`` indexing is itself lazy, so
+    ``ctx.map_reduce(...)[0]`` does not force an early flush.  A value that
+    is never consumed marks its op dead (``prune-dead-sources``).
+    """
+
+    __slots__ = ("_ctx", "_idx", "_post")
+
+    def __init__(self, ctx, idx: int, post: tuple = ()):
+        self._ctx = ctx
+        self._idx = idx
+        self._post = post
+
+    def _force(self) -> Array:
+        base = self._ctx._materialise(self._idx)
+        for f in self._post:
+            base = f(base)
+        return base
+
+    # -- the JAX conversion protocol (jnp.asarray / binary ops) --------------
+    def __jax_array__(self) -> Array:
+        return self._force()
+
+    def __getitem__(self, item) -> "PlanValue":
+        return PlanValue(
+            self._ctx, self._idx, self._post + ((lambda a, it=item: a[it]),)
+        )
+
+    def astype(self, dtype) -> Array:
+        return self._force().astype(dtype)
+
+    def reshape(self, *shape) -> Array:
+        return self._force().reshape(*shape)
+
+    # -- arithmetic: force, then defer to jnp --------------------------------
+    def _bin(self, other, op, reverse=False):
+        a = self._force()
+        b = other._force() if isinstance(other, PlanValue) else other
+        return op(b, a) if reverse else op(a, b)
+
+    def __add__(self, o):
+        return self._bin(o, jnp.add)
+
+    def __radd__(self, o):
+        return self._bin(o, jnp.add, reverse=True)
+
+    def __sub__(self, o):
+        return self._bin(o, jnp.subtract)
+
+    def __rsub__(self, o):
+        return self._bin(o, jnp.subtract, reverse=True)
+
+    def __mul__(self, o):
+        return self._bin(o, jnp.multiply)
+
+    def __rmul__(self, o):
+        return self._bin(o, jnp.multiply, reverse=True)
+
+    def __truediv__(self, o):
+        return self._bin(o, jnp.divide)
+
+    def __rtruediv__(self, o):
+        return self._bin(o, jnp.divide, reverse=True)
+
+    def __pow__(self, o):
+        return self._bin(o, jnp.power)
+
+    def __neg__(self):
+        return -self._force()
+
+    def __lt__(self, o):
+        return self._bin(o, jnp.less)
+
+    def __le__(self, o):
+        return self._bin(o, jnp.less_equal)
+
+    def __gt__(self, o):
+        return self._bin(o, jnp.greater)
+
+    def __ge__(self, o):
+        return self._bin(o, jnp.greater_equal)
+
+    # == / != must be elementwise like every other comparison — the default
+    # identity semantics would silently return False for `result == 0`.
+    def __eq__(self, o):
+        return self._bin(o, jnp.equal)
+
+    def __ne__(self, o):
+        return self._bin(o, jnp.not_equal)
+
+    __hash__ = object.__hash__  # identity hash stays valid (no value hash)
+
+
+# jnp functions are jit-wrapped: their argument flattening runs before any
+# __jax_array__ conversion could.  Registering PlanValue as a pytree node
+# whose flatten *forces* the value makes every jit boundary (jnp.maximum,
+# jnp.sum, user helpers, ...) materialise it transparently — so a lazy plan
+# value is a drop-in stand-in for the array inside step functions.
+jax.tree_util.register_pytree_node(
+    PlanValue,
+    lambda pv: ((pv._force(),), None),
+    lambda _aux, children: children[0],
+)
+
+
+def _is_plan_value(x) -> bool:
+    return isinstance(x, PlanValue)
+
+
+class _CountingCollectives:
+    """Wraps a collectives object and counts collective *launches* — the
+    quantity ``Plan.collectives_per_iter`` reports.  Used on the discovery
+    trace, so the count reflects the optimized plan (batched flushes count
+    once per group)."""
+
+    def __init__(self, inner):
+        self._inner = inner
+        self.count = 0
+
+    def axis_index(self):
+        return self._inner.axis_index()
+
+    def all_gather_tiled(self, x):
+        self.count += 1
+        return self._inner.all_gather_tiled(x)
+
+    def all_to_all_tiled(self, x):
+        self.count += 1
+        return self._inner.all_to_all_tiled(x)
+
+    def reduce(self, partial, red, wire):
+        self.count += 1
+        return self._inner.reduce(partial, red, wire)
+
+    def reduce_feedback(self, partial, red, wire, residual):
+        self.count += 1
+        return self._inner.reduce_feedback(partial, red, wire, residual)
+
+
 class ProgramContext:
     """What ``step_fn`` sees: session-API lookalikes that compose in-trace.
 
-    ``ctx.map_reduce`` / ``ctx.foreach`` mirror the ``BlazeSession`` methods
-    but run *inside* the fused program's shard body — no jit, no dispatch,
-    no stats; the collective of each op is inlined.  The same user code
-    therefore reads identically in per-op and program form (see the three
-    algorithm drivers).
+    ``ctx.map_reduce`` / ``ctx.foreach`` / ``ctx.topk`` mirror the
+    ``BlazeSession`` methods but run *inside* the fused program's shard body
+    — no jit, no dispatch, no per-op stats; each op's collective is inlined
+    (and possibly batched with its neighbours').  The same user code
+    therefore reads identically in per-op and program form.
+
+    Two modes share this class: ``"discover"`` *builds* the logical plan
+    (nodes, sources, batch groups, CSE aliases, dead ops) while tracing under
+    ``jax.eval_shape``; ``"execute"`` *consumes* a finished plan inside the
+    fused ``shard_map`` body — skipping pruned nodes, reusing CSE'd results,
+    and flushing the same batched collectives.
     """
 
     def __init__(
         self, n_shards: int, mode: str, coll=None, operands=None,
-        residuals=None, hash_tables=None,
+        residuals=None, hash_tables=None, plan: Plan | None = None,
+        passes: tuple = DEFAULT_PASSES,
     ):
         self._n_shards = n_shards
         self._mode = mode  # "discover" | "execute"
-        self._coll = coll if coll is not None else _mr.AbstractCollectives(n_shards)
+        inner = coll if coll is not None else _mr.AbstractCollectives(n_shards)
+        if mode == "discover":
+            inner = _CountingCollectives(inner)
+        self._coll = inner
         self._operands = operands or {}  # source key -> local operand tuple
-        self._sources: dict[tuple, Any] = {}  # discover: key -> source, ordered
-        self._residual_specs: list[tuple] = []  # discover: feedback op shapes
+        self._plan = plan  # execute mode: the optimized plan to replay
+        self._passes = tuple(passes)
+        self._batch = "batch-collectives" in self._passes
+        self._cse = "cse" in self._passes
+        self._prune = "prune-dead-sources" in self._passes
+        # -- discover-mode plan-building state --------------------------------
+        self._nodes: list = []  # call-order plan nodes
+        self._sources: dict[tuple, Any] = {}  # key -> source, ordered
+        self._local_producers: dict[int, int] = {}  # id(array) -> node idx
+        self._cse_index: dict[tuple, int] = {}  # cse key -> node idx
+        self._groups: dict[int, list[int]] = {}
+        self._group_keys: dict[int, tuple] = {}
+        self._hash_targets: dict[tuple, Any] = {}
+        # -- shared runtime state ---------------------------------------------
+        self._call_i = 0  # ctx-op call counter (node index)
+        self._pending: list[int] = []  # deferred ops awaiting their collective
+        self._partials: dict[int, tuple] = {}  # idx -> (partial, red, wire)
+        self._totals: dict[int, Array] = {}  # idx -> reduced (pre-merge) total
+        self._results: dict[int, Array] = {}  # idx -> target-merged result
+        self._meta: dict[int, tuple] = {}  # idx -> (red, target) for the merge
         self._residuals = residuals if residuals is not None else []
         self._res_i = 0
-        # hash-target state: key -> this shard's HashTable (current value).
-        # Discover mode also records key -> the original DistHashMap in
-        # ``_hash_targets`` (op order = dict order).
+        # hash-target state: key -> this shard's HashTable (current value)
         self._hash_tables: dict[tuple, C.HashTable] = (
             hash_tables if hash_tables is not None else {}
         )
-        self._hash_targets: dict[tuple, Any] = {}
 
     # -- source resolution ----------------------------------------------------
 
@@ -203,23 +393,195 @@ class ProgramContext:
             kind, source, self._operands[_source_key(kind, source)]
         )
 
+    def _resolve_program_source(self, source):
+        """(kind, static source, local view, src desc, source key) for any
+        in-program source — the session containers plus the program-local
+        ``LocalVector`` / ``LocalHashMap`` intermediates."""
+        if isinstance(source, LocalVector):
+            prod = self._local_producers.get(id(source.data), "?")
+            return "vector", None, (source.data, source.n), f"local[{prod}]", None
+        if isinstance(source, LocalHashMap):
+            prod = self._local_producers.get(id(source.table.keys), "?")
+            return (
+                "hashmap", None,
+                (source.table.keys, source.table.vals), f"local[{prod}]", None,
+            )
+        kind = _mr._source_kind(source)
+        key = _source_key(kind, source)
+        desc = plan_mod.source_desc(kind, source)
+        return kind, source, self._local_for(kind, source), desc, key
+
+    def _resolve_vector_source(self, v, what: str):
+        """(data, n, src desc, source key) for the vector-only ctx ops
+        (``foreach``, ``topk``): a ``DistVector`` or a ``LocalVector``."""
+        if isinstance(v, LocalVector):
+            prod = self._local_producers.get(id(v.data), "?")
+            return v.data, v.n, f"local[{prod}]", None
+        if isinstance(v, C.DistVector):
+            data, n = self._local_for("vector", v)
+            return (
+                data, n, plan_mod.source_desc("vector", v),
+                _source_key("vector", v),
+            )
+        raise TypeError(
+            f"{what} needs a DistVector or LocalVector, got {type(v)}"
+        )
+
+    # -- plan-node bookkeeping -------------------------------------------------
+
+    def _next_node(self, expect_type=None):
+        """Execute mode: the plan node matching this ctx call."""
+        idx = self._call_i
+        self._call_i += 1
+        if self._plan is None:
+            return idx, None
+        node = self._plan.nodes[idx]
+        if expect_type is not None and not isinstance(node, expect_type):
+            raise RuntimeError(
+                f"program trace diverged from its plan at node {idx}: "
+                f"expected {expect_type.__name__}, found {type(node).__name__}"
+            )
+        return idx, node
+
+    def _cse_key(self, kind, source_key, local, mapper, red, target, engine,
+                 wire, key_range, env):
+        """Identity of a node's *reduced total* — the part CSE can share.
+
+        The target merge is applied per node at materialisation (totals, not
+        merged results, are cached), so two ops differing only in their
+        target arrays still dedupe.  Dynamic inputs are compared by tracer
+        identity: the same state leaf or ``foreach`` output reused across ops
+        keys equal; anything recomputed keys distinct (conservative).
+        """
+        if source_key is not None:
+            src_ident = source_key
+        elif isinstance(local, tuple):  # local view (data, n) / (keys, vals)
+            src_ident = ("local",) + tuple(id(x) for x in local)
+        else:
+            src_ident = ("local", id(local))
+        env_ids = tuple(id(x) for x in jax.tree_util.tree_leaves(env))
+        target = jnp.asarray(target)
+        return (
+            kind, src_ident, mapper, id(red), engine, wire, key_range,
+            tuple(target.shape), str(target.dtype), env_ids,
+        )
+
+    # -- deferred collectives (the batch-collectives pass) ---------------------
+
+    def _total_of(self, idx: int) -> Array:
+        """The op's reduced total (pre target-merge) — the sharable part."""
+        if idx in self._totals:
+            return self._totals[idx]
+        node = (
+            self._plan.nodes[idx] if self._plan is not None else
+            (self._nodes[idx] if idx < len(self._nodes) else None)
+        )
+        if isinstance(node, MapReduceNode) and node.cse_of is not None:
+            return self._total_of(node.cse_of)
+        if idx in self._pending:
+            # Mid-step consumption: flush EVERYTHING pending — independent
+            # reductions that happen to be in flight batch into one
+            # collective per (reducer, wire, dtype).
+            self._flush()
+            return self._totals[idx]
+        raise RuntimeError(f"plan node {idx} has no result to materialise")
+
+    def _materialise(self, idx: int) -> Array:
+        if idx in self._results:
+            return self._results[idx]
+        node = (
+            self._plan.nodes[idx] if self._plan is not None else
+            (self._nodes[idx] if idx < len(self._nodes) else None)
+        )
+        if (
+            isinstance(node, MapReduceNode) and node.dead
+            and self._mode == "execute"
+        ):
+            raise RuntimeError(
+                f"plan node {idx} was pruned as dead but its result was "
+                "consumed — the execution trace diverged from discovery"
+            )
+        red, target = self._meta[idx]
+        total = self._total_of(idx)
+        out = red.combine(target, total.astype(target.dtype))
+        self._results[idx] = out
+        return out
+
+    def _flush(self, needed: set | None = None):
+        idxs = [i for i in self._pending if needed is None or i in needed]
+        if not idxs:
+            return
+        self._pending = [i for i in self._pending if i not in set(idxs)]
+        by_key: dict[tuple, list[int]] = {}
+        for i in idxs:
+            partial, red, wire = self._partials[i]
+            by_key.setdefault(
+                (red.name, wire, str(partial.dtype)), []
+            ).append(i)
+        for key, members in by_key.items():
+            if len(members) == 1 or not self._batch:
+                for i in members:
+                    partial, red, wire = self._partials[i]
+                    self._totals[i] = self._coll.reduce(partial, red, wire)
+                continue
+            # One fused collective for the whole group: flatten, concatenate,
+            # reduce once, split.  Exact for every built-in reducer — psum /
+            # pmin / pmax and the gathered prod fold are all elementwise, so
+            # reducing the concatenation is bit-identical to reducing each
+            # buffer alone.
+            _p0, red, wire = self._partials[members[0]]
+            flats = [self._partials[i][0].reshape(-1) for i in members]
+            sizes = [f.shape[0] for f in flats]
+            total_cat = self._coll.reduce(jnp.concatenate(flats), red, wire)
+            off = 0
+            for i, sz in zip(members, sizes):
+                partial, _r, _w = self._partials[i]
+                self._totals[i] = total_cat[off:off + sz].reshape(partial.shape)
+                off += sz
+            if self._mode == "discover":
+                gid = len(self._groups)
+                self._groups[gid] = list(members)
+                self._group_keys[gid] = key
+                for i in members:
+                    self._nodes[i].group = gid
+
+    def _finalize_state(self, out):
+        """Materialise every plan value the step returns; whatever is still
+        pending afterwards was never consumed — the op is dead."""
+        needed: set[int] = set()
+
+        def _collect(x):
+            if isinstance(x, PlanValue):
+                tgt = x._idx
+                node = (
+                    self._plan.nodes[tgt] if self._plan is not None
+                    else self._nodes[tgt]
+                )
+                if isinstance(node, MapReduceNode) and node.cse_of is not None:
+                    needed.add(node.cse_of)
+                needed.add(tgt)
+            return x
+
+        jax.tree_util.tree_map(_collect, out, is_leaf=_is_plan_value)
+        # With pruning on, flush only what the state needs (the rest is
+        # dead); with it off, every op's collective still runs.
+        self._flush(needed=needed if self._prune else None)
+        out = jax.tree_util.tree_map(
+            lambda x: x._force() if isinstance(x, PlanValue) else x,
+            out, is_leaf=_is_plan_value,
+        )
+        if self._mode == "discover":
+            for i in self._pending:
+                self._nodes[i].dead = True
+        self._pending = []
+        return out
+
     # -- the in-program API ---------------------------------------------------
 
     @property
     def shard_index(self) -> Array:
         """This shard's mesh coordinate (0 under discovery)."""
         return self._coll.axis_index()
-
-    def _resolve_program_source(self, source):
-        """(kind, static source, local view) for any in-program source —
-        the session containers plus the program-local ``LocalVector`` /
-        ``LocalHashMap`` intermediates."""
-        if isinstance(source, LocalVector):
-            return "vector", None, (source.data, source.n)
-        if isinstance(source, LocalHashMap):
-            return "hashmap", None, (source.table.keys, source.table.vals)
-        kind = _mr._source_kind(source)
-        return kind, source, self._local_for(kind, source)
 
     def map_reduce(
         self, source, mapper: Callable, reducer, target, *,
@@ -231,10 +593,12 @@ class ProgramContext:
         Same contract as ``BlazeSession.map_reduce``, except the result is a
         traced value inside the program and no per-op stats exist — the
         whole program is one dispatch.  Dense targets return the merged
-        array (merge into ``target`` included).  ``DistHashMap`` targets
-        return a ``LocalHashMap`` — this shard's updated table, readable as
-        a source by later ops in the same iteration; the table itself is
-        per-shard state threaded through the fused loop and across
+        result (merge into ``target`` included) as a lazy :class:`PlanValue`
+        whose collective is deferred and batched with its neighbours'
+        (plain jnp use materialises it transparently).  ``DistHashMap``
+        targets return a ``LocalHashMap`` — this shard's updated table,
+        readable as a source by later ops in the same iteration; the table
+        itself is per-shard state threaded through the fused loop and across
         dispatches (``Program.hash_result`` materialises it).
         ``wire="int8"`` sums additionally get error feedback: the per-shard
         quantization residual is carried through the device-resident loop
@@ -242,32 +606,90 @@ class ProgramContext:
         block feeds it back in), so iterative reductions stay unbiased for
         the lifetime of the program (``RealCollectives.reduce_feedback``).
         """
-        from repro.core.session import resolve_engine
-
         red = get_reducer(reducer)
+        env = jax.tree_util.tree_map(
+            lambda x: x._force() if isinstance(x, PlanValue) else x,
+            env, is_leaf=_is_plan_value,
+        )
         if isinstance(target, C.DistHashMap):
             return self._map_reduce_hash(
                 source, mapper, red, target, engine=engine, env=env,
                 shuffle_slack=shuffle_slack, key_range=key_range,
             )
         target = jnp.asarray(target)
-        engine = resolve_engine(engine, target, red)
-        kind, src_static, local = self._resolve_program_source(source)
+        if self._mode == "execute" and self._plan is not None:
+            # Pruned/CSE'd nodes are skipped BEFORE source resolution — a
+            # source only they read is never shipped into the executable.
+            peek = self._plan.nodes[self._call_i]
+            if isinstance(peek, MapReduceNode) and (
+                peek.dead or peek.cse_of is not None
+            ):
+                idx, _ = self._next_node(MapReduceNode)
+                self._meta[idx] = (red, target)
+                return PlanValue(self, idx)
+        kind, src_static, local, src_desc, source_key = (
+            self._resolve_program_source(source)
+        )
 
+        if self._mode == "discover":
+            node = plan_mod.build_mapreduce_node(
+                idx=self._call_i, kind=kind, src=src_desc,
+                source_key=source_key, mapper=mapper, red=red, target=target,
+                engine=engine, wire=wire, key_range=key_range, env=env,
+            )
+            self._call_i += 1
+            self._nodes.append(node)
+            self._meta[node.idx] = (red, target)
+            if self._cse and not (
+                wire == "int8" and red.name == "sum"
+            ):
+                ck = self._cse_key(
+                    kind, source_key, local, mapper, red, target,
+                    node.engine, wire, key_range, env,
+                )
+                hit = self._cse_index.get(ck)
+                if hit is not None:
+                    node.cse_of = hit
+                    return PlanValue(self, node.idx)
+                self._cse_index[ck] = node.idx
+        else:
+            idx, node = self._next_node(MapReduceNode)
+            self._meta[idx] = (red, target)
+            if node is None:
+                node = plan_mod.build_mapreduce_node(
+                    idx=idx, kind=kind, src=src_desc, source_key=source_key,
+                    mapper=mapper, red=red, target=target, engine=engine,
+                    wire=wire, key_range=key_range, env=env,
+                )
+            elif node.cse_of is not None:
+                return PlanValue(self, node.idx)
+            elif node.dead:
+                return PlanValue(self, node.idx)
+
+        resolved = node.engine
         feedback = (
             wire == "int8" and red.name == "sum"
-            and engine in ("eager", "pallas")
+            and resolved in ("eager", "pallas")
+        )
+        node.feedback = feedback
+        # Deferrable (and therefore batchable/prunable): a built-in
+        # reducer's eager or pallas plan without error feedback — exactly
+        # the ops whose collective is one elementwise reduce of a partial.
+        deferrable = (
+            resolved in ("eager", "pallas")
+            and not feedback
+            and red is _BUILTIN.get(red.name)
+            and (self._batch or self._prune)
         )
         stage, _ = _mr.dense_shard_stage(
-            kind, src_static, mapper, red, target, engine, wire,
+            kind, src_static, mapper, red, target, resolved, wire,
             self._n_shards, with_stats=False, feedback=feedback,
+            collect=not deferrable,
         )
         residual = None
         if feedback:
             if self._mode == "discover":
-                self._residual_specs.append(
-                    (tuple(target.shape), jnp.float32)
-                )
+                node.residual_spec = (tuple(target.shape), jnp.float32)
                 residual = jnp.zeros(target.shape, jnp.float32)
             else:
                 residual = self._residuals[self._res_i]
@@ -276,7 +698,13 @@ class ProgramContext:
             if self._mode == "execute":
                 self._residuals[self._res_i] = new_residual
             self._res_i += 1
-        return red.combine(target, total.astype(target.dtype))
+        if deferrable:
+            self._partials[node.idx] = (total, red, wire)
+            self._pending.append(node.idx)
+            return PlanValue(self, node.idx)
+        self._totals[node.idx] = total
+        self._results[node.idx] = red.combine(target, total.astype(target.dtype))
+        return self._results[node.idx]
 
     def _map_reduce_hash(
         self, source, mapper, red, target, *, engine, env, shuffle_slack,
@@ -288,11 +716,24 @@ class ProgramContext:
         iterations — drivers capture the same ``DistHashMap``); its table is
         fetched from / written back to the threaded hash state, so several
         ops (or iterations) targeting the same map compose sequentially.
+        Never deferred, CSE'd or pruned: the op *mutates* threaded state.
         """
-        from repro.core.session import resolve_engine
-
-        engine = resolve_engine(engine, target, red)
-        kind, src_static, local = self._resolve_program_source(source)
+        kind, src_static, local, src_desc, source_key = (
+            self._resolve_program_source(source)
+        )
+        if self._mode == "discover":
+            node = plan_mod.build_mapreduce_node(
+                idx=self._call_i, kind=kind, src=src_desc,
+                source_key=source_key, mapper=mapper, red=red, target=target,
+                engine=engine, wire="none", key_range=key_range, env=env,
+            )
+            self._call_i += 1
+            self._nodes.append(node)
+        else:
+            _, node = self._next_node(MapReduceNode)
+        resolved = node.engine if node is not None else plan_mod.resolve_engine(
+            engine, target, red
+        )
         tkey = ("hashtarget",) + _source_key("hashmap", target)[1:]
         if tkey not in self._hash_tables:
             if self._mode != "discover":
@@ -309,14 +750,17 @@ class ProgramContext:
                 ),
                 jnp.zeros((), jnp.int32),
             )
-        self._hash_targets.setdefault(tkey, target)
+        if self._mode == "discover":
+            self._hash_targets.setdefault(tkey, target)
         table = self._hash_tables[tkey]
         stage, _meta = _mr.hash_shard_stage(
-            kind, src_static, mapper, red, target.table.vals.dtype, engine,
+            kind, src_static, mapper, red, target.table.vals.dtype, resolved,
             shuffle_slack, self._n_shards, key_range=key_range,
         )
         table, _le, _ls, _kp = stage(env, table, local, self._coll)
         self._hash_tables[tkey] = table
+        if self._mode == "discover" and node is not None:
+            self._local_producers[id(table.keys)] = node.idx
         return LocalHashMap(table, red.name)
 
     def foreach(self, v, fn: Callable, env: Any = None) -> LocalVector:
@@ -325,22 +769,150 @@ class ProgramContext:
         Returns a ``LocalVector`` — the result stays on-shard, feeding later
         ops in the same program without any collective.
         """
-        if isinstance(v, LocalVector):
-            data, n = v.data, v.n
-        elif isinstance(v, C.DistVector):
-            data, n = self._local_for("vector", v)
-        else:
-            raise TypeError(
-                f"ctx.foreach needs a DistVector or LocalVector, got {type(v)}"
+        env = jax.tree_util.tree_map(
+            lambda x: x._force() if isinstance(x, PlanValue) else x,
+            env, is_leaf=_is_plan_value,
+        )
+        data, n, src_desc, source_key = self._resolve_vector_source(
+            v, "ctx.foreach"
+        )
+        if self._mode == "discover":
+            node = ForeachNode(
+                idx=self._call_i, src=src_desc, source_key=source_key, fn=fn
             )
+            self._call_i += 1
+            self._nodes.append(node)
+            idx = node.idx
+        else:
+            idx, _ = self._next_node(ForeachNode)
         out = jax.vmap(fn)(data) if env is None else jax.vmap(
             lambda x: fn(x, env)
         )(data)
+        if self._mode == "discover":
+            self._local_producers[id(out)] = idx
         return LocalVector(out, n)
+
+    def topk(
+        self, v, k: int, score_fn: Callable | None = None, env: Any = None,
+        engine: str | None = None,
+    ) -> tuple[Array, Array]:
+        """Container-level top-k inside a program: per-shard ``lax.top_k``,
+        one all_gather of ``k·n_shards`` candidates, global re-select.
+
+        Returns replicated ``(rows [m, ...], scores [m])`` with
+        ``m = min(k, kk·n_shards)``.  The plan records this as a
+        :class:`ContainerOpNode`; an ``engine=`` request is *surfaced* on the
+        node (and in ``explain``) rather than silently dropped — a container
+        op's plan is fixed by the container, no engine can change it.
+        """
+        env = jax.tree_util.tree_map(
+            lambda x: x._force() if isinstance(x, PlanValue) else x,
+            env, is_leaf=_is_plan_value,
+        )
+        data, n, src_desc, source_key = self._resolve_vector_source(
+            v, "ctx.topk"
+        )
+        if self._mode == "discover":
+            score_name = (
+                "value" if score_fn is None
+                else getattr(score_fn, "__qualname__", repr(score_fn))
+            )
+            self._nodes.append(ContainerOpNode(
+                idx=self._call_i, op="topk", src=src_desc,
+                source_key=source_key, params=f"k={k} score={score_name}",
+                engine_requested=engine,
+            ))
+            self._call_i += 1
+        else:
+            self._next_node(ContainerOpNode)
+        per = data.shape[0]
+        kk = min(k, per)
+        base = self._coll.axis_index() * per
+        if score_fn is None:
+            scores = data.astype(jnp.float32)
+        elif env is None:
+            scores = jax.vmap(score_fn)(data)
+        else:
+            scores = jax.vmap(lambda x: score_fn(x, env))(data)
+        idx_in = jnp.arange(per) + base
+        scores = jnp.where(idx_in < n, scores, -jnp.inf)
+        s, i = jax.lax.top_k(scores, kk)
+        cand = jnp.take(data, i, axis=0)
+        gs = self._coll.all_gather_tiled(s)
+        gc = self._coll.all_gather_tiled(cand)
+        m = min(k, gs.shape[0])
+        s2, i2 = jax.lax.top_k(gs, m)
+        return jnp.take(gc, i2, axis=0), s2
+
+    # -- plan assembly (discover mode) ----------------------------------------
+
+    def build_plan(self, state_desc: str, passes: tuple) -> Plan:
+        nodes = list(self._nodes)
+        nodes.append(GlueNode(idx=len(nodes), desc="state update (user glue)"))
+        # prune-dead-sources: a source is live iff some live node reads it.
+        live_keys: set[tuple] = set()
+        for n in nodes:
+            if isinstance(n, MapReduceNode) and (n.dead or n.cse_of is not None):
+                continue
+            sk = getattr(n, "source_key", None)
+            if sk is not None:
+                live_keys.add(sk)
+        sources = [
+            SourceInfo(
+                key=k,
+                desc=plan_mod.source_desc(_mr._source_kind(s), s),
+                source=s,
+                pruned=self._prune and k not in live_keys,
+            )
+            for k, s in self._sources.items()
+        ]
+        dead = sum(
+            1 for n in nodes
+            if isinstance(n, MapReduceNode) and n.dead
+        )
+        cse_hits = sum(
+            1 for n in nodes
+            if isinstance(n, MapReduceNode) and n.cse_of is not None
+        )
+        n_coll = self._coll.count  # _CountingCollectives in discover mode
+        unbatched = n_coll + sum(
+            len(g) - 1 for g in self._groups.values()
+        )
+        residual_specs = [
+            n.residual_spec
+            for n in nodes
+            if isinstance(n, MapReduceNode) and n.residual_spec is not None
+        ]
+        return Plan(
+            nodes=nodes,
+            sources=sources,
+            state_desc=state_desc,
+            n_shards=self._n_shards,
+            passes=passes,
+            groups=dict(self._groups),
+            group_keys=dict(self._group_keys),
+            collectives_per_iter=n_coll,
+            collectives_unbatched=unbatched,
+            cse_hits=cse_hits,
+            dead_ops=dead,
+            pruned_sources=sum(1 for s in sources if s.pruned),
+            residual_specs=residual_specs,
+            hash_targets=dict(self._hash_targets),
+        )
+
+
+def _state_desc(state) -> str:
+    leaves, treedef = jax.tree_util.tree_flatten(state)
+    descs = ",".join(
+        f"{str(jnp.asarray(x).dtype)}[{'x'.join(map(str, jnp.shape(x)))}]"
+        for x in leaves
+    )
+    return f"{treedef.num_leaves} leaves: {descs}"
 
 
 class Program:
-    """A user step function lowered to one executable per state signature.
+    """A user step function planned, optimized and lowered to one executable
+    per state signature.
 
     Built by ``BlazeSession.program(step_fn)``; ``step_fn(ctx, state)`` must
     return a state pytree with the same structure/shapes/dtypes (it is a
@@ -348,14 +920,26 @@ class Program:
     of ``n_iters`` fused iterations, or drive it with
     ``session.run_loop(...)``.  The trip count is traced, so full blocks and
     the remainder block share the single compiled executable.
+
+    ``program.plan`` (after :meth:`build` or the first dispatch) is the
+    optimized :class:`repro.core.plan.Plan`; ``session.explain(program)``
+    renders it.  ``passes=()`` disables the optimizer (CSE, collective
+    batching, dead-source pruning) for apples-to-apples comparisons —
+    ``benchmarks/paper_benchmarks.py::bench5_plan_batching`` uses exactly
+    that to report collectives-per-iteration before/after.
     """
 
-    def __init__(self, session, step_fn: Callable, *, mesh: Mesh | None = None):
+    def __init__(
+        self, session, step_fn: Callable, *, mesh: Mesh | None = None,
+        passes: tuple | None = None,
+    ):
         self._session = session
         self._step_fn = step_fn
         self._mesh = mesh if mesh is not None else session.mesh
         self._n_shards = self._mesh.shape[C.DATA_AXIS]
+        self._passes = DEFAULT_PASSES if passes is None else tuple(passes)
         self._cache: dict = {}  # state signature -> (jitted fused fn, operands)
+        self._plans: dict = {}  # state signature -> optimized Plan
         # state signature -> live per-shard error-feedback residuals, carried
         # ACROSS dispatches for the lifetime of this Program
         self._residual_state: dict = {}
@@ -364,15 +948,21 @@ class Program:
         # tables are per-shard state that outlives each dispatch
         self._hash_state: dict = {}
         self._last_sig = None  # signature of the most recent dispatch
+        self.plan: Plan | None = None  # most recently built plan
         self.stats = ProgramStats()
         self.feedback_slots = 0  # error-feedback residual slots (int8 sums)
         self.hash_slots = 0  # hash-target table slots threaded per iteration
 
     # -- build ---------------------------------------------------------------
 
-    def _discover(self, state):
-        ctx = ProgramContext(self._n_shards, "discover")
-        out = jax.eval_shape(lambda s: self._step_fn(ctx, s), state)
+    def _discover(self, state) -> Plan:
+        ctx = ProgramContext(self._n_shards, "discover", passes=self._passes)
+
+        def run(s):
+            out = self._step_fn(ctx, s)
+            return ctx._finalize_state(out)
+
+        out = jax.eval_shape(run, state)
         in_flat, in_tree = jax.tree_util.tree_flatten(state)
         out_flat, out_tree = jax.tree_util.tree_flatten(out)
         if in_tree != out_tree:
@@ -388,42 +978,51 @@ class Program:
                     f"fori_loop carry); leaf {i} went from {a_shape}/{a_dt} "
                     f"to {b.shape}/{b.dtype}"
                 )
-        return (
-            list(ctx._sources.values()),
-            list(ctx._residual_specs),
-            dict(ctx._hash_targets),
-        )
+        return ctx.build_plan(_state_desc(state), self._passes)
+
+    def build(self, state) -> Plan:
+        """Discover, optimize and lower the plan for ``state``'s signature
+        WITHOUT dispatching (compilation itself stays lazy under jit).
+        Returns the optimized :class:`Plan` — what ``session.explain``
+        renders."""
+        key = _mr._abstract(state)
+        self._build(state)
+        return self._plans[key]
 
     def _build(self, state):
         key = _mr._abstract(state)
         if key in self._cache:
+            self.plan = self._plans[key]
             return self._cache[key]
-        sources, residual_specs, hash_targets = self._discover(state)
-        self.feedback_slots = len(residual_specs)
-        self.hash_slots = len(hash_targets)
+        plan = self._discover(state)
+        self._plans[key] = plan
+        self.plan = plan
+        self.feedback_slots = len(plan.residual_specs)
+        self.hash_slots = len(plan.hash_targets)
         axis = C.DATA_AXIS
         n_shards = self._n_shards
         step_fn = self._step_fn
+        passes = self._passes
 
         operands: list = []
         specs: list = []
         source_keys: list[tuple] = []
         sizes: list[int] = []
-        for s in sources:
-            kind = _mr._source_kind(s)
-            ops, sp = _mr._source_operands(kind, s)
+        for s in plan.live_sources():
+            kind = _mr._source_kind(s.source)
+            ops, sp = _mr._source_operands(kind, s.source)
             operands.extend(ops)
             specs.extend(sp)
-            source_keys.append(_source_key(kind, s))
+            source_keys.append(s.key)
             sizes.append(len(ops))
-        n_res = len(residual_specs)
-        hash_keys = list(hash_targets)
+        n_res = len(plan.residual_specs)
+        hash_keys = list(plan.hash_targets)
         n_hash = len(hash_keys)
 
         def shard_body(state_, n_iters, *flat):
             # flat = per-op feedback residuals, then per-target hash tables
-            # (both sharded: each shard carries its own), then the source
-            # operands.
+            # (both sharded: each shard carries its own), then the live
+            # source operands.
             res_in = flat[:n_res]
             hash_in = flat[n_res:n_res + 3 * n_hash]
             flat_ops = flat[n_res + 3 * n_hash:]
@@ -439,8 +1038,9 @@ class Program:
                     n_shards, "execute", coll=coll, operands=op_map,
                     residuals=list(residuals),
                     hash_tables=dict(zip(hash_keys, tables)),
+                    plan=plan, passes=passes,
                 )
-                new_st = step_fn(ctx, st)
+                new_st = ctx._finalize_state(step_fn(ctx, st))
                 return (
                     new_st,
                     tuple(ctx._residuals),
@@ -480,13 +1080,13 @@ class Program:
         # them back in, so both stay live across blocks (even unroll=1).
         self._residual_state[key] = tuple(
             jnp.zeros((n_shards,) + shape, dtype)
-            for shape, dtype in residual_specs
+            for shape, dtype in plan.residual_specs
         )
         self._hash_state[key] = (
             hash_keys,
             tuple(
                 (hm.table.keys, hm.table.vals, hm.table.overflow)
-                for hm in hash_targets.values()
+                for hm in plan.hash_targets.values()
             ),
         )
         entry = (jax.jit(fused), tuple(operands))

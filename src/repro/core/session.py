@@ -34,10 +34,16 @@ from jax.sharding import Mesh
 
 from repro.core import containers as C
 from repro.core import mapreduce as _mr
+from repro.core import plan as plan_mod
+# The engine-resolution policy moved to repro.core.plan in PR 5 (it is the
+# plan optimizer's resolve-engines pass, applied per node); these re-exports
+# keep the long-standing session spellings working.
+from repro.core.plan import ENGINES, PALLAS_AUTO_MAX_KEYS, resolve_engine
 from repro.core.reducers import Reducer, get_reducer
 
 __all__ = [
     "BlazeSession",
+    "ENGINES",
     "PALLAS_AUTO_MAX_KEYS",
     "SessionStats",
     "get_default_session",
@@ -46,47 +52,6 @@ __all__ = [
     "resolve_engine",
     "set_default_session",
 ]
-
-ENGINES = ("eager", "pallas", "naive", "auto")
-
-# engine="auto" picks the Pallas kernel combine only while the dense [K, V]
-# accumulator tile plausibly stays VMEM-resident: K·V·4 B against a ~16 MB
-# core budget, with V unknown until trace.  4096 keys × 128 f32 lanes ≈ 2 MB —
-# comfortably resident; beyond that eager's XLA segmented reduce wins anyway.
-PALLAS_AUTO_MAX_KEYS = 4096
-
-
-def resolve_engine(engine: str, target, reducer: Reducer) -> str:
-    """The ``engine="auto"`` policy, plus reducer-compatibility fallbacks.
-
-    Every target kind now has a kernel: dense targets run the segment-reduce
-    kernel (``Reducer.pallas_segment``), ``DistHashMap`` targets the
-    hash-aggregation kernel (``Reducer.pallas_hash``).  Only a *custom*
-    reducer — which carries neither — falls back to the eager plan
-    (``engine="pallas"`` degrades rather than erroring, so drivers can pass
-    one engine for mixed pipelines, and the resolved name in
-    ``MapReduceStats.engine`` matches the plan that ran).
-
-    ``"auto"`` picks the kernel exactly when its accumulator plausibly stays
-    VMEM-resident: dense targets with ``K <= PALLAS_AUTO_MAX_KEYS``, hash
-    targets with ``capacity_per_shard <= PALLAS_AUTO_MAX_KEYS``; eager
-    otherwise.
-    """
-    if engine not in ENGINES:
-        raise ValueError(f"unknown engine {engine!r}; choose from {ENGINES}")
-    hash_target = isinstance(target, C.DistHashMap)
-    kernel = reducer.pallas_hash if hash_target else reducer.pallas_segment
-    if engine == "pallas" and kernel is None:
-        return "eager"
-    if engine != "auto":
-        return engine
-    if kernel is None:
-        return "eager"
-    if hash_target:
-        k = target.capacity_per_shard
-    else:
-        k = jnp.asarray(target).shape[0] if jnp.ndim(target) else 0
-    return "pallas" if 0 < k <= PALLAS_AUTO_MAX_KEYS else "eager"
 
 
 @dataclasses.dataclass
@@ -162,24 +127,35 @@ class BlazeSession:
         executable.  ``key_range`` (hash targets only) promises keys lie in
         ``[0, key_range)``: the shuffle then ships narrowed bucket keys and
         the pallas kernel sizes its combine table by the distinct-key bound.
+
+        Since PR 5 this path wraps the call in a single-node logical plan
+        (``repro.core.plan``): the resolve-engines pass runs on the node, the
+        executable cache is keyed on the node's cache signature, and
+        ``MapReduceStats.plan_hash`` carries the node's stable digest — equal
+        to the hash the same op gets inside a fused program.
         """
         red = get_reducer(reducer)
-        engine = resolve_engine(engine, target, red)
         mesh = mesh or self.mesh
         n_shards = mesh.shape[C.DATA_AXIS]
         kind = _mr._source_kind(source)
+        node = plan_mod.build_mapreduce_node(
+            idx=0, kind=kind, src=plan_mod.source_desc(kind, source),
+            source_key=None, mapper=mapper, red=red, target=target,
+            engine=engine, wire=wire, key_range=key_range, env=env,
+        )
+        engine = node.engine
 
         if isinstance(target, C.DistHashMap):
             out, stats = _mr._map_reduce_hash(
                 kind, source, mapper, red, target, mesh, n_shards, engine,
                 shuffle_slack, env, key_range=key_range,
-                cache=self._exec_cache,
+                cache=self._exec_cache, node=node,
             )
         else:
             out, stats = _mr._map_reduce_dense(
                 kind, source, mapper, red, jnp.asarray(target), mesh,
                 n_shards, engine, wire, env, return_stats,
-                cache=self._exec_cache,
+                cache=self._exec_cache, node=node,
             )
         self.stats.calls += 1
         self.stats.compiles += stats.compiles
@@ -189,18 +165,39 @@ class BlazeSession:
 
     # -- fused iteration programs (see repro.core.program) -------------------
 
-    def program(self, step_fn: Callable, *, mesh=None):
+    def program(self, step_fn: Callable, *, mesh=None, passes=None):
         """Lower ``step_fn(ctx, state) -> state`` — a whole iteration of
-        MapReduce ops plus elementwise glue — into ONE executable.
+        MapReduce ops plus elementwise glue — into ONE optimized executable.
 
         ``ctx`` mirrors the session API in-trace (``ctx.map_reduce``,
-        ``ctx.foreach``); iteration-varying values go through ``state``
-        (a pytree that must keep its structure/shapes across steps).  Run
-        the result with ``program(state, n_iters)`` or ``run_loop``.
+        ``ctx.foreach``, ``ctx.topk``); iteration-varying values go through
+        ``state`` (a pytree that must keep its structure/shapes across
+        steps).  Discovery builds an explicit logical plan
+        (``repro.core.plan``) and runs the optimizer passes on it — per-node
+        engine resolution, collective batching, CSE, dead-source pruning;
+        ``passes=()`` disables the optional three for A/B comparisons.  Run
+        the result with ``program(state, n_iters)`` or ``run_loop``; render
+        the plan with ``session.explain(program)``.
         """
         from repro.core.program import Program
 
-        return Program(self, step_fn, mesh=mesh or self.mesh)
+        return Program(self, step_fn, mesh=mesh or self.mesh, passes=passes)
+
+    def explain(self, program, state=None) -> str:
+        """Render ``program``'s optimized logical plan, Spark-EXPLAIN-style:
+        nodes with resolved engines and wire dtypes, the source table,
+        batched collective groups, CSE/prune effects and the plan hash.
+
+        The plan is built lazily per state signature; pass ``state`` to
+        build it without dispatching (cheap — compilation stays lazy under
+        jit), or call after the program has run at least once.
+        """
+        plan = program.build(state) if state is not None else program.plan
+        if plan is None:
+            raise ValueError(
+                "program has no plan yet — pass state= (or dispatch it once)"
+            )
+        return plan.render()
 
     def run_loop(
         self,
@@ -257,6 +254,17 @@ class BlazeSession:
         """Session-scoped ``foreach`` (same executable-reuse contract via
         ``env``; the elementwise cache is shared process-wide)."""
         return C.foreach(v, fn, env=env)
+
+    def topk(
+        self, v: C.DistVector, k: int, score_fn: Callable | None = None,
+        env: Any = None, mesh: Mesh | None = None,
+    ):
+        """Session-scoped ``topk``: selects on-device, then materialises the
+        ``k·n_shards`` candidates on the host — a blocking sync, counted in
+        ``stats.host_syncs`` (drivers that bypassed this used to undercount;
+        see ``knn``)."""
+        self.stats.host_syncs += 1
+        return C.topk(v, k, score_fn=score_fn, mesh=mesh or self.mesh, env=env)
 
     def distribute(self, x, mesh: Mesh | None = None) -> C.DistVector:
         """``distribute`` onto this session's mesh."""

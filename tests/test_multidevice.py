@@ -159,7 +159,7 @@ print(json.dumps({
     assert res["pr_compiles"] == 1 and res["pr_dispatches"] == 2
     assert res["pr_int8_err"] < 2e-2
     assert res["km_err"] < 1e-2
-    # 2 fused-loop dispatches + the final per-op inertia pass
+    # 2 fused-loop dispatches + the final inertia probe (same executable)
     assert res["km_compiles"] == 1 and res["km_dispatches"] == 3
 
 

@@ -1,0 +1,494 @@
+"""The logical-plan IR: per-node engine resolution, plan-hash agreement
+between the per-op and program paths, collective batching (GMM's 4 psums →
+2), CSE, dead-source pruning, explain goldens, and the pi/knn planner
+routing with honest host-sync accounting."""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import BlazeSession, DistRange, distribute
+from repro.core.algorithms import (
+    estimate_pi,
+    gmm_em,
+    gmm_em_reference,
+    kmeans,
+    knn,
+    knn_full_sort,
+    pagerank,
+    pagerank_reference,
+)
+from repro.data.synthetic import cluster_points, rmat_edges
+
+GOLDEN_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "goldens")
+
+
+def _dyn_mapper(i, x, emit):
+    emit(x[0].astype(jnp.int32) % 8, x[1])
+
+
+def _dyn4_mapper(i, x, emit):
+    emit(x[0].astype(jnp.int32) % 4, x[1] * 2.0)
+
+
+def _rows(n=64, seed=0):
+    rows = np.random.RandomState(seed).randn(n, 2).astype(np.float32)
+    rows[:, 0] = np.random.RandomState(seed + 1).randint(0, 8, n)
+    return rows
+
+
+def _sum_oracle(rows, kmod=8, scale=1.0):
+    out = np.zeros(kmod)
+    for r in rows:
+        out[int(np.int32(r[0])) % kmod] += r[1] * scale
+    return out
+
+
+# -- plan hashes: the per-op and program paths provably agree ------------------
+
+
+def test_per_op_and_program_plan_hashes_agree_for_pi():
+    """The acceptance property: the same op gets the same plan-node hash
+    whether it runs standalone (single-node plan) or inside a program."""
+    from repro.core.algorithms.pi import _program_step, pi_mapper
+
+    sess = BlazeSession()
+    _, st = sess.map_reduce(
+        DistRange(0, 10_000, 1), pi_mapper, "sum", jnp.zeros((1,), jnp.int32),
+        return_stats=True,
+    )
+    assert st.plan_hash is not None
+
+    step, state = _program_step(10_000, "eager")
+    prog = sess.program(step)
+    plan = prog.build(state)
+    (node,) = plan.mapreduce_nodes()
+    assert node.hash == st.plan_hash
+
+
+def test_per_op_and_program_plan_hashes_agree_for_hash_targets():
+    from repro.core import make_dist_hashmap
+    from repro.core.algorithms.wordcount import _program_step, wordcount_mapper
+
+    sess = BlazeSession()
+    lines = np.random.RandomState(0).randint(0, 50, (32, 8)).astype(np.int32)
+    lv = distribute(lines, sess.mesh)
+    hm = make_dist_hashmap(sess.mesh, 256, (), jnp.int32, "sum")
+    _, st = sess.map_reduce(
+        lv, wordcount_mapper, "sum", hm, key_range=50, return_stats=True
+    )
+    step, state = _program_step(lv, hm, 50, "eager")
+    plan = sess.program(step).build(state)
+    (node,) = plan.mapreduce_nodes()
+    assert node.hash == st.plan_hash
+
+
+def test_plan_hash_distinguishes_engine_wire_and_mapper():
+    from repro.core.algorithms.pi import pi_mapper
+
+    def other_mapper(v, emit):
+        emit(0, jnp.where(v % 2 == 0, 1, 0))
+
+    sess = BlazeSession()
+    src = DistRange(0, 1000, 1)
+    t = jnp.zeros((1,), jnp.int32)
+    _, a = sess.map_reduce(src, pi_mapper, "sum", t, return_stats=True)
+    _, b = sess.map_reduce(
+        src, pi_mapper, "sum", t, engine="naive", return_stats=True
+    )
+    _, c = sess.map_reduce(src, other_mapper, "sum", t, return_stats=True)
+    assert a.plan_hash != b.plan_hash
+    assert a.plan_hash != c.plan_hash  # same shape, different mapper
+
+
+def test_resolve_engine_importable_from_plan_and_session():
+    """The policy moved to the plan layer; the session spelling survives."""
+    from repro.core.plan import PALLAS_AUTO_MAX_KEYS as P1, resolve_engine as r1
+    from repro.core.session import PALLAS_AUTO_MAX_KEYS as P2, resolve_engine as r2
+
+    assert r1 is r2 and P1 == P2
+
+
+# -- collective batching -------------------------------------------------------
+
+
+def test_independent_sums_batch_into_one_collective():
+    sess = BlazeSession()
+    rows = _rows()
+    pts = distribute(rows, sess.mesh)
+
+    def step(ctx, s):
+        a = ctx.map_reduce(pts, _dyn_mapper, "sum", jnp.zeros((8,), jnp.float32))
+        b = ctx.map_reduce(pts, _dyn4_mapper, "sum", jnp.zeros((4,), jnp.float32))
+        # first consumption AFTER both ops -> they flush as one psum
+        return {"a": jnp.asarray(a), "b": jnp.asarray(b)}
+
+    prog = sess.program(step)
+    state = {"a": jnp.zeros((8,), jnp.float32), "b": jnp.zeros((4,), jnp.float32)}
+    plan = prog.build(state)
+    assert plan.collectives_per_iter == 1
+    assert plan.collectives_unbatched == 2
+    assert len(plan.groups) == 1 and sorted(plan.groups[0]) == [0, 1]
+    out = prog(state, 1)
+    np.testing.assert_allclose(np.asarray(out["a"]), _sum_oracle(rows), rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(out["b"]), _sum_oracle(rows, 4, 2.0), rtol=1e-5
+    )
+
+
+def test_batching_respects_reducer_and_dtype_boundaries():
+    """sum f32, sum i32 and max f32 partials cannot share a collective."""
+    sess = BlazeSession()
+    rows = _rows()
+    pts = distribute(rows, sess.mesh)
+
+    def int_mapper(i, x, emit):
+        emit(x[0].astype(jnp.int32) % 4, 1)
+
+    def step(ctx, s):
+        a = ctx.map_reduce(pts, _dyn_mapper, "sum", jnp.zeros((8,), jnp.float32))
+        b = ctx.map_reduce(pts, int_mapper, "sum", jnp.zeros((4,), jnp.int32))
+        c = ctx.map_reduce(
+            pts, _dyn_mapper, "max", jnp.full((8,), -jnp.inf, jnp.float32)
+        )
+        return {"a": jnp.asarray(a), "b": jnp.asarray(b), "c": jnp.asarray(c)}
+
+    prog = sess.program(step)
+    state = {
+        "a": jnp.zeros((8,), jnp.float32),
+        "b": jnp.zeros((4,), jnp.int32),
+        "c": jnp.zeros((8,), jnp.float32),
+    }
+    plan = prog.build(state)
+    assert plan.collectives_per_iter == 3  # no shareable pair
+    assert not plan.groups
+    out = prog(state, 1)
+    np.testing.assert_allclose(np.asarray(out["a"]), _sum_oracle(rows), rtol=1e-5)
+    counts = np.zeros(4)
+    mx = np.full(8, -np.inf)
+    for r in rows:
+        counts[int(np.int32(r[0])) % 4] += 1
+        k = int(np.int32(r[0])) % 8
+        mx[k] = max(mx[k], r[1])
+    np.testing.assert_array_equal(np.asarray(out["b"]), counts)
+    np.testing.assert_allclose(np.asarray(out["c"]), mx, rtol=1e-6)
+
+
+@pytest.mark.parametrize("engine", ("eager", "pallas", "naive"))
+def test_gmm_program_issues_fewer_collectives_and_stays_exact(engine):
+    """THE acceptance criterion: GMM's EM round used to issue 4 separate
+    psums; the batching pass fuses ll/N_k/Σwx into one (Σw(x−μ)(x−μ)ᵀ
+    depends on the new mean and ships alone) — while staying oracle-exact
+    on every engine.  naive ops are not batchable (wide shuffle), so the
+    optimized count equals the unbatched one there."""
+    pts, _ = cluster_points(600, 2, 3, seed=1)
+    init = pts[:3].copy()
+    sess = BlazeSession()
+    res = gmm_em(pts, 3, init_mu=init, tol=0.0, max_iters=10, engine=engine,
+                 session=sess, mode="program", unroll=5)
+    if engine in ("eager", "pallas"):
+        assert res.collectives_per_iter == 2
+    else:
+        assert res.collectives_per_iter > 2
+    ra, rm, rs, rll, _ = gmm_em_reference(pts, 3, init, tol=0.0, max_iters=10)
+    assert float(np.abs(res.mu - rm).max()) < 1e-2
+    assert float(np.abs(res.alpha - ra).max()) < 1e-3
+    assert abs(res.log_likelihood - rll) / abs(rll) < 1e-3
+
+
+def test_gmm_batched_vs_unoptimized_plans_agree_exactly():
+    """passes=() disables the optimizer: same step, 4 collectives instead of
+    2, bit-equal results (concatenated psum == separate psums)."""
+    from repro.core.algorithms.gmm import _program_step
+
+    pts, _ = cluster_points(400, 2, 3, seed=2)
+    rows0 = np.concatenate([pts, np.zeros((400, 3), np.float32)], axis=1)
+    sess = BlazeSession()
+    rows_v = distribute(rows0.astype(np.float32), sess.mesh)
+    step, state0 = _program_step(rows_v, 3, 2, 400, "eager")
+    init = state0(
+        np.full(3, 1 / 3, np.float32), pts[:3].copy(),
+        np.tile(np.eye(2, dtype=np.float32), (3, 1, 1)),
+    )
+    opt = sess.program(step)
+    unopt = sess.program(step, passes=())
+    assert opt.build(init).collectives_per_iter == 2
+    assert unopt.build(init).collectives_per_iter == 4
+    assert unopt.build(init).collectives_unbatched == 4
+    a = opt(init, 5)
+    b = unopt(init, 5)
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+
+
+def test_pagerank_program_batches_sink_and_contribution():
+    sess = BlazeSession()
+    edges = rmat_edges(6, 8, seed=3)
+    res = pagerank(edges, 64, tol=0.0, max_iters=10, session=sess,
+                   mode="program", unroll=5)
+    # sink-sum + contribution-sum share one psum; the delta pmax is alone
+    assert res.collectives_per_iter == 2
+    ref = pagerank_reference(edges, 64, tol=0.0, max_iters=10)
+    assert float(np.abs(res.scores - ref).max() / ref.max()) < 1e-4
+
+
+def test_kmeans_program_single_collective_carries_inertia():
+    pts, _ = cluster_points(1000, 3, 4, seed=0)
+    init = pts[:4].copy()
+    res = kmeans(pts, 4, init_centers=init, tol=0.0, max_iters=10,
+                 session=BlazeSession(), mode="program", unroll=5)
+    assert res.collectives_per_iter == 1  # sums+counts+inertia in one psum
+    assert res.compiles == 0  # no per-op inertia executable anymore
+    per_op = kmeans(pts, 4, init_centers=init, tol=0.0, max_iters=10,
+                    session=BlazeSession())
+    assert abs(res.inertia - per_op.inertia) <= 1e-4 * abs(per_op.inertia)
+
+
+# -- CSE -----------------------------------------------------------------------
+
+
+def test_identical_ops_cse_even_with_different_targets():
+    """Two ops with the same (source, mapper, reducer, engine, wire, env)
+    compute once; each still merges into its OWN target (totals are shared,
+    merges are not)."""
+    sess = BlazeSession()
+    rows = _rows()
+    pts = distribute(rows, sess.mesh)
+
+    def step(ctx, s):
+        a = ctx.map_reduce(pts, _dyn_mapper, "sum", jnp.zeros((8,), jnp.float32))
+        b = ctx.map_reduce(pts, _dyn_mapper, "sum", jnp.full((8,), 5.0, jnp.float32))
+        return {"a": jnp.asarray(a), "b": jnp.asarray(b)}
+
+    prog = sess.program(step)
+    state = {"a": jnp.zeros((8,), jnp.float32), "b": jnp.zeros((8,), jnp.float32)}
+    plan = prog.build(state)
+    assert plan.cse_hits == 1
+    assert plan.collectives_per_iter == 1
+    assert plan.mapreduce_nodes()[1].cse_of == 0
+    out = prog(state, 1)
+    ref = _sum_oracle(rows)
+    np.testing.assert_allclose(np.asarray(out["a"]), ref, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(out["b"]), ref + 5.0, rtol=1e-5)
+
+
+def test_different_env_values_do_not_cse():
+    sess = BlazeSession()
+    rows = _rows()
+    pts = distribute(rows, sess.mesh)
+
+    def scaled(i, x, emit, env):
+        emit(x[0].astype(jnp.int32) % 8, x[1] * env)
+
+    def step(ctx, s):
+        a = ctx.map_reduce(
+            pts, scaled, "sum", jnp.zeros((8,), jnp.float32), env=s["u"]
+        )
+        b = ctx.map_reduce(
+            pts, scaled, "sum", jnp.zeros((8,), jnp.float32), env=s["u"] * 2.0
+        )
+        return {"a": jnp.asarray(a), "b": jnp.asarray(b), "u": s["u"]}
+
+    prog = sess.program(step)
+    state = {
+        "a": jnp.zeros((8,), jnp.float32),
+        "b": jnp.zeros((8,), jnp.float32),
+        "u": jnp.asarray(1.0, jnp.float32),
+    }
+    plan = prog.build(state)
+    assert plan.cse_hits == 0
+    out = prog(state, 1)
+    ref = _sum_oracle(rows)
+    np.testing.assert_allclose(np.asarray(out["a"]), ref, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(out["b"]), 2 * ref, rtol=1e-5)
+
+
+# -- dead-op / dead-source pruning ---------------------------------------------
+
+
+def test_dead_op_and_its_source_are_pruned():
+    """An op whose result is never consumed is dropped from the plan, and a
+    source only it read is never shipped into the executable."""
+    sess = BlazeSession()
+    rows = _rows()
+    pts = distribute(rows, sess.mesh)
+    unused = distribute(np.ones((16, 2), np.float32), sess.mesh)
+
+    def step(ctx, s):
+        a = ctx.map_reduce(pts, _dyn_mapper, "sum", jnp.zeros((8,), jnp.float32))
+        got = jnp.asarray(a)  # flush a before the dead op exists
+        _ = ctx.map_reduce(unused, _dyn_mapper, "sum", jnp.zeros((8,), jnp.float32))
+        return {"a": got}
+
+    prog = sess.program(step)
+    state = {"a": jnp.zeros((8,), jnp.float32)}
+    plan = prog.build(state)
+    assert plan.dead_ops == 1
+    assert plan.pruned_sources == 1
+    assert [s.desc for s in plan.sources if s.pruned] == [
+        "vector float32[16x2] n=16"
+    ]
+    # only the live source's operand is shipped into the executable
+    _fn, operands = prog._cache[list(prog._cache)[0]]
+    assert len(operands) == 1
+    out = prog(state, 2)
+    np.testing.assert_allclose(
+        np.asarray(out["a"]), _sum_oracle(rows), rtol=1e-5
+    )
+
+
+def test_pruning_disabled_ships_and_runs_everything():
+    sess = BlazeSession()
+    pts = distribute(_rows(), sess.mesh)
+    unused = distribute(np.ones((16, 2), np.float32), sess.mesh)
+
+    def step(ctx, s):
+        a = ctx.map_reduce(pts, _dyn_mapper, "sum", jnp.zeros((8,), jnp.float32))
+        got = jnp.asarray(a)
+        _ = ctx.map_reduce(unused, _dyn_mapper, "sum", jnp.zeros((8,), jnp.float32))
+        return {"a": got}
+
+    prog = sess.program(step, passes=())
+    state = {"a": jnp.zeros((8,), jnp.float32)}
+    plan = prog.build(state)
+    assert plan.dead_ops == 0 and plan.pruned_sources == 0
+    _fn, operands = prog._cache[list(prog._cache)[0]]
+    assert len(operands) == 2
+    prog(state, 1)  # runs fine with both operands
+
+
+# -- explain -------------------------------------------------------------------
+
+
+def test_explain_golden_snapshots():
+    """The checked-in EXPLAIN goldens for all six paper algorithms match the
+    current planner output (CI also diffs these via
+    tools/check_explain_goldens.py)."""
+    from tools.check_explain_goldens import build_plans
+
+    plans = build_plans()
+    assert sorted(plans) == ["gmm", "kmeans", "knn", "pagerank", "pi", "wordcount"]
+    for name, text in plans.items():
+        path = os.path.join(GOLDEN_DIR, f"explain_{name}.txt")
+        assert os.path.exists(path), f"missing golden {path}"
+        want = open(path).read().rstrip("\n")
+        assert text == want, (
+            f"explain golden for {name} is stale — regenerate with "
+            "PYTHONPATH=src python tools/check_explain_goldens.py --update\n"
+            f"{text}"
+        )
+
+
+def test_explain_requires_a_built_plan():
+    sess = BlazeSession()
+
+    def step(ctx, s):
+        t = ctx.map_reduce(
+            DistRange(0, 8, 1), lambda v, emit: emit(0, v), "sum",
+            jnp.zeros((1,), jnp.int32),
+        )
+        return {"t": jnp.asarray(t)}
+
+    prog = sess.program(step)
+    with pytest.raises(ValueError, match="plan"):
+        sess.explain(prog)
+    text = sess.explain(prog, state={"t": jnp.zeros((1,), jnp.int32)})
+    assert "Blaze logical plan" in text and "map_reduce sum" in text
+
+
+def test_explain_shows_mixed_engines_per_node():
+    """One program mixing eager and pallas ops: the plan resolves engines
+    per node, and explain shows both."""
+    sess = BlazeSession()
+    pts = distribute(_rows(), sess.mesh)
+
+    def step(ctx, s):
+        a = ctx.map_reduce(
+            pts, _dyn_mapper, "sum", jnp.zeros((8,), jnp.float32),
+            engine="eager",
+        )
+        b = ctx.map_reduce(
+            pts, _dyn_mapper, "sum", jnp.zeros((8,), jnp.float32),
+            engine="pallas",
+        )
+        return {"a": jnp.asarray(a), "b": jnp.asarray(b)}
+
+    prog = sess.program(step)
+    state = {"a": jnp.zeros((8,), jnp.float32), "b": jnp.zeros((8,), jnp.float32)}
+    plan = prog.build(state)
+    engines = [n.engine for n in plan.mapreduce_nodes()]
+    assert engines == ["eager", "pallas"]
+    text = sess.explain(prog)
+    assert "engine=eager" in text and "engine=pallas" in text
+
+
+def test_plan_value_equality_is_elementwise():
+    """== / != on a lazy plan value compare values (forcing the flush), not
+    Python identity — `result == 0` must be usable in step glue."""
+    sess = BlazeSession()
+
+    def parity(v, emit):
+        emit(v % 2, 1)
+
+    def step(ctx, s):
+        c = ctx.map_reduce(
+            DistRange(0, 9, 1), parity, "sum", jnp.zeros((2,), jnp.int32)
+        )
+        is_five = c[0] == 5  # evens in [0, 9): 0,2,4,6,8
+        diff = c[0] != c[1]
+        return {"five": jnp.asarray(is_five), "diff": jnp.asarray(diff)}
+
+    prog = sess.program(step)
+    state = {"five": jnp.asarray(False), "diff": jnp.asarray(False)}
+    out = prog(state, 1)
+    assert bool(out["five"]) is True
+    assert bool(out["diff"]) is True
+
+
+def test_pi_program_rejects_return_stats():
+    with pytest.raises(ValueError, match="per-op"):
+        estimate_pi(1000, mode="program", return_stats=True)
+
+
+# -- pi / knn through the planner ----------------------------------------------
+
+
+def test_pi_program_equals_per_op_and_counts_host_syncs():
+    sess = BlazeSession()
+    a = estimate_pi(50_000, session=sess)
+    assert sess.stats.host_syncs == 1  # used to bypass session.host_value
+    b = estimate_pi(50_000, session=sess, mode="program")
+    assert a == b
+    assert sess.stats.host_syncs == 2
+    assert sess.stats.program_compiles == 1
+
+
+def test_knn_program_matches_per_op_and_full_sort():
+    pts = np.random.RandomState(0).randn(512, 3).astype(np.float32)
+    q = np.full(3, 0.5, np.float32)
+    sess = BlazeSession()
+    per_op = knn(pts, q, k=16, session=sess)
+    assert sess.stats.host_syncs == 1
+    prog = knn(pts, q, k=16, session=sess, mode="program")
+    ref = knn_full_sort(pts, q, k=16)
+    np.testing.assert_allclose(
+        np.sort(per_op.distances), np.sort(ref.distances), rtol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.sort(prog.distances), np.sort(ref.distances), rtol=1e-5
+    )
+    assert sess.stats.host_syncs == 2
+
+
+def test_knn_surfaces_ignored_engine_request():
+    """knn's plan is container-level: the engine request is surfaced in the
+    result (and on the plan node in explain), never silently dropped."""
+    pts = np.random.RandomState(1).randn(128, 3).astype(np.float32)
+    res = knn(pts, np.zeros(3, np.float32), k=4, engine="pallas")
+    assert res.engine == "container:topk"
+    assert res.engine_requested == "pallas"
+    with pytest.raises(ValueError, match="unknown engine"):
+        knn(pts, np.zeros(3, np.float32), k=4, engine="spark")
+    golden = open(os.path.join(GOLDEN_DIR, "explain_knn.txt")).read()
+    assert "ignored (container-level plan)" in golden

@@ -1,0 +1,145 @@
+#!/usr/bin/env python
+"""Golden snapshots of ``session.explain()`` for the six paper algorithms.
+
+Builds each algorithm's fused program on a fixed 1-device mesh with fixed
+(data-independent) shapes, renders the optimized logical plan, and diffs it
+against ``tests/goldens/explain_<algo>.txt``.  CI runs this after the test
+suite (``--check`` is the default); regenerate with ``--update`` after an
+intentional plan change.
+
+Everything in the rendering is deterministic: node descriptions use mapper
+qualnames and abstract shapes (never object ids), plan hashes digest those
+same strings, and the mesh is pinned to one device so shard counts match on
+any machine.
+
+Usage:
+    PYTHONPATH=src python tools/check_explain_goldens.py [--update]
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+GOLDEN_DIR = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "tests", "goldens",
+)
+
+
+def build_plans() -> dict[str, str]:
+    """{algorithm: rendered explain text} for all six paper algorithms."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    import importlib
+
+    from repro.core import BlazeSession, distribute, make_dist_hashmap
+    from repro.core.containers import data_mesh
+
+    # algorithms/__init__ re-exports driver *functions* under the module
+    # names, so fetch the submodules explicitly
+    _alg = "repro.core.algorithms."
+    gmm = importlib.import_module(_alg + "gmm")
+    kmeans = importlib.import_module(_alg + "kmeans")
+    knn = importlib.import_module(_alg + "knn")
+    pagerank = importlib.import_module(_alg + "pagerank")
+    pi = importlib.import_module(_alg + "pi")
+    wordcount = importlib.import_module(_alg + "wordcount")
+
+    mesh = data_mesh(1)  # pinned: goldens must not depend on device count
+    sess = BlazeSession(mesh)
+    out: dict[str, str] = {}
+
+    # -- pi: one static-key dense sum ----------------------------------------
+    step, state = pi._program_step(100_000, "eager")
+    out["pi"] = sess.program(step, mesh=mesh).build(state).render()
+
+    # -- pagerank: 3 dense ops; sink+contribution psums batch ----------------
+    edges = np.zeros((512, 2), np.int32)
+    deg = jnp.zeros((64,), jnp.int32)
+    step, state0 = pagerank._program_step(
+        distribute(edges, mesh), deg, 64, 0.85, "eager", "none"
+    )
+    out["pagerank"] = sess.program(step, mesh=mesh).build(
+        state0(jnp.full((64,), 1.0 / 64, jnp.float32))
+    ).render()
+
+    # -- kmeans: ONE [K, dim+2] op carries sums, counts AND inertia ----------
+    pts_v = distribute(np.zeros((256, 3), np.float32), mesh)
+    step, state0 = kmeans._program_step(pts_v, 4, 3, "eager", "none")
+    out["kmeans"] = sess.program(step, mesh=mesh).build(
+        state0(jnp.zeros((4, 3), jnp.float32))
+    ).render()
+
+    # -- gmm: 2 foreach + 4 dense ops; ll/Nk/Σwx batch into one psum ---------
+    rows_v = distribute(np.zeros((256, 5), np.float32), mesh)  # [x(2) | w(3)]
+    step, state0 = gmm._program_step(rows_v, 3, 2, 256, "eager")
+    out["gmm"] = sess.program(step, mesh=mesh).build(
+        state0(
+            np.full(3, 1 / 3, np.float32),
+            np.zeros((3, 2), np.float32),
+            np.tile(np.eye(2, dtype=np.float32), (3, 1, 1)),
+        )
+    ).render()
+
+    # -- wordcount: one hash-target node, table threaded through the loop ----
+    lines_v = distribute(np.zeros((32, 8), np.int32), mesh)
+    hm = make_dist_hashmap(mesh, 256, (), jnp.int32, "sum")
+    step, state = wordcount._program_step(lines_v, hm, 50, "pallas")
+    out["wordcount"] = sess.program(step, mesh=mesh).build(state).render()
+
+    # -- knn: container-level topk node; the engine request is surfaced ------
+    pts_v = distribute(np.zeros((256, 3), np.float32), mesh)
+    step = knn._program_step(pts_v, 8, "pallas")
+    state = {
+        "q": jnp.zeros((3,), jnp.float32),
+        "neighbors": jnp.zeros((8, 3), jnp.float32),
+        "scores": jnp.full((8,), -jnp.inf, jnp.float32),
+    }
+    out["knn"] = sess.program(step, mesh=mesh).build(state).render()
+
+    return out
+
+
+def main() -> int:
+    update = "--update" in sys.argv
+    plans = build_plans()
+    os.makedirs(GOLDEN_DIR, exist_ok=True)
+    failed = []
+    for name, text in sorted(plans.items()):
+        path = os.path.join(GOLDEN_DIR, f"explain_{name}.txt")
+        if update:
+            with open(path, "w") as f:
+                f.write(text + "\n")
+            print(f"wrote {path}")
+            continue
+        if not os.path.exists(path):
+            failed.append((name, "golden file missing — run with --update"))
+            continue
+        want = open(path).read().rstrip("\n")
+        if text != want:
+            import difflib
+
+            diff = "\n".join(difflib.unified_diff(
+                want.splitlines(), text.splitlines(),
+                fromfile=f"goldens/explain_{name}.txt", tofile="current",
+                lineterm="",
+            ))
+            failed.append((name, diff))
+    if failed:
+        for name, detail in failed:
+            print(f"\n== explain golden mismatch: {name} ==\n{detail}")
+        print(
+            f"\n{len(failed)} golden(s) out of date. If the plan change is "
+            "intentional: PYTHONPATH=src python tools/check_explain_goldens.py --update"
+        )
+        return 1
+    print(f"all {len(plans)} explain goldens match")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
