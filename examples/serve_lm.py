@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import get_arch
-from repro.launch.serve import generate
+from repro.launch.serve_lm import generate
 from repro.models import model as M
 
 for arch in ("qwen3-0.6b", "zamba2-7b", "rwkv6-1.6b"):

@@ -1095,6 +1095,37 @@ class Program:
         self._session.stats.program_compiles += 1
         return entry
 
+    @property
+    def plan_hash(self) -> str | None:
+        """Stable digest of the most recently built plan (``None`` before
+        the first build) — the cross-request cache identity the serving
+        layer keys on."""
+        return None if self.plan is None else self.plan.hash
+
+    def reset_carry(self) -> None:
+        """Reset per-shard carry state (error-feedback residuals and hash
+        tables) to pristine for every built signature, WITHOUT dropping
+        compiled executables.
+
+        Long-lived owners — notably the serving layer — call this between
+        logically independent queries that share one resident program, so
+        one query's accumulated hash-table contents or residuals cannot
+        leak into the next.  ``hash_result`` reflects only dispatches made
+        since the most recent reset.
+        """
+        for key, plan in self._plans.items():
+            self._residual_state[key] = tuple(
+                jnp.zeros((self._n_shards,) + shape, dtype)
+                for shape, dtype in plan.residual_specs
+            )
+            self._hash_state[key] = (
+                list(plan.hash_targets),
+                tuple(
+                    (hm.table.keys, hm.table.vals, hm.table.overflow)
+                    for hm in plan.hash_targets.values()
+                ),
+            )
+
     # -- run -----------------------------------------------------------------
 
     def __call__(self, state, n_iters: int = 1):

@@ -90,6 +90,11 @@ class BlazeSession:
         self._mesh = mesh
         self._exec_cache: dict = {}
         self.stats = SessionStats()
+        # Session state (exec cache, stats, program carries) is not safe to
+        # mutate from concurrent threads.  Multi-threaded front-ends — the
+        # serving layer's dispatcher, notably — serialize all session work
+        # under this lock; single-threaded drivers never need to take it.
+        self.lock = threading.RLock()
 
     @property
     def mesh(self) -> Mesh:

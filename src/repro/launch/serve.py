@@ -1,80 +1,114 @@
-"""Serving launcher: batched prefill + decode with KV/SSM caches.
+"""BlazeServe launcher: a long-lived multi-tenant query service.
 
-Laptop-scale real generation on a reduced config:
+Starts a :class:`~repro.serve.server.BlazeServer` with the three standard
+synthetic datasets registered (``edges``, ``lines``, ``points``) and serves
+the six built-in prepared queries over local HTTP until interrupted:
 
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b \\
-      --batch 4 --prompt-len 32 --gen 32
+  PYTHONPATH=src python -m repro.launch.serve --port 8787
+
+  curl -s localhost:8787/health
+  curl -s -X POST localhost:8787/query -d \\
+      '{"tenant": "alice", "query": "pagerank", "params": {"iters": 10}}'
+  curl -s localhost:8787/stats
+
+See ``examples/serve_queries.py`` for a multi-tenant Python client driving
+all six queries, and ``docs/architecture.md`` (Serving layer) for the
+admission → micro-batch → dispatch pipeline.
+
+Before PR 6 this module was the LM decode launcher; that now lives at
+``repro.launch.serve_lm`` and ``--arch`` invocations are forwarded there
+(with a deprecation note) so existing commands keep working.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
 
-import jax
-import jax.numpy as jnp
+# Backward-compat: ``from repro.launch.serve import generate`` predates the
+# PR 6 split and must keep working.
+from repro.launch.serve_lm import generate  # noqa: F401
 
-from repro.configs.base import get_arch
-from repro.models import model as M
-
-
-def generate(cfg, params, prompts, max_len: int, gen: int, *, greedy=True, seed=0):
-    b, plen = prompts.shape[0], prompts.shape[1]
-    caches = M.make_caches(cfg, b, max_len)
-    prefill = jax.jit(lambda p, x, c: M.prefill(p, cfg, x, c))
-    step = jax.jit(lambda p, x, c, n: M.decode_step(p, cfg, x, c, n))
-
-    logits, caches = prefill(params, prompts, caches)
-    out = []
-    key = jax.random.PRNGKey(seed)
-    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    t0 = time.perf_counter()
-    for i in range(gen):
-        out.append(tok)
-        logits, caches = step(params, tok, caches, plen + i)
-        if greedy:
-            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        else:
-            key, sub = jax.random.split(key)
-            tok = jax.random.categorical(sub, logits)[:, None].astype(jnp.int32)
-    dt = time.perf_counter() - t0
-    return jnp.concatenate(out, axis=1), dt
+__all__ = ["build_server", "generate", "main", "register_standard_datasets"]
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+def register_standard_datasets(server, *, scale: str = "smoke",
+                               seed: int = 0) -> None:
+    """Register the three synthetic datasets the built-in queries default
+    to: ``edges`` (R-MAT graph), ``lines`` (Zipf token corpus), ``points``
+    (Gaussian clusters)."""
+    from repro.data import synthetic as S
 
-    cfg = get_arch(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    key = jax.random.PRNGKey(args.seed)
-    params = M.init(key, cfg)
-    prompts = jax.random.randint(
-        key, (args.batch, args.prompt_len), 0, cfg.vocab, dtype=jnp.int32
+    if scale == "smoke":
+        graph_scale, n_lines, n_points, dim = 8, 512, 2048, 4
+    else:
+        graph_scale, n_lines, n_points, dim = 12, 8192, 1 << 15, 8
+    edges = S.rmat_edges(graph_scale, seed=seed)
+    lines, _true = S.zipf_corpus(n_lines, 16, 256, seed=seed)
+    points, _centers = S.cluster_points(n_points, dim, 8, seed=seed)
+    server.register_dataset("edges", edges, n_pages=2 ** graph_scale)
+    server.register_dataset("lines", lines, vocab_size=256)
+    server.register_dataset("points", points)
+
+
+def build_server(*, host: str = "127.0.0.1", port: int = 0,
+                 max_queue: int = 64, per_tenant: int = 8, max_batch: int = 8,
+                 scale: str = "smoke", seed: int = 0):
+    """A ready-to-start server with the standard datasets registered."""
+    from repro.serve import BlazeServer
+
+    server = BlazeServer(
+        host=host, port=port, max_queue=max_queue,
+        per_tenant_inflight=per_tenant, max_batch=max_batch,
     )
-    toks, dt = generate(
-        cfg, params, prompts, args.prompt_len + args.gen + 1, args.gen
-    )
-    print(
-        json.dumps(
-            {
-                "arch": cfg.name,
-                "generated_shape": list(toks.shape),
-                "decode_steps": args.gen,
-                "decode_s": dt,
-                "tok_per_s": args.batch * args.gen / dt,
-                "sample": toks[0, :16].tolist(),
-            },
-            indent=1,
+    register_standard_datasets(server, scale=scale, seed=seed)
+    return server
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else list(argv)
+    if any(a == "--arch" or a.startswith("--arch=") for a in argv):
+        print(
+            "note: the LM decode launcher moved to repro.launch.serve_lm; "
+            "forwarding (use `python -m repro.launch.serve_lm` directly).",
+            file=sys.stderr,
         )
+        from repro.launch import serve_lm
+
+        return serve_lm.main(argv)
+
+    ap = argparse.ArgumentParser(description="BlazeServe query service")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8787)
+    ap.add_argument("--max-queue", type=int, default=64)
+    ap.add_argument("--per-tenant", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--scale", choices=("smoke", "full"), default="smoke")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    server = build_server(
+        host=args.host, port=args.port, max_queue=args.max_queue,
+        per_tenant=args.per_tenant, max_batch=args.max_batch,
+        scale=args.scale, seed=args.seed,
     )
+    server.start()
+    print(json.dumps({
+        "serving": server.url,
+        "queries": server.queries,
+        "datasets": sorted(server.datasets),
+        "mesh_shards": server.mesh.shape.get("data", 1),
+    }))
+    sys.stdout.flush()
+    try:
+        while True:
+            time.sleep(1.0)
+    except KeyboardInterrupt:
+        pass
+    finally:
+        server.stop()
+        print(json.dumps(server.stats_snapshot(), default=str))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,85 @@
+"""LM serving launcher: batched prefill + decode with KV/SSM caches.
+
+Laptop-scale real generation on a reduced config:
+
+  PYTHONPATH=src python -m repro.launch.serve_lm --arch qwen3-0.6b \\
+      --batch 4 --prompt-len 32 --gen 32
+
+(Lived at ``repro.launch.serve`` before PR 6; that module is now the
+BlazeServe query-service entry point and forwards ``--arch`` invocations
+here.)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_arch
+from repro.models import model as M
+
+
+def generate(cfg, params, prompts, max_len: int, gen: int, *, greedy=True, seed=0):
+    b, plen = prompts.shape[0], prompts.shape[1]
+    caches = M.make_caches(cfg, b, max_len)
+    prefill = jax.jit(lambda p, x, c: M.prefill(p, cfg, x, c))
+    step = jax.jit(lambda p, x, c, n: M.decode_step(p, cfg, x, c, n))
+
+    logits, caches = prefill(params, prompts, caches)
+    out = []
+    key = jax.random.PRNGKey(seed)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    t0 = time.perf_counter()
+    for i in range(gen):
+        out.append(tok)
+        logits, caches = step(params, tok, caches, plen + i)
+        if greedy:
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        else:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, logits)[:, None].astype(jnp.int32)
+    dt = time.perf_counter() - t0
+    return jnp.concatenate(out, axis=1), dt
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    key = jax.random.PRNGKey(args.seed)
+    params = M.init(key, cfg)
+    prompts = jax.random.randint(
+        key, (args.batch, args.prompt_len), 0, cfg.vocab, dtype=jnp.int32
+    )
+    toks, dt = generate(
+        cfg, params, prompts, args.prompt_len + args.gen + 1, args.gen
+    )
+    print(
+        json.dumps(
+            {
+                "arch": cfg.name,
+                "generated_shape": list(toks.shape),
+                "decode_steps": args.gen,
+                "decode_s": dt,
+                "tok_per_s": args.batch * args.gen / dt,
+                "sample": toks[0, :16].tolist(),
+            },
+            indent=1,
+        )
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""BlazeServe: a long-lived multi-tenant query service over one resident
+:class:`~repro.core.session.BlazeSession`.
+
+The session/plan/program stack (PRs 1-5) made single-driver jobs fast; this
+package makes that investment *shared*: datasets stay device-resident,
+compiled programs are reused across requests and tenants (``plan_hash``
+keyed), and compatible concurrent queries micro-batch into one dispatch.
+
+Layered as::
+
+    client.py     BlazeClient / RemoteServeError      (wire, stdlib HTTP)
+    server.py     BlazeServer                         (accept + dispatch)
+    admission.py  AdmissionQueue + typed ServeErrors  (bounded, per-tenant)
+    batching.py   dedup_groups                        (micro-batch policy)
+    queries.py    QuerySpec / PreparedQuery           (prepared statements)
+    stats.py      ServerStats                         (/stats invariants)
+    codec.py      encode/decode_payload               (bit-faithful arrays)
+
+Entry point: ``python -m repro.launch.serve`` (see ``examples/serve_queries.py``
+for a multi-tenant client driving all six built-in algorithms).
+"""
+from repro.serve.admission import (
+    AdmissionQueue,
+    BadParamsError,
+    MalformedRequestError,
+    QueryExecutionError,
+    QueueFullError,
+    Request,
+    RequestTimeoutError,
+    ServeError,
+    ServerClosedError,
+    TenantLimitError,
+    UnknownDatasetError,
+    UnknownQueryError,
+)
+from repro.serve.client import BlazeClient, RemoteServeError
+from repro.serve.codec import decode_payload, encode_payload
+from repro.serve.queries import (
+    DatasetEntry,
+    PreparedQuery,
+    QuerySpec,
+    ServeResources,
+    builtin_specs,
+    run_direct,
+)
+from repro.serve.server import BlazeServer
+from repro.serve.stats import ServerStats
+
+__all__ = [
+    "AdmissionQueue",
+    "BadParamsError",
+    "BlazeClient",
+    "BlazeServer",
+    "DatasetEntry",
+    "MalformedRequestError",
+    "PreparedQuery",
+    "QueryExecutionError",
+    "QuerySpec",
+    "QueueFullError",
+    "RemoteServeError",
+    "Request",
+    "RequestTimeoutError",
+    "ServeError",
+    "ServeResources",
+    "ServerClosedError",
+    "ServerStats",
+    "TenantLimitError",
+    "UnknownDatasetError",
+    "UnknownQueryError",
+    "builtin_specs",
+    "decode_payload",
+    "encode_payload",
+    "run_direct",
+]

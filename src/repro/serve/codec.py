@@ -1,0 +1,72 @@
+"""Bit-faithful JSON payload codec for query results.
+
+JSON's only number is a double, and float32 results that round-trip through
+it can silently stop being bit-equal to the arrays the session produced —
+which would make the serving layer's core contract ("results bit-equal to
+direct ``session`` execution") untestable over the wire.  Arrays therefore
+travel as raw little-endian bytes, base64-encoded, with dtype and shape
+alongside::
+
+    {"__nd__": {"dtype": "float32", "shape": [64], "data": "<base64>"}}
+
+``encode_payload`` maps any pytree-ish result (dicts, lists/tuples, numpy /
+JAX arrays, numpy scalars, plain scalars) into JSON-safe structures;
+``decode_payload`` inverts it exactly (arrays come back as numpy).  Tuples
+become lists — JSON has no tuple — so servers should shape results as dicts
+of named fields.
+"""
+from __future__ import annotations
+
+import base64
+
+import numpy as np
+
+__all__ = ["decode_payload", "encode_payload"]
+
+
+def _encode_array(a: np.ndarray) -> dict:
+    a = np.ascontiguousarray(a)
+    if a.dtype.byteorder == ">":  # normalise to little-endian on the wire
+        a = a.astype(a.dtype.newbyteorder("<"))
+    return {
+        "__nd__": {
+            "dtype": a.dtype.name,
+            "shape": list(a.shape),
+            "data": base64.b64encode(a.tobytes()).decode("ascii"),
+        }
+    }
+
+
+def encode_payload(obj):
+    """Recursively JSON-encode a result payload, arrays as tagged bytes."""
+    if obj is None or isinstance(obj, (bool, int, str)):
+        return obj
+    if isinstance(obj, float):
+        return obj
+    if isinstance(obj, np.generic):  # numpy scalar -> python scalar
+        return obj.item()
+    if isinstance(obj, np.ndarray):
+        return _encode_array(obj)
+    if isinstance(obj, dict):
+        return {str(k): encode_payload(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [encode_payload(v) for v in obj]
+    # JAX arrays (and anything else array-like) go through numpy.
+    arr = np.asarray(obj)
+    if arr.ndim == 0:
+        return arr.item()
+    return _encode_array(arr)
+
+
+def decode_payload(obj):
+    """Invert :func:`encode_payload`; tagged arrays come back as numpy."""
+    if isinstance(obj, dict):
+        nd = obj.get("__nd__")
+        if nd is not None and set(nd) == {"dtype", "shape", "data"}:
+            raw = base64.b64decode(nd["data"])
+            a = np.frombuffer(raw, dtype=np.dtype(nd["dtype"]))
+            return a.reshape(nd["shape"]).copy()
+        return {k: decode_payload(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [decode_payload(v) for v in obj]
+    return obj

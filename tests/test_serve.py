@@ -1,0 +1,261 @@
+"""BlazeServe concurrency suite: plan-cache reuse, micro-batching,
+bit-equality with direct session execution, and bounded-queue behaviour.
+
+The acceptance workload (3 tenants x 20 mixed queries over pi / pagerank /
+wordcount) must compile exactly 3 programs — one per distinct plan — while
+coalescing compatible concurrent queries into micro-batched dispatches, and
+every served result must be bit-equal to running the same query directly
+against a fresh session.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.session import BlazeSession
+from repro.data import synthetic as S
+from repro.serve import (
+    BlazeClient,
+    BlazeServer,
+    QueueFullError,
+    RemoteServeError,
+    TenantLimitError,
+    run_direct,
+)
+
+VOCAB = 64
+
+
+def _register(server: BlazeServer) -> None:
+    edges = S.rmat_edges(6, seed=3)
+    lines, _ = S.zipf_corpus(128, 8, VOCAB, seed=3)
+    server.register_dataset("edges", edges, n_pages=64)
+    server.register_dataset("lines", lines, vocab_size=VOCAB)
+
+
+def _mixed_workload() -> list[tuple[str, dict]]:
+    """20 queries over 3 distinct plans (pi, pagerank, wordcount); pagerank
+    varies ``iters`` — same plan, different inputs — to exercise honest
+    coalescing, not just dedup."""
+    work: list[tuple[str, dict]] = []
+    for i in range(20):
+        kind = i % 3
+        if kind == 0:
+            work.append(("pi", {"n_samples": 2048, "iters": 1 + i % 2}))
+        elif kind == 1:
+            work.append(("pagerank", {"iters": 2 + i % 4}))
+        else:
+            work.append(("wordcount", {"iters": 1}))
+    return work
+
+
+@pytest.fixture()
+def server():
+    srv = BlazeServer(max_queue=256, per_tenant_inflight=64, max_batch=8)
+    _register(srv)
+    srv.start()
+    yield srv
+    srv.stop()
+
+
+def test_acceptance_three_tenants_twenty_queries(server):
+    """The PR's headline contract: 3 tenants x 20 queries, 3 plans ->
+    exactly 3 compiles, >= 1 micro-batched dispatch, bit-equal results."""
+    tenants = ("alice", "bob", "carol")
+    work = _mixed_workload()
+
+    server.pause_dispatch()  # let the backlog form so batches are real
+    reqs = [
+        (t, q, p, server.submit(t, q, p))
+        for t in tenants
+        for (q, p) in work
+    ]
+    assert server.queue_depth == len(tenants) * len(work)
+    server.resume_dispatch()
+    for _t, _q, _p, r in reqs:
+        assert r.done.wait(300), "request never completed"
+        assert r.error is None, f"unexpected failure: {r.error}"
+
+    # Exactly one compile per distinct plan — resubmissions and other
+    # tenants ride the resident programs.
+    assert server.stats.compiles == 3
+    assert server.session.stats.program_compiles == 3
+    assert server.stats.cache_hits + server.stats.compiles == \
+        server.stats.dispatched_plans
+    # Concurrent compatible queries really coalesced.
+    assert server.stats.batched_dispatches >= 1
+    assert server.stats.coalesced_queries >= 1
+    assert server.stats.completed == len(reqs)
+    assert server.stats.failed == 0
+
+    # Bit-equality: every distinct (query, params) matches a fresh direct
+    # session run of the same prepared query.
+    distinct = {(q, tuple(sorted(p.items()))): (q, p) for _t, q, p, _r in reqs}
+    for q, p in distinct.values():
+        direct = run_direct(
+            BlazeSession(), server.mesh, server.datasets, q, p
+        )
+        served = next(
+            r.result for _t, q2, p2, r in reqs if (q2, p2) == (q, p)
+        )
+        for key, want in direct.items():
+            got = served[key]
+            if isinstance(want, float):
+                assert got == want, (q, p, key)
+            else:
+                assert np.array_equal(np.asarray(got), np.asarray(want)), \
+                    (q, p, key)
+    # And every request with identical params got the identical payload.
+    for _t, q, p, r in reqs:
+        ref = next(
+            r2.result for _t2, q2, p2, r2 in reqs if (q2, p2) == (q, p)
+        )
+        for key in ref:
+            assert np.array_equal(
+                np.asarray(r.result[key]), np.asarray(ref[key])
+            )
+
+
+def test_http_concurrency_stress(server):
+    """N client threads x M queries over real HTTP: all succeed, compile
+    count == distinct plan count, per-thread results agree."""
+    n_threads, m_queries = 6, 5
+    work = _mixed_workload()[: m_queries]
+    results: dict[int, list] = {}
+    errors: list[Exception] = []
+
+    def worker(tid: int):
+        client = BlazeClient(server.url, tenant=f"t{tid % 3}")
+        out = []
+        try:
+            for q, p in work:
+                r, meta = client.query(q, p)
+                out.append((q, r, meta))
+        except Exception as e:  # noqa: BLE001 — surfaced via `errors`
+            errors.append(e)
+        results[tid] = out
+
+    threads = [
+        threading.Thread(target=worker, args=(i,)) for i in range(n_threads)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=300)
+    assert not errors, errors
+    assert all(len(results[i]) == len(work) for i in range(n_threads))
+
+    # compile count == number of distinct plans in the workload
+    distinct_plans = {q for q, _p in work}
+    assert server.stats.compiles == len(distinct_plans)
+    # identical queries agree bit-for-bit across threads
+    for j in range(len(work)):
+        _q, ref, _m = results[0][j]
+        for i in range(1, n_threads):
+            _q2, got, _m2 = results[i][j]
+            for key in ref:
+                assert np.array_equal(np.asarray(ref[key]),
+                                      np.asarray(got[key]))
+    snap = server.stats.snapshot()
+    assert snap["completed"] + snap["failed"] + snap["queued"] == \
+        snap["submitted"]
+
+
+def test_cached_resubmit_compiles_nothing(server):
+    _r1, meta1 = server.submit_and_wait("alice", "pagerank", {"iters": 3})
+    compiles = server.stats.compiles
+    _r2, meta2 = server.submit_and_wait("bob", "pagerank", {"iters": 7})
+    assert meta1["cache"] == "compile"
+    assert meta2["cache"] == "hit"
+    assert meta2["plan_hash"] == meta1["plan_hash"]
+    assert server.stats.compiles == compiles  # 0 new compiles
+
+
+def test_identical_concurrent_queries_dedup(server):
+    server.pause_dispatch()
+    reqs = [
+        server.submit(f"t{i}", "pi", {"n_samples": 1024, "iters": 1})
+        for i in range(4)
+    ]
+    server.resume_dispatch()
+    for r in reqs:
+        assert r.done.wait(120) and r.error is None
+    metas = [r.meta["cache"] for r in reqs]
+    assert metas.count("dedup") == 3, metas  # one execution served four
+    assert server.stats.dedup_hits >= 3
+    for r in reqs[1:]:
+        assert np.array_equal(r.result["counts"], reqs[0].result["counts"])
+
+
+def test_queue_saturation_returns_typed_error_fast():
+    srv = BlazeServer(max_queue=4, per_tenant_inflight=16, max_batch=4)
+    _register(srv)
+    srv.start()
+    try:
+        srv.pause_dispatch()
+        held = [
+            srv.submit("alice", "pi", {"n_samples": 512, "iters": 1 + i})
+            for i in range(4)
+        ]
+        t0 = time.perf_counter()
+        with pytest.raises(QueueFullError):
+            srv.submit("bob", "pi", {"n_samples": 512, "iters": 9})
+        assert time.perf_counter() - t0 < 1.0, "rejection must not hang"
+        # over HTTP the same overload is a typed 429, still bounded time
+        client = BlazeClient(srv.url, tenant="carol")
+        t0 = time.perf_counter()
+        with pytest.raises(RemoteServeError) as ei:
+            client.query("pi", {"n_samples": 512, "iters": 8})
+        assert ei.value.code == "QUEUE_FULL"
+        assert ei.value.status == 429
+        assert time.perf_counter() - t0 < 2.0
+        srv.resume_dispatch()
+        for r in held:
+            assert r.done.wait(120) and r.error is None
+        snap = srv.stats.snapshot()
+        assert snap["rejected_queue_full"] == 2
+        assert snap["completed"] + snap["failed"] + snap["queued"] == \
+            snap["submitted"]
+    finally:
+        srv.stop()
+
+
+def test_per_tenant_limit():
+    srv = BlazeServer(max_queue=64, per_tenant_inflight=2, max_batch=4)
+    _register(srv)
+    srv.start()
+    try:
+        srv.pause_dispatch()
+        held = [
+            srv.submit("alice", "pi", {"n_samples": 512, "iters": 1 + i})
+            for i in range(2)
+        ]
+        with pytest.raises(TenantLimitError):
+            srv.submit("alice", "pi", {"n_samples": 512, "iters": 9})
+        # another tenant is unaffected by alice's budget
+        other = srv.submit("bob", "pi", {"n_samples": 512, "iters": 1})
+        srv.resume_dispatch()
+        for r in held + [other]:
+            assert r.done.wait(120) and r.error is None
+        # budget released after completion: alice can submit again
+        _r, _m = srv.submit_and_wait("alice", "pi",
+                                     {"n_samples": 512, "iters": 1})
+    finally:
+        srv.stop()
+
+
+def test_stats_endpoint_shape(server):
+    server.submit_and_wait("alice", "pi", {"n_samples": 512, "iters": 1})
+    snap = BlazeClient(server.url).stats()
+    for key in (
+        "submitted", "queued", "completed", "failed", "dispatches",
+        "batched_dispatches", "coalesced_queries", "dedup_hits",
+        "dispatched_plans", "cache_hits", "compiles", "p50_ms", "p99_ms",
+        "throughput_qps", "pending_queue", "resident_programs", "session",
+    ):
+        assert key in snap, key
+    assert snap["p50_ms"] <= snap["p99_ms"]
+    assert snap["resident_programs"] >= 1
