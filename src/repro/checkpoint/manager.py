@@ -8,9 +8,15 @@ sharding, not a resharding pass.  Multi-host note: on a real cluster each
 process gathers only its addressable shards and process 0 owns the manifest;
 the layout below is that protocol collapsed to one process.
 
-Atomicity: write to ``step_N.tmp-<nonce>/`` then ``rename`` — a crash mid-save
-never corrupts the latest checkpoint; ``restore_latest`` skips unfinished
-directories.
+Atomicity: write to ``step_N.tmp-<nonce>/``, then commit with a rename-aside
+swap — ``rename(final, final.old-<nonce>)``; ``rename(tmp, final)``;
+``rmtree(old)`` — so at every crash point some COMPLETE checkpoint for the
+step exists on disk (the old one until the new one is in place).  The former
+``rmtree(final); rename(tmp, final)`` sequence had a window where a crash
+left neither.  ``_recover`` rolls an interrupted swap back (``.old-`` →
+final) on startup/restore; ``restore_latest`` skips unfinished ``.tmp-`` /
+``.old-`` directories and retries if a concurrent async-save ``_gc`` sweeps
+the step it just picked.
 """
 from __future__ import annotations
 
@@ -38,6 +44,11 @@ class CheckpointManager:
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
         self._pending: threading.Thread | None = None
+        # Serialises the commit swap, _gc, and _recover against each other
+        # (async save runs _write on a background thread while the training
+        # loop may call restore_latest).
+        self._io_lock = threading.Lock()
+        self._recover()
 
     # -- save ---------------------------------------------------------------
 
@@ -77,20 +88,57 @@ class CheckpointManager:
         }
         with open(os.path.join(tmp, _SENTINEL), "w") as f:
             json.dump(manifest, f)
-        if os.path.exists(final):
-            shutil.rmtree(final)
-        os.rename(tmp, final)
+        # Rename-aside swap: (1) move the previous checkpoint aside, (2) move
+        # the new one in, (3) delete the old.  A crash after (1) leaves the
+        # old checkpoint complete under ``.old-<nonce>`` (rolled back by
+        # _recover); a crash after (2) leaves the new one committed.  There
+        # is no instant at which neither exists.
+        old = None
+        with self._io_lock:
+            if os.path.exists(final):
+                old = f"{final}.old-{uuid.uuid4().hex[:8]}"
+                os.rename(final, old)
+            os.rename(tmp, final)
+            if old is not None:
+                shutil.rmtree(old, ignore_errors=True)
         self._gc()
         return final
 
+    def _recover(self):
+        """Roll back swaps interrupted between rename-aside and commit.
+
+        A complete ``step_N.old-<nonce>`` whose ``step_N`` is missing is the
+        previous checkpoint orphaned mid-swap: rename it back.  If the final
+        exists, the swap committed and the ``.old-`` dir is garbage.
+        """
+        with self._io_lock:
+            for name in os.listdir(self.dir):
+                if ".old-" not in name:
+                    continue
+                full = os.path.join(self.dir, name)
+                final = os.path.join(self.dir, name.split(".old-")[0])
+                if os.path.exists(final):
+                    shutil.rmtree(full, ignore_errors=True)
+                elif os.path.exists(os.path.join(full, _SENTINEL)):
+                    try:
+                        os.rename(full, final)
+                    except OSError:
+                        pass
+                else:
+                    shutil.rmtree(full, ignore_errors=True)
+
     def _gc(self):
-        steps = self.all_steps()
-        for s in steps[: -self.keep] if self.keep else []:
-            shutil.rmtree(self._path(s), ignore_errors=True)
-        # drop orphaned tmp dirs from crashed saves
-        for name in os.listdir(self.dir):
-            if ".tmp-" in name:
-                shutil.rmtree(os.path.join(self.dir, name), ignore_errors=True)
+        self._recover()
+        with self._io_lock:
+            steps = self.all_steps()
+            for s in steps[: -self.keep] if self.keep else []:
+                shutil.rmtree(self._path(s), ignore_errors=True)
+            # drop orphaned tmp dirs from crashed saves (.old- dirs are
+            # handled by _recover above — deleting them here could destroy
+            # the only complete copy of a step)
+            for name in os.listdir(self.dir):
+                if ".tmp-" in name:
+                    shutil.rmtree(os.path.join(self.dir, name), ignore_errors=True)
 
     # -- restore --------------------------------------------------------------
 
@@ -101,6 +149,7 @@ class CheckpointManager:
             if (
                 name.startswith("step_")
                 and ".tmp-" not in name
+                and ".old-" not in name
                 and os.path.exists(os.path.join(full, _SENTINEL))
             ):
                 out.append(int(name.split("_")[1]))
@@ -140,7 +189,70 @@ class CheckpointManager:
         return jax.tree_util.tree_unflatten(treedef, out)
 
     def restore_latest(self, like, shardings=None):
-        step = self.latest_step()
-        if step is None:
-            return None, None
-        return step, self.restore(step, like, shardings)
+        self._recover()
+        # Retry: a concurrent async-save _gc may sweep the step between our
+        # listing and our read — the next listing sees the newer step.
+        for _ in range(8):
+            step = self.latest_step()
+            if step is None:
+                # An unlocked listing can also race _gc (listdir saw only the
+                # step being swept, the manifest check then found it gone).
+                # Under _io_lock no swap/sweep is mid-flight, so an empty
+                # locked listing means genuinely no complete checkpoint.
+                with self._io_lock:
+                    step = self.latest_step()
+                if step is None:
+                    return None, None
+            try:
+                return step, self.restore(step, like, shardings)
+            except (FileNotFoundError, NotADirectoryError):
+                continue
+        raise RuntimeError(
+            f"restore_latest: checkpoints in {self.dir} kept disappearing "
+            "mid-read (gc churn?)"
+        )
+
+
+# ---------------------------------------------------------------------------
+# BlockStore: atomic byte-level block spill for out-of-core containers
+# ---------------------------------------------------------------------------
+
+
+class BlockStore:
+    """Crash-safe named byte blobs — the spill target for cold blocks of
+    ``repro.core.containers.ChunkedDistVector``.
+
+    Reuses the checkpoint commit idiom: write ``<name>.tmp-<nonce>`` then
+    atomically ``os.replace`` into place, so a crash mid-spill never leaves a
+    torn block and readers only ever see complete blobs.
+    """
+
+    def __init__(self, directory: str):
+        os.makedirs(directory, exist_ok=True)
+        self.dir = directory
+        self.bytes_written = 0
+
+    def _path(self, name: str) -> str:
+        return os.path.join(self.dir, f"{name}.blk")
+
+    def put(self, name: str, data: bytes) -> int:
+        final = self._path(name)
+        tmp = f"{final}.tmp-{uuid.uuid4().hex[:8]}"
+        with open(tmp, "wb") as f:
+            f.write(data)
+        os.replace(tmp, final)
+        self.bytes_written += len(data)
+        return len(data)
+
+    def get(self, name: str) -> bytes:
+        with open(self._path(name), "rb") as f:
+            return f.read()
+
+    def has(self, name: str) -> bool:
+        return os.path.exists(self._path(name))
+
+    def delete(self, name: str) -> None:
+        try:
+            os.remove(self._path(name))
+        except FileNotFoundError:
+            pass

@@ -24,6 +24,14 @@ centres comes from one extra dispatch of the same fused executable (its
 centre update is discarded): no per-op executable is ever built, so
 10-iteration program k-means reports 0 map_reduce compiles and
 ``⌈10/unroll⌉ + 1`` dispatches.
+
+``mode="stream"`` is the out-of-core variant: ``points`` is a
+``ChunkedDistVector`` and one k-means *iteration* becomes one *epoch* of
+``session.run_stream`` — each block dispatch accumulates its partial
+``[K, dim+2]`` sums into streamed state, and the refinement step fires only
+on the epoch's last block (``jnp.where`` on the block counter).  Still ONE
+program compile regardless of block count or iteration count; convergence is
+tested once per epoch.
 """
 from __future__ import annotations
 
@@ -33,7 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.core import DistVector, distribute
+from repro.core import ChunkedDistVector, DistVector, distribute
 from repro.core.session import BlazeSession, resolve
 
 
@@ -99,6 +107,51 @@ def _program_step(pts_v: DistVector, k: int, dim: int, engine: str, wire: str):
     return step, state0
 
 
+def _stream_step(pts_c: ChunkedDistVector, k: int, dim: int, engine: str,
+                 wire: str):
+    """(step_fn, state builder) for the out-of-core k-means epoch.
+
+    Each dispatch sees ONE resident block: its partial ``[K, dim+2]`` sums
+    accumulate into ``acc``; the serial refinement (centre update, move,
+    inertia) fires only on the epoch's last block, after which ``acc`` resets
+    and the block counter wraps — the accumulate/finalize-on-last-block
+    pattern that lets one executable serve every block of every epoch.
+    """
+    n_blocks = pts_c.n_blocks
+
+    def step(ctx, s):
+        c = s["centers"]
+        part = ctx.map_reduce(
+            pts_c, assign_inertia_mapper, "sum",
+            jnp.zeros((k, dim + 2), jnp.float32),
+            engine=engine, wire=wire, env=c,
+        )
+        acc = s["acc"] + part
+        last = s["blk"] == n_blocks - 1
+        counts = jnp.maximum(acc[:, dim:dim + 1], 1.0)
+        new_c = acc[:, :dim] / counts  # refinement — meaningful on last block
+        move = jnp.max(jnp.sum((new_c - c) ** 2, axis=1))
+        inertia = jnp.sum(acc[:, dim + 1])
+        return {
+            "centers": jnp.where(last, new_c, c),
+            "move": jnp.where(last, move, s["move"]),
+            "inertia": jnp.where(last, inertia, s["inertia"]),
+            "acc": jnp.where(last, jnp.zeros_like(acc), acc),
+            "blk": jnp.where(last, 0, s["blk"] + 1),
+        }
+
+    def state0(centers):
+        return {
+            "centers": centers,
+            "move": jnp.asarray(jnp.inf, jnp.float32),
+            "inertia": jnp.asarray(0.0, jnp.float32),
+            "acc": jnp.zeros((k, dim + 2), jnp.float32),
+            "blk": jnp.zeros((), jnp.int32),
+        }
+
+    return step, state0
+
+
 def kmeans(
     points: np.ndarray | DistVector,
     k: int,
@@ -114,10 +167,20 @@ def kmeans(
     seed: int = 0,
     session: BlazeSession | None = None,
 ) -> KMeansResult:
-    if mode not in ("per_op", "program"):
-        raise ValueError(f"unknown mode {mode!r}; choose 'per_op' or 'program'")
+    if mode not in ("per_op", "program", "stream"):
+        raise ValueError(
+            f"unknown mode {mode!r}; choose 'per_op', 'program' or 'stream'"
+        )
     sess, mesh = resolve(session, mesh)
-    if isinstance(points, DistVector):
+    if isinstance(points, ChunkedDistVector):
+        if mode == "program":
+            raise ValueError(
+                "chunked points need mode='stream' (the out-of-core program "
+                "loop) or mode='per_op'"
+            )
+        pts_v = points
+        dim = points.shape_tail[0]
+    elif isinstance(points, DistVector):
         pts_v = points
         dim = points.data.shape[1]
     else:
@@ -125,13 +188,49 @@ def kmeans(
         dim = points.shape[1]
     if init_centers is None:
         rng = np.random.RandomState(seed)
-        init_centers = np.asarray(pts_v.data)[
-            rng.choice(min(len(pts_v), 4096), k, replace=False)
-        ]
+        if isinstance(pts_v, ChunkedDistVector):
+            pool = pts_v.block_host(0)[: pts_v.block_true_rows(0)]
+            init_centers = pool[rng.choice(min(len(pool), 4096), k, replace=False)]
+        else:
+            init_centers = np.asarray(pts_v.data)[
+                rng.choice(min(len(pts_v), 4096), k, replace=False)
+            ]
     centers = jnp.asarray(init_centers, jnp.float32)
     compiles0 = sess.stats.compiles
     dispatches0 = sess.stats.dispatches
     syncs0 = sess.stats.host_syncs
+
+    if mode == "stream":
+        if not isinstance(pts_v, ChunkedDistVector):
+            raise ValueError(
+                "mode='stream' needs ChunkedDistVector points "
+                "(see session.chunked)"
+            )
+        step, state0 = _stream_step(pts_v, k, dim, engine, wire)
+        prog = sess.program(step, mesh=mesh)
+        state, info = sess.run_stream(
+            prog, state0(centers),
+            cond=lambda s: float(s["move"]) < tol * tol,
+            max_epochs=max_iters,
+        )
+        centers = state["centers"]
+        # Inertia w.r.t. the FINAL centres: one more epoch of the same
+        # executable — its refinement output is discarded, mirroring the
+        # in-memory program mode's probe dispatch.
+        probe, _ = sess.run_stream(prog, state, max_epochs=1)
+        inertia = float(np.asarray(sess.host_value(probe["inertia"])))
+        return KMeansResult(
+            centers=np.asarray(centers),
+            iterations=info.epochs,
+            converged=info.converged,
+            inertia=inertia,
+            shuffle_bytes_per_iter=0,
+            compiles=sess.stats.compiles - compiles0,
+            program_compiles=info.compiles,
+            dispatches=sess.stats.dispatches - dispatches0,
+            host_syncs=sess.stats.host_syncs - syncs0,
+            collectives_per_iter=prog.plan.collectives_per_iter,
+        )
 
     if mode == "program":
         step, state0 = _program_step(pts_v, k, dim, engine, wire)

@@ -26,6 +26,13 @@ Two execution modes:
   compile, ``≤ ⌈iters/unroll⌉`` dispatches and host syncs.  With
   ``wire="int8"`` the fused loop carries quantization error-feedback
   residuals across iterations, keeping the power iteration unbiased.
+* ``mode="stream"`` — the out-of-core variant: ``edges`` is a
+  ``ChunkedDistVector`` (graphs whose edge list exceeds device memory) and
+  one power iteration becomes one ``session.run_stream`` epoch.  Each block
+  dispatch accumulates its partial incoming-contribution vector; the score
+  update and convergence delta fire only on the epoch's last block.  Still 1
+  program compile regardless of block count; out-degrees are computed
+  host-side from the blocks before streaming starts.
 """
 from __future__ import annotations
 
@@ -35,7 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.core import DistRange, DistVector, distribute
+from repro.core import ChunkedDistVector, DistRange, DistVector, distribute
 from repro.core.session import BlazeSession, resolve
 
 
@@ -104,6 +111,56 @@ def _program_step(edges_v, deg, n_pages: int, damping: float, engine: str,
     return step, state0
 
 
+def _stream_step(edges_c: ChunkedDistVector, deg, n_pages: int,
+                 damping: float, engine: str, wire: str):
+    """(step_fn, state builder) for the out-of-core PageRank epoch.
+
+    Per block dispatch: MR2 over the resident edge block accumulates into
+    ``acc``; the sink sum (MR1), Eq. 1 update and delta test (MR3) are traced
+    every dispatch but only *committed* on the epoch's last block, where
+    ``acc`` holds the full incoming vector — the accumulate/finalize-on-
+    last-block pattern, one executable for every block of every epoch.
+    """
+    pages = DistRange(0, n_pages, 1)
+    d = damping
+    n_blocks = edges_c.n_blocks
+
+    def step(ctx, s):
+        sc = s["scores"]
+        part = ctx.map_reduce(
+            edges_c, contrib_mapper, "sum",
+            jnp.zeros((n_pages,), jnp.float32),
+            engine=engine, wire=wire, env=(sc, deg),
+        )
+        acc = s["acc"] + part
+        last = s["blk"] == n_blocks - 1
+        sink = ctx.map_reduce(
+            pages, sink_mapper, "sum", jnp.zeros((1,), jnp.float32),
+            engine=engine, env=(sc, deg),
+        )[0]
+        new = (1.0 - d) / n_pages + d * (acc + sink / n_pages)
+        delta = ctx.map_reduce(
+            pages, delta_mapper, "max", jnp.zeros((1,), jnp.float32),
+            engine=engine, env=(sc, new),
+        )[0]
+        return {
+            "scores": jnp.where(last, new, sc),
+            "delta": jnp.where(last, jnp.asarray(delta), s["delta"]),
+            "acc": jnp.where(last, jnp.zeros_like(s["acc"]), acc),
+            "blk": jnp.where(last, 0, s["blk"] + 1),
+        }
+
+    def state0(scores):
+        return {
+            "scores": scores,
+            "delta": jnp.asarray(jnp.inf, jnp.float32),
+            "acc": jnp.zeros((n_pages,), jnp.float32),
+            "blk": jnp.zeros((), jnp.int32),
+        }
+
+    return step, state0
+
+
 def pagerank(
     edges: np.ndarray,
     n_pages: int,
@@ -118,19 +175,62 @@ def pagerank(
     unroll: int = 1,
     session: BlazeSession | None = None,
 ) -> PageRankResult:
-    if mode not in ("per_op", "program"):
-        raise ValueError(f"unknown mode {mode!r}; choose 'per_op' or 'program'")
+    if mode not in ("per_op", "program", "stream"):
+        raise ValueError(
+            f"unknown mode {mode!r}; choose 'per_op', 'program' or 'stream'"
+        )
     sess, mesh = resolve(session, mesh)
-    edges_v = distribute(edges.astype(np.int32), mesh)
-    deg = jnp.asarray(
-        np.bincount(edges[:, 0], minlength=n_pages).astype(np.int32)
-    )
+    if isinstance(edges, ChunkedDistVector):
+        if mode == "program":
+            raise ValueError(
+                "chunked edges need mode='stream' (the out-of-core program "
+                "loop) or mode='per_op'"
+            )
+        edges_v = edges
+        # Out-degrees host-side, one block at a time — the edge list itself
+        # never needs to be resident.
+        deg_np = np.zeros((n_pages,), np.int64)
+        for b in range(edges.n_blocks):
+            blk = edges.block_host(b)[: edges.block_true_rows(b)]
+            deg_np += np.bincount(blk[:, 0], minlength=n_pages)
+        deg = jnp.asarray(deg_np.astype(np.int32))
+    else:
+        edges_v = distribute(edges.astype(np.int32), mesh)
+        deg = jnp.asarray(
+            np.bincount(edges[:, 0], minlength=n_pages).astype(np.int32)
+        )
     pages = DistRange(0, n_pages, 1)
     scores = jnp.full((n_pages,), 1.0 / n_pages, jnp.float32)
     d = damping
     compiles0 = sess.stats.compiles
     dispatches0 = sess.stats.dispatches
     syncs0 = sess.stats.host_syncs
+
+    if mode == "stream":
+        if not isinstance(edges_v, ChunkedDistVector):
+            raise ValueError(
+                "mode='stream' needs ChunkedDistVector edges "
+                "(see session.chunked)"
+            )
+        step, state0 = _stream_step(edges_v, deg, n_pages, d, engine, wire)
+        prog = sess.program(step, mesh=mesh)
+        state, info = sess.run_stream(
+            prog, state0(scores),
+            cond=lambda s: float(s["delta"]) < tol,
+            max_epochs=max_iters,
+        )
+        return PageRankResult(
+            scores=np.asarray(state["scores"]),
+            iterations=info.epochs,
+            converged=info.converged,
+            shuffle_bytes_per_iter=0,
+            pairs_shipped_per_iter=0,
+            compiles=sess.stats.compiles - compiles0,
+            program_compiles=info.compiles,
+            dispatches=sess.stats.dispatches - dispatches0,
+            host_syncs=sess.stats.host_syncs - syncs0,
+            collectives_per_iter=prog.plan.collectives_per_iter,
+        )
 
     if mode == "program":
         step, state0 = _program_step(edges_v, deg, n_pages, d, engine, wire)

@@ -21,6 +21,13 @@ Execution modes:
 The known vocabulary bound is passed as ``key_range`` so the shuffle ships
 narrowed keys and ``engine="pallas"`` sizes its combine table by distinct
 words, not emitted tokens.
+
+Out-of-core corpora: pass a ``ChunkedDistVector`` (``session.chunked``) as
+``lines`` and the count streams block-at-a-time — ``mode="per_op"`` loops the
+session's chunked dispatch, ``mode="program"`` drives ``run_stream`` so every
+block of every pass goes through ONE executable (``iters`` becomes epochs).
+``vocab_size`` is required for chunked input (the corpus is never resident to
+scan for a max token id).
 """
 from __future__ import annotations
 
@@ -31,6 +38,7 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.core import (
+    ChunkedDistVector,
     DistHashMap,
     distribute,
     make_dist_hashmap,
@@ -103,7 +111,17 @@ def wordcount(
     if mode not in ("per_op", "program"):
         raise ValueError(f"unknown mode {mode!r}; choose 'per_op' or 'program'")
     sess, mesh = resolve(session, mesh)
-    lines_v = distribute(lines, mesh)
+    is_chunked = isinstance(lines, ChunkedDistVector)
+    if is_chunked:
+        if vocab_size is None:
+            raise ValueError(
+                "chunked (out-of-core) wordcount needs an explicit vocab_size"
+            )
+        lines_v = lines
+        size = lines.n
+    else:
+        lines_v = distribute(lines, mesh)
+        size = lines.size
     if target == "dense":
         if mode == "program":
             raise ValueError(
@@ -112,7 +130,7 @@ def wordcount(
             )
         vocab = (
             vocab_size if vocab_size is not None
-            else (int(lines.max()) + 1 if lines.size else 1)
+            else (int(lines.max()) + 1 if size else 1)
         )
         counts = jnp.zeros((vocab,), jnp.int32)
         return sess.map_reduce(
@@ -126,7 +144,7 @@ def wordcount(
         )
     vocab_bound = (
         vocab_size if vocab_size is not None
-        else (int(lines.max()) + 1 if lines.size else 1)
+        else (int(lines.max()) + 1 if size else 1)
     )
     if capacity_per_shard is None:
         capacity_per_shard = max(64, 4 * vocab_bound)
@@ -138,6 +156,19 @@ def wordcount(
     if mode == "program":
         step, state = _program_step(lines_v, hm, vocab_bound, engine)
         prog = sess.program(step, mesh=mesh)
+        if is_chunked:
+            # Out-of-core: each epoch streams every block through the one
+            # fused executable; the hash table accumulates across dispatches
+            # exactly as it does across loop iterations.
+            state, info = sess.run_stream(prog, state, max_epochs=iters)
+            return WordCountResult(
+                counts=prog.hash_result(hm),
+                iterations=info.epochs,
+                compiles=sess.stats.compiles - compiles0,
+                program_compiles=info.compiles,
+                dispatches=sess.stats.dispatches - dispatches0,
+                host_syncs=sess.stats.host_syncs - syncs0,
+            )
         state, info = sess.run_loop(
             prog, state, max_iters=iters, unroll=unroll
         )

@@ -19,7 +19,8 @@ returns new containers.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+import zlib
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -79,23 +80,35 @@ def unique_combine(
 ) -> tuple[Array, Array, Array]:
     """Combine duplicate keys locally; returns same-length (keys, vals, valid).
 
-    Sorts by key, runs a segmented inclusive scan with the reducer's combine,
-    and keeps only the last element of each run.  Masked-out or duplicate
-    slots come back with ``key == EMPTY_KEY`` and ``valid == False``.  This is
-    the device-local *eager reduction* primitive: it is applied before any
-    bytes go on the wire.
+    Sorts live entries first (by key), runs a segmented inclusive scan with
+    the reducer's combine, and keeps only the last element of each run.
+    Masked-out or duplicate slots come back with ``key == EMPTY_KEY`` and
+    ``valid == False``.  This is the device-local *eager reduction*
+    primitive: it is applied before any bytes go on the wire.
+
+    The mask rides through the sort as its own lexsort column instead of
+    being encoded into the key: the old ``key := INT32_MAX if masked``
+    encoding conflated genuine ``INT32_MAX`` keys with masked-out slots
+    (folding garbage values into their run), and a genuine ``EMPTY_KEY``
+    key is now emitted with ``valid == True`` — ``valid``, not the key
+    value, is the liveness contract for downstream consumers.
     """
     n = keys.shape[0]
     if n == 0:
         return keys, vals, mask
-    # Push masked entries to the end by sorting on (masked, key).
-    sort_key = jnp.where(mask, keys, jnp.iinfo(jnp.int32).max)
-    order = jnp.argsort(sort_key)
-    skeys = jnp.take(sort_key, order)
+    # Live entries first (sorted by key), masked entries at the end.  The
+    # mask is a sort column, so no key VALUE can collide with the "masked"
+    # encoding.
+    order = jnp.lexsort((keys, ~mask))
+    skeys = jnp.take(keys, order)
     svals = jnp.take(vals, order, axis=0)
     smask = jnp.take(mask, order)
 
-    starts = jnp.concatenate([jnp.ones((1,), bool), skeys[1:] != skeys[:-1]])
+    # Segment boundaries: key change, live/masked transition, and every
+    # masked slot is its own segment (masked keys are unsorted garbage —
+    # never fold them together or into a live run).
+    newseg = (skeys[1:] != skeys[:-1]) | (smask[1:] != smask[:-1]) | ~smask[1:]
+    starts = jnp.concatenate([jnp.ones((1,), bool), newseg])
 
     def op(a, b):
         av, af = a
@@ -104,7 +117,7 @@ def unique_combine(
         return jnp.where(bcast, bv, reducer.combine(av, bv)), af | bf
 
     scanned, _ = jax.lax.associative_scan(op, (svals, starts), axis=0)
-    is_last = jnp.concatenate([skeys[1:] != skeys[:-1], jnp.ones((1,), bool)])
+    is_last = jnp.concatenate([newseg, jnp.ones((1,), bool)])
     valid = is_last & smask
     out_keys = jnp.where(valid, skeys, EMPTY_KEY)
     ident = reducer.identity(vals.dtype)
@@ -435,3 +448,270 @@ def topk(
     cand = cand.reshape((-1,) + cand.shape[2:])
     order = np.argsort(-s)[:k]
     return cand[order]
+
+
+# ---------------------------------------------------------------------------
+# Out-of-core: chunked shards as host-resident byte-provider blocks
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class BlockView:
+    """One device-resident block of a :class:`ChunkedDistVector`.
+
+    ``data`` is the block's rows, padded to ``block_rows`` and sharded on
+    axis 0 over ``data``; ``base`` is a *traced* int32 scalar holding the
+    block's global row offset (traced so every block reuses one compiled
+    executable); ``n`` is the TOTAL true row count of the parent dataset —
+    mappers see global indices and ``idx < n`` masks block padding exactly
+    like ``DistVector`` padding.
+    """
+
+    data: Array
+    base: Array
+    n: int = dataclasses.field(metadata=dict(static=True))
+
+    def __len__(self) -> int:
+        return self.n
+
+
+class HostBlockStore:
+    """Byte-provider for chunked shards: host blocks, optional zlib
+    compression, and LRU spill of cold blocks to disk.
+
+    Blocks are stored encoded (raw ``ndarray`` or zlib bytes).  With a
+    ``spill`` target (a ``repro.checkpoint.manager.BlockStore``) and a
+    ``max_resident`` bound, only the hottest ``max_resident`` blocks stay in
+    host memory; colder ones live on disk and are re-read on demand.  All
+    blocks share one (shape, dtype) so bytes decode without per-block
+    metadata.
+    """
+
+    def __init__(
+        self,
+        blocks: list[np.ndarray],
+        *,
+        compress: bool = False,
+        spill=None,
+        max_resident: int | None = None,
+    ):
+        if not blocks:
+            raise ValueError("HostBlockStore needs at least one block")
+        self.block_shape = blocks[0].shape
+        self.dtype = blocks[0].dtype
+        for b in blocks:
+            if b.shape != self.block_shape or b.dtype != self.dtype:
+                raise ValueError("all blocks must share one shape/dtype")
+        self.compress = compress
+        self.spill = spill
+        self.max_resident = max_resident
+        self.n_blocks = len(blocks)
+        # counters (read via ChunkedDistVector.stats())
+        self.loads_from_disk = 0
+        self.decompressions = 0
+        self.spill_bytes = 0
+        self.compressed_bytes = 0
+        self.raw_bytes = sum(int(b.nbytes) for b in blocks)
+        self._resident: dict[int, Any] = {}  # insertion order == LRU order
+        for i, b in enumerate(blocks):
+            self._admit(i, self._encode(b))
+
+    def _encode(self, arr: np.ndarray):
+        if self.compress:
+            payload = zlib.compress(np.ascontiguousarray(arr).tobytes(), 1)
+            self.compressed_bytes += len(payload)
+            return payload
+        return arr
+
+    def _payload_bytes(self, payload) -> bytes:
+        if isinstance(payload, bytes):
+            return payload
+        return np.ascontiguousarray(payload).tobytes()
+
+    def _admit(self, i: int, payload):
+        self._resident[i] = payload
+        if self.max_resident is None or self.spill is None:
+            return
+        while len(self._resident) > max(1, self.max_resident):
+            victim, vpayload = next(iter(self._resident.items()))
+            del self._resident[victim]
+            if not self.spill.has(f"block_{victim:06d}"):
+                self.spill_bytes += self.spill.put(
+                    f"block_{victim:06d}", self._payload_bytes(vpayload)
+                )
+
+    def get(self, i: int) -> np.ndarray:
+        """Block ``i`` as a host array (loading/decompressing as needed)."""
+        if i in self._resident:
+            payload = self._resident.pop(i)
+            self._resident[i] = payload  # refresh LRU position
+        else:
+            self.loads_from_disk += 1
+            raw = self.spill.get(f"block_{i:06d}")
+            payload = raw if self.compress else np.frombuffer(
+                raw, dtype=self.dtype
+            ).reshape(self.block_shape)
+            self._admit(i, payload)
+        if self.compress:
+            self.decompressions += 1
+            raw = zlib.decompress(self._payload_bytes(payload))
+            return np.frombuffer(raw, dtype=self.dtype).reshape(self.block_shape)
+        return payload
+
+    def stats(self) -> dict:
+        return {
+            "n_blocks": self.n_blocks,
+            "raw_bytes": self.raw_bytes,
+            "compressed_bytes": self.compressed_bytes if self.compress else 0,
+            "spill_bytes": self.spill_bytes,
+            "loads_from_disk": self.loads_from_disk,
+            "decompressions": self.decompressions,
+            "resident_blocks": len(self._resident),
+        }
+
+
+class ChunkedDistVector:
+    """Out-of-core ``DistVector``: shards are sequences of host blocks.
+
+    The device never holds more than one block at a time.  Streaming
+    consumers (``session.map_reduce`` with a chunked source, or
+    ``program.run_stream``) dispatch one compiled executable per block —
+    eager reduction *per block* — while the next block is prefetched on a
+    background thread (``repro.data.pipeline.prefetch_iter``).
+
+    Not a pytree: this is a host-side container.  ``block_view(b)`` yields
+    the pytree :class:`BlockView` that actually enters compiled code.
+    """
+
+    def __init__(
+        self,
+        provider: HostBlockStore,
+        n: int,
+        block_rows: int,
+        mesh: Mesh | None = None,
+    ):
+        self.provider = provider
+        self.n = n
+        self.block_rows = block_rows
+        self.mesh = mesh or data_mesh()
+        if block_rows % _nshards(self.mesh):
+            raise ValueError(
+                f"block_rows={block_rows} must be a multiple of "
+                f"{_nshards(self.mesh)} shards"
+            )
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def from_array(
+        cls,
+        x: np.ndarray,
+        block_rows: int,
+        mesh: Mesh | None = None,
+        *,
+        compress: bool = False,
+        spill_dir: str | None = None,
+        max_resident: int | None = None,
+    ) -> "ChunkedDistVector":
+        """Split a host array into blocks (pads block_rows to a shard
+        multiple and the last block with zeros)."""
+        mesh = mesh or data_mesh()
+        if block_rows <= 0:
+            raise ValueError(f"block_rows must be positive, got {block_rows}")
+        x = np.asarray(x)
+        n = x.shape[0]
+        shards = _nshards(mesh)
+        block_rows = max(shards, -(-block_rows // shards) * shards)
+        n_blocks = max(1, -(-n // block_rows))
+        blocks = []
+        for b in range(n_blocks):
+            blk = x[b * block_rows : (b + 1) * block_rows]
+            if blk.shape[0] < block_rows:
+                pad = np.zeros(
+                    (block_rows - blk.shape[0],) + x.shape[1:], x.dtype
+                )
+                blk = np.concatenate([blk, pad], axis=0)
+            blocks.append(np.ascontiguousarray(blk))
+        spill = None
+        if spill_dir is not None:
+            from repro.checkpoint.manager import BlockStore
+
+            spill = BlockStore(spill_dir)
+        provider = HostBlockStore(
+            blocks, compress=compress, spill=spill, max_resident=max_resident
+        )
+        return cls(provider, n, block_rows, mesh)
+
+    # -- geometry ------------------------------------------------------------
+
+    @property
+    def n_blocks(self) -> int:
+        return self.provider.n_blocks
+
+    @property
+    def shape_tail(self) -> tuple:
+        return tuple(self.provider.block_shape[1:])
+
+    @property
+    def dtype(self):
+        return self.provider.dtype
+
+    @property
+    def block_nbytes(self) -> int:
+        return int(
+            self.block_rows
+            * int(np.prod(self.shape_tail, dtype=np.int64) or 1)
+            * np.dtype(self.dtype).itemsize
+        )
+
+    def __len__(self) -> int:
+        return self.n
+
+    def block_true_rows(self, b: int) -> int:
+        return max(0, min(self.block_rows, self.n - b * self.block_rows))
+
+    # -- access --------------------------------------------------------------
+
+    def block_host(self, b: int) -> np.ndarray:
+        return self.provider.get(b)
+
+    def block_view(self, b: int, mesh: Mesh | None = None) -> BlockView:
+        """Transfer block ``b`` to the device(s), sharded over ``data``."""
+        mesh = mesh or self.mesh
+        data = jax.device_put(
+            self.block_host(b), NamedSharding(mesh, P(DATA_AXIS))
+        )
+        base = jnp.asarray(b * self.block_rows, jnp.int32)
+        return BlockView(data=data, base=base, n=self.n)
+
+    def collect(self) -> np.ndarray:
+        """Host materialisation (drops padding) — small datasets/tests."""
+        out = np.concatenate(
+            [self.block_host(b) for b in range(self.n_blocks)], axis=0
+        )
+        return out[: self.n]
+
+    def stats(self) -> dict:
+        return self.provider.stats()
+
+
+def chunked(
+    x: np.ndarray,
+    block_rows: int,
+    mesh: Mesh | None = None,
+    *,
+    compress: bool = False,
+    spill_dir: str | None = None,
+    max_resident: int | None = None,
+) -> ChunkedDistVector:
+    """Paper's ``distribute`` for datasets that don't fit on device: host
+    array → chunked blocks streamed one at a time (see ChunkedDistVector)."""
+    return ChunkedDistVector.from_array(
+        x,
+        block_rows,
+        mesh,
+        compress=compress,
+        spill_dir=spill_dir,
+        max_resident=max_resident,
+    )

@@ -3,7 +3,10 @@
 ``map_reduce(source, mapper, reducer, target)`` mirrors the paper's four-arg
 functional API:
 
-* **source** — ``DistRange`` | ``DistVector`` | ``DistHashMap``.
+* **source** — ``DistRange`` | ``DistVector`` | ``DistHashMap`` |
+  ``ChunkedDistVector`` (out-of-core: the session streams it one resident
+  block at a time through ONE cached executable, prefetching block k+1
+  while block k reduces — mappers still see global indices).
 * **mapper** — paper-style emit-handler function, traced under ``vmap``:
     - ``DistRange``:   ``mapper(value, emit)``            (+ ``env`` if given)
     - ``DistVector``:  ``mapper(index, value, emit)``     (+ ``env`` if given)
@@ -200,6 +203,15 @@ def _run_mapper_structured(
         idx = jnp.arange(per) + shard_idx * per
         elem_mask = idx < n_true
         entries = jax.vmap(trace)(idx, data)
+    elif source_kind == "chunked":
+        # One block of an out-of-core dataset: ``base`` (traced) shifts this
+        # shard's rows to their GLOBAL indices; ``idx < n_total`` masks both
+        # last-block padding and shard padding, exactly like "vector".
+        data, n_total, base = local
+        per = data.shape[0]
+        idx = base + jnp.arange(per) + shard_idx * per
+        elem_mask = idx < n_total
+        entries = jax.vmap(trace)(idx, data)
     elif source_kind == "hashmap":
         tkeys, tvals = local
         elem_mask = tkeys != C.EMPTY_KEY
@@ -369,6 +381,8 @@ def _source_kind(source) -> str:
         return "vector"
     if isinstance(source, C.DistHashMap):
         return "hashmap"
+    if isinstance(source, (C.ChunkedDistVector, C.BlockView)):
+        return "chunked"
     raise TypeError(f"unsupported source {type(source)}")
 
 
@@ -407,12 +421,20 @@ def map_reduce(
 
 
 def _source_operands(kind, source):
-    """(device operands, in_specs) for shard_map, per source kind."""
+    """(device operands, in_specs) for shard_map, per source kind.
+
+    For ``kind="chunked"`` the dispatch-time source is a ``BlockView``
+    (one resident block): data sharded over ``data`` plus the replicated
+    traced ``base`` offset — per-block values vary, abstract signature
+    doesn't, so every block reuses one executable.
+    """
     d = P(C.DATA_AXIS)
     if kind == "range":
         return (), ()
     if kind == "vector":
         return (source.data,), (d,)
+    if kind == "chunked":
+        return (source.data, source.base), (d, P())
     return (source.table.keys, source.table.vals), (d, d)
 
 
@@ -421,6 +443,8 @@ def _local_view(kind, source, operands):
         return None
     if kind == "vector":
         return (operands[0], source.n)
+    if kind == "chunked":
+        return (operands[0], source.n, operands[1])
     return (operands[0][0], operands[1][0])
 
 
@@ -577,7 +601,7 @@ def _map_reduce_dense(
     cache_key = (
         "dense", mapper, red.name, red, engine, wire, mesh, kind, with_stats,
         _abstract(_source_operands(kind, source)[0]),
-        getattr(source, "n", None) if kind == "vector" else
+        getattr(source, "n", None) if kind in ("vector", "chunked") else
         (source.start, source.stop, source.step) if kind == "range" else None,
         _abstract(target), _abstract(env),
     )
@@ -825,7 +849,7 @@ def _map_reduce_hash(
     cache_key = (
         "hash", mapper, red.name, red, engine, slack, mesh, kind, key_range,
         _abstract(_source_operands(kind, source)[0]),
-        getattr(source, "n", None) if kind == "vector" else
+        getattr(source, "n", None) if kind in ("vector", "chunked") else
         (source.start, source.stop, source.step) if kind == "range" else None,
         _abstract((target.table.keys, target.table.vals)), _abstract(env),
     )

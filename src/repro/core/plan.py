@@ -167,6 +167,13 @@ def source_desc(kind: str, source) -> str:
             f"vector {_dtype_name(d.dtype)}[{'x'.join(map(str, d.shape))}]"
             f" n={source.n}"
         )
+    if kind == "chunked":
+        tail = "x".join(map(str, getattr(source, "shape_tail", ())))
+        shape = f"{source.block_rows}{'x' + tail if tail else ''}"
+        return (
+            f"chunked {_dtype_name(source.dtype)}[{shape}]"
+            f" n={source.n} blocks={source.n_blocks}"
+        )
     t = source.table
     return (
         f"hashmap cap={t.keys.shape[-1]} "
@@ -355,6 +362,20 @@ class Plan:
             for s in self.sources:
                 mark = "  (pruned: no live consumer)" if s.pruned else ""
                 lines.append(f"  - {s.desc}{mark}")
+        stream = [
+            s for s in self.sources
+            if not s.pruned and s.desc.startswith("chunked ")
+        ]
+        if stream:
+            lines.append("stream schedule (out-of-core, one executable):")
+            for s in stream:
+                blocks = getattr(s.source, "n_blocks", "?")
+                rows = getattr(s.source, "block_rows", "?")
+                lines.append(
+                    f"  - {s.desc}: {blocks} block dispatches of {rows} rows"
+                    " each; block k+1 prefetched (host thread) while block k"
+                    " reduces on device"
+                )
         if self.groups:
             lines.append("batched collective groups:")
             for g, idxs in sorted(self.groups.items()):

@@ -101,6 +101,7 @@ __all__ = [
     "Program",
     "ProgramContext",
     "ProgramStats",
+    "StreamInfo",
 ]
 
 
@@ -153,6 +154,24 @@ class LoopInfo:
     compiles: int  # program executables built during this loop (0 or 1)
 
 
+@dataclasses.dataclass
+class StreamInfo:
+    """What one ``run_stream`` cost: the out-of-core streaming contract.
+
+    ``compiles`` must be ≤ 1 regardless of block count — every block goes
+    through the same executable (traced ``base`` offset, static shapes).
+    """
+
+    epochs: int  # full passes over the chunked source(s)
+    n_blocks: int  # blocks per epoch
+    dispatches: int  # block dispatches total (epochs x n_blocks)
+    host_syncs: int  # cond evaluations (one per completed epoch)
+    converged: bool  # cond() went True before max_epochs
+    compiles: int  # program executables built during this stream (0 or 1)
+    prefetch: bool  # double-buffered background transfer was on
+    bytes_streamed: int  # host->device block bytes moved across dispatches
+
+
 def _source_key(kind: str, source) -> tuple:
     """Stable identity for a source across the discovery and execution traces.
 
@@ -164,6 +183,10 @@ def _source_key(kind: str, source) -> tuple:
         return ("range", source.start, source.stop, source.step)
     if kind == "vector":
         return ("vector", id(source.data), source.n)
+    if kind == "chunked":
+        # Host container identity: blocks are streamed in per dispatch, so
+        # no backing device buffer exists to key on.
+        return ("chunked", id(source), source.n)
     return ("hashmap", id(source.table.keys), id(source.table.vals))
 
 
@@ -381,6 +404,16 @@ class ProgramContext:
                 return (
                     jnp.zeros((per,) + source.data.shape[1:], source.data.dtype),
                     source.n,
+                )
+            if kind == "chunked":
+                # Shape-faithful stand-in for ONE resident block: the
+                # executable only ever sees a block's worth of rows plus the
+                # traced base offset.
+                per = source.block_rows // self._n_shards
+                return (
+                    jnp.zeros((per,) + source.shape_tail, source.dtype),
+                    source.n,
+                    jnp.zeros((), jnp.int32),
                 )
             keys, vals = source.table.keys, source.table.vals
             return (
@@ -947,6 +980,10 @@ class Program:
         # (keys, vals, overflow) sharded arrays) — like residuals, hash
         # tables are per-shard state that outlives each dispatch
         self._hash_state: dict = {}
+        # state signature -> (stream-source key order, chunked containers):
+        # out-of-core sources whose (data, base) operands arrive per
+        # dispatch (run_stream) instead of being baked into the cache entry
+        self._stream_state: dict = {}
         self._last_sig = None  # signature of the most recent dispatch
         self.plan: Plan | None = None  # most recently built plan
         self.stats = ProgramStats()
@@ -1008,8 +1045,17 @@ class Program:
         specs: list = []
         source_keys: list[tuple] = []
         sizes: list[int] = []
+        stream_keys: list[tuple] = []
+        stream_sources: list = []
         for s in plan.live_sources():
             kind = _mr._source_kind(s.source)
+            if kind == "chunked":
+                # Out-of-core source: its (data, base) operands are supplied
+                # fresh per dispatch by run_stream — never baked into the
+                # cache entry like device-resident containers below.
+                stream_keys.append(s.key)
+                stream_sources.append(s.source)
+                continue
             ops, sp = _mr._source_operands(kind, s.source)
             operands.extend(ops)
             specs.extend(sp)
@@ -1018,19 +1064,23 @@ class Program:
         n_res = len(plan.residual_specs)
         hash_keys = list(plan.hash_targets)
         n_hash = len(hash_keys)
+        n_stream = len(stream_keys)
 
         def shard_body(state_, n_iters, *flat):
             # flat = per-op feedback residuals, then per-target hash tables
-            # (both sharded: each shard carries its own), then the live
-            # source operands.
+            # (both sharded: each shard carries its own), then (data, base)
+            # per streamed block source, then the live source operands.
             res_in = flat[:n_res]
             hash_in = flat[n_res:n_res + 3 * n_hash]
-            flat_ops = flat[n_res + 3 * n_hash:]
+            stream_in = flat[n_res + 3 * n_hash:n_res + 3 * n_hash + 2 * n_stream]
+            flat_ops = flat[n_res + 3 * n_hash + 2 * n_stream:]
             coll = _mr.RealCollectives(axis, n_shards)
             op_map, i = {}, 0
             for sk, k in zip(source_keys, sizes):
                 op_map[sk] = tuple(flat_ops[i:i + k])
                 i += k
+            for j, sk in enumerate(stream_keys):
+                op_map[sk] = (stream_in[2 * j], stream_in[2 * j + 1])
 
             def one_step(_, carry):
                 st, residuals, tables = carry
@@ -1068,10 +1118,16 @@ class Program:
             )
 
         d = P(C.DATA_AXIS)
+        stream_specs: tuple = ()
+        for _ in stream_keys:
+            stream_specs += (d, P())  # block rows sharded, base replicated
         fused = shard_map(
             shard_body,
             mesh=self._mesh,
-            in_specs=(P(), P()) + (d,) * (n_res + 3 * n_hash) + tuple(specs),
+            in_specs=(
+                (P(), P()) + (d,) * (n_res + 3 * n_hash)
+                + stream_specs + tuple(specs)
+            ),
             out_specs=(P(), d, d),
             check_vma=False,
         )
@@ -1089,6 +1145,7 @@ class Program:
                 for hm in plan.hash_targets.values()
             ),
         )
+        self._stream_state[key] = (tuple(stream_keys), tuple(stream_sources))
         entry = (jax.jit(fused), tuple(operands))
         self._cache[key] = entry
         self.stats.compiles += 1
@@ -1128,16 +1185,33 @@ class Program:
 
     # -- run -----------------------------------------------------------------
 
-    def __call__(self, state, n_iters: int = 1):
-        """One dispatch: ``n_iters`` fused iterations, device-resident."""
+    def __call__(self, state, n_iters: int = 1, *, stream_blocks=None):
+        """One dispatch: ``n_iters`` fused iterations, device-resident.
+
+        Programs reading chunked (out-of-core) sources take the resident
+        block per dispatch via ``stream_blocks`` — a dict mapping each
+        stream-source key to its ``(data, base)`` device operands.  Use
+        :meth:`run_stream` rather than passing this by hand.
+        """
         key = _mr._abstract(state)
         fn, operands = self._build(state)
         residuals = self._residual_state[key]
         hash_keys, hash_tuples = self._hash_state[key]
         flat_hash = [a for t in hash_tuples for a in t]
+        stream_keys, _stream_sources = self._stream_state[key]
+        if stream_keys and stream_blocks is None:
+            raise ValueError(
+                "program reads chunked (out-of-core) sources — drive it "
+                "with program.run_stream(...) / session.run_stream(...)"
+            )
+        flat_stream = (
+            [a for sk in stream_keys for a in stream_blocks[sk]]
+            if stream_keys
+            else []
+        )
         out, new_residuals, new_hash = fn(
             state, jnp.asarray(n_iters, jnp.int32), *residuals, *flat_hash,
-            *operands,
+            *flat_stream, *operands,
         )
         self._residual_state[key] = new_residuals
         self._hash_state[key] = (hash_keys, tuple(new_hash))
@@ -1147,6 +1221,87 @@ class Program:
         self._session.stats.dispatches += 1
         self._session.stats.program_dispatches += 1
         return out
+
+    def run_stream(
+        self,
+        state,
+        *,
+        max_epochs: int = 1,
+        cond: Callable | None = None,
+        prefetch: bool = True,
+        depth: int = 2,
+    ):
+        """Out-of-core epochs: stream every block through ONE executable.
+
+        One *epoch* dispatches the program once per block of its chunked
+        source(s), in order — the step function sees one resident block per
+        dispatch (global indices via the traced ``base`` offset) and carries
+        its accumulation in ``state`` / hash-table state.  ``prefetch=True``
+        produces block k+1 (disk read, decompress, host→device transfer) on
+        a background thread while block k reduces — double-buffered, depth
+        bounded by ``depth``.  ``prefetch=False`` is the synchronous
+        baseline: each dispatch is drained (``block_until_ready``) before
+        the next block is even read, i.e. zero compute/transfer overlap —
+        the A/B the streaming benchmark measures.
+
+        ``cond(state) -> bool`` is evaluated once per epoch (one host sync),
+        mirroring ``run_loop``.  Returns ``(state, StreamInfo)``.
+        """
+        from repro.data.pipeline import prefetch_iter
+
+        compiles0 = self.stats.compiles
+        self._build(state)
+        key = _mr._abstract(state)
+        stream_keys, stream_sources = self._stream_state[key]
+        if not stream_keys:
+            raise ValueError(
+                "program has no chunked sources — use run_loop/__call__"
+            )
+        counts = {src.n_blocks for src in stream_sources}
+        if len(counts) != 1:
+            raise ValueError(
+                f"chunked sources disagree on block count: {sorted(counts)}"
+            )
+        n_blocks = counts.pop()
+        mesh = self._mesh
+        bytes_per_block = sum(src.block_nbytes for src in stream_sources)
+
+        def produce(b):
+            views = {}
+            for sk, src in zip(stream_keys, stream_sources):
+                bv = src.block_view(b, mesh)
+                views[sk] = (bv.data, bv.base)
+            return views
+
+        epochs = blocks = syncs = 0
+        converged = False
+        for _ in range(max_epochs):
+            if prefetch:
+                it = prefetch_iter(produce, range(n_blocks), depth=depth)
+            else:
+                it = ((b, produce(b)) for b in range(n_blocks))
+            for _b, views in it:
+                state = self(state, 1, stream_blocks=views)
+                blocks += 1
+                if not prefetch:
+                    jax.block_until_ready(jax.tree_util.tree_leaves(state))
+            epochs += 1
+            if cond is not None:
+                self._session.stats.host_syncs += 1
+                syncs += 1
+                if bool(cond(state)):
+                    converged = True
+                    break
+        return state, StreamInfo(
+            epochs=epochs,
+            n_blocks=n_blocks,
+            dispatches=blocks,
+            host_syncs=syncs,
+            converged=converged,
+            compiles=self.stats.compiles - compiles0,
+            prefetch=prefetch,
+            bytes_streamed=blocks * bytes_per_block,
+        )
 
     def hash_result(self, target: C.DistHashMap) -> C.DistHashMap:
         """The accumulated state of a hash target used by this program.

@@ -150,6 +150,11 @@ class BlazeSession:
         )
         engine = node.engine
 
+        if isinstance(source, C.ChunkedDistVector):
+            return self._map_reduce_chunked(
+                source, mapper, red, target, mesh, n_shards, engine, wire,
+                env, shuffle_slack, key_range, node, return_stats,
+            )
         if isinstance(target, C.DistHashMap):
             out, stats = _mr._map_reduce_hash(
                 kind, source, mapper, red, target, mesh, n_shards, engine,
@@ -162,6 +167,72 @@ class BlazeSession:
                 n_shards, engine, wire, env, return_stats,
                 cache=self._exec_cache, node=node,
             )
+        self.stats.calls += 1
+        self.stats.compiles += stats.compiles
+        self.stats.cache_hits += stats.cache_hits
+        self.stats.dispatches += stats.dispatches
+        return (out, stats) if return_stats else out
+
+    def _map_reduce_chunked(
+        self, source, mapper, red, target, mesh, n_shards, engine, wire,
+        env, shuffle_slack, key_range, node, return_stats, prefetch=True,
+    ):
+        """Out-of-core standalone map_reduce: one dispatch per block.
+
+        Streams the chunked source block-at-a-time through ONE memoized
+        executable (the ``BlockView``'s traced ``base`` keeps the cache key
+        fixed across blocks), merging each block's locally-reduced result
+        into the running target — the paper's merged-into target semantics
+        make block accumulation free.  Block k+1 is prefetched (disk read /
+        decompress / host→device transfer on a background thread) while
+        block k reduces.
+        """
+        import dataclasses as _dc
+
+        from repro.data.pipeline import prefetch_iter
+
+        hash_target = isinstance(target, C.DistHashMap)
+        out = target if hash_target else jnp.asarray(target)
+        emitted = shipped = payload = 0
+        compiles = cache_hits = 0
+        last_stats = None
+
+        def produce(b):
+            return source.block_view(b, mesh)
+
+        blocks = (
+            prefetch_iter(produce, range(source.n_blocks), depth=2)
+            if prefetch
+            else ((b, produce(b)) for b in range(source.n_blocks))
+        )
+        for _b, bv in blocks:
+            if hash_target:
+                out, st = _mr._map_reduce_hash(
+                    "chunked", bv, mapper, red, out, mesh, n_shards, engine,
+                    shuffle_slack, env, key_range=key_range,
+                    cache=self._exec_cache, node=node,
+                )
+            else:
+                out, st = _mr._map_reduce_dense(
+                    "chunked", bv, mapper, red, out, mesh, n_shards, engine,
+                    wire, env, return_stats, cache=self._exec_cache,
+                    node=node,
+                )
+            emitted = emitted + st.pairs_emitted
+            shipped = shipped + st.pairs_shipped
+            payload = payload + st.shuffle_payload_bytes
+            compiles += st.compiles
+            cache_hits += st.cache_hits
+            last_stats = st
+        stats = _dc.replace(
+            last_stats,
+            pairs_emitted=emitted,
+            pairs_shipped=shipped,
+            shuffle_payload_bytes=payload,
+            compiles=compiles,
+            cache_hits=cache_hits,
+            dispatches=source.n_blocks,
+        )
         self.stats.calls += 1
         self.stats.compiles += stats.compiles
         self.stats.cache_hits += stats.cache_hits
@@ -248,6 +319,29 @@ class BlazeSession:
             compiles=program.stats.compiles - compiles0,
         )
 
+    def run_stream(
+        self,
+        program,
+        state,
+        *,
+        cond: Callable | None = None,
+        max_epochs: int = 1,
+        prefetch: bool = True,
+        depth: int = 2,
+    ):
+        """Drive a fused ``Program`` over its chunked (out-of-core) sources.
+
+        The ``run_loop`` analogue one level down the memory hierarchy: each
+        *epoch* streams every host-resident block through the program's ONE
+        executable (block k+1 prefetched while block k reduces), and
+        ``cond(state)`` is evaluated once per epoch.  Returns
+        ``(state, StreamInfo)``.
+        """
+        return program.run_stream(
+            state, max_epochs=max_epochs, cond=cond, prefetch=prefetch,
+            depth=depth,
+        )
+
     def host_value(self, x):
         """Materialise ``x`` on the host (the driver's explicit sync point),
         counting it in ``stats.host_syncs`` so per-op loops and fused
@@ -274,6 +368,14 @@ class BlazeSession:
     def distribute(self, x, mesh: Mesh | None = None) -> C.DistVector:
         """``distribute`` onto this session's mesh."""
         return C.distribute(x, mesh or self.mesh)
+
+    def chunked(
+        self, x, block_rows: int, mesh: Mesh | None = None, **kwargs
+    ) -> C.ChunkedDistVector:
+        """``distribute`` for datasets that don't fit on device: host array →
+        out-of-core blocks on this session's mesh (``compress=`` /
+        ``spill_dir=`` / ``max_resident=`` control the byte provider)."""
+        return C.chunked(x, block_rows, mesh or self.mesh, **kwargs)
 
     # -- observability -------------------------------------------------------
 

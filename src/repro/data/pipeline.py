@@ -14,13 +14,83 @@ from __future__ import annotations
 
 import queue
 import threading
-from typing import Iterator
+from typing import Callable, Iterable, Iterator
 
 import jax
 import numpy as np
 from jax.sharding import NamedSharding
 
 from repro.configs.base import ArchConfig
+
+_DONE = object()
+_PREFETCH_THREAD_NAME = "blaze-prefetch"
+
+
+class _PrefetchFailure:
+    """Error sentinel: carries a worker exception across the queue."""
+
+    __slots__ = ("exc",)
+
+    def __init__(self, exc: BaseException):
+        self.exc = exc
+
+
+def prefetch_iter(
+    produce: Callable, items: Iterable, depth: int = 2
+) -> Iterator[tuple]:
+    """Yield ``(item, produce(item))`` with bounded background production.
+
+    The double-buffering primitive shared by ``TokenPipeline.prefetch`` and
+    the out-of-core streaming loop (``core.program.Program.run_stream``): a
+    worker thread keeps up to ``depth`` results queued while the consumer
+    processes the current one.
+
+    Failure contract (both sides of the old prefetch hang):
+
+    * if ``produce`` raises, the exception is re-raised at the consumer's
+      next pull — the worker never dies silently leaving the consumer
+      blocked on an empty queue;
+    * if the consumer abandons the iterator early (``break``, ``close()``,
+      GC), a stop event unblocks the worker's bounded ``put`` so it exits
+      instead of blocking forever on a full queue.
+    """
+    q: queue.Queue = queue.Queue(maxsize=max(1, depth))
+    stop = threading.Event()
+
+    def _put(x) -> bool:
+        # Bounded put that gives up once the consumer has gone away.
+        while not stop.is_set():
+            try:
+                q.put(x, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def worker():
+        try:
+            for it in items:
+                if stop.is_set():
+                    return
+                if not _put((it, produce(it))):
+                    return
+            _put(_DONE)
+        except BaseException as e:  # noqa: BLE001 — must cross the thread
+            _put(_PrefetchFailure(e))
+
+    t = threading.Thread(target=worker, daemon=True, name=_PREFETCH_THREAD_NAME)
+    t.start()
+    try:
+        while True:
+            got = q.get()
+            if got is _DONE:
+                return
+            if isinstance(got, _PrefetchFailure):
+                raise got.exc
+            yield got
+    finally:
+        stop.set()
+        t.join(timeout=10.0)
 
 
 class TokenPipeline:
@@ -52,18 +122,11 @@ class TokenPipeline:
         return {k: jax.device_put(v, self.sharding) for k, v in hb.items()}
 
     def prefetch(self, start_step: int, n_steps: int, depth: int = 2) -> Iterator:
-        """Background-thread generation, bounded queue of ``depth`` batches."""
-        q: queue.Queue = queue.Queue(maxsize=depth)
+        """Background-thread generation, bounded queue of ``depth`` batches.
 
-        def worker():
-            for s in range(start_step, start_step + n_steps):
-                q.put((s, self.device_batch(s)))
-            q.put(None)
-
-        t = threading.Thread(target=worker, daemon=True)
-        t.start()
-        while True:
-            item = q.get()
-            if item is None:
-                return
-            yield item
+        Worker exceptions propagate to the consumer; abandoning the iterator
+        early shuts the worker down cleanly (see ``prefetch_iter``).
+        """
+        yield from prefetch_iter(
+            self.device_batch, range(start_step, start_step + n_steps), depth=depth
+        )

@@ -78,3 +78,160 @@ def test_elastic_restore_with_explicit_sharding():
         got = mgr.restore(1, t, shardings=sh)
         np.testing.assert_array_equal(np.asarray(got["w"]), np.asarray(t["w"]))
         assert got["w"].sharding == sh["w"]
+
+
+# -- crash injection: the commit swap never loses a complete checkpoint -------
+
+
+class _SimulatedCrash(RuntimeError):
+    pass
+
+
+def _crashing_rename(monkeypatch, crash_on_call: int):
+    """Patch ``os.rename`` so the ``crash_on_call``-th call inside the manager
+    raises — simulating death at that instant (later steps never run)."""
+    import repro.checkpoint.manager as M
+
+    real = os.rename
+    calls = {"n": 0}
+
+    def rename(src, dst):
+        calls["n"] += 1
+        if calls["n"] == crash_on_call:
+            raise _SimulatedCrash(f"died at rename #{calls['n']}")
+        return real(src, dst)
+
+    monkeypatch.setattr(M.os, "rename", rename)
+    return calls
+
+
+def test_crash_before_any_rename_keeps_previous(monkeypatch):
+    """Death between the tmp write and the first rename: the previous
+    checkpoint is untouched and the orphan tmp dir is skipped/cleaned."""
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        t = _tree()
+        mgr.save(1, t)
+        _crashing_rename(monkeypatch, crash_on_call=1)
+        with pytest.raises(_SimulatedCrash):
+            mgr.save(2, _tree(2))
+        monkeypatch.undo()
+        mgr2 = CheckpointManager(d)  # fresh process
+        step, got = mgr2.restore_latest(t)
+        assert step == 1
+        for x, y in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_crash_between_swap_renames_rolls_back(monkeypatch):
+    """Death after ``rename(final, .old-)`` but before ``rename(tmp, final)``:
+    recovery must roll the complete .old- copy back into place.  (The old
+    ``rmtree(final); rename(tmp)`` commit lost the checkpoint here.)"""
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        t = _tree()
+        mgr.save(1, t)  # overwritten below: same step, new payload
+        _crashing_rename(monkeypatch, crash_on_call=2)
+        with pytest.raises(_SimulatedCrash):
+            mgr.save(1, _tree(99))
+        monkeypatch.undo()
+        # mid-crash state: step_1 gone, step_1.old-* holds the only copy
+        assert any(".old-" in n for n in os.listdir(d))
+        mgr2 = CheckpointManager(d)  # fresh process runs _recover()
+        step, got = mgr2.restore_latest(t)
+        assert step == 1
+        for x, y in zip(jax.tree.leaves(_tree()), jax.tree.leaves(got)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        assert not any(".old-" in n for n in os.listdir(d))
+
+
+def test_crash_after_commit_drops_old_copy(monkeypatch):
+    """Death after ``rename(tmp, final)`` but before the old copy is deleted:
+    the NEW checkpoint wins and recovery garbage-collects the .old- dir."""
+    import shutil as _shutil
+
+    import repro.checkpoint.manager as M
+
+    real_rmtree = _shutil.rmtree
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        t = _tree()
+        mgr.save(1, t)
+
+        def boom(path, ignore_errors=False):
+            raise _SimulatedCrash("died before deleting the old copy")
+
+        monkeypatch.setattr(M.shutil, "rmtree", boom)
+        with pytest.raises(_SimulatedCrash):
+            mgr.save(1, _tree(99))
+        monkeypatch.setattr(M.shutil, "rmtree", real_rmtree)
+        assert any(".old-" in n for n in os.listdir(d))
+        mgr2 = CheckpointManager(d)
+        step, got = mgr2.restore_latest(t)
+        assert step == 1  # the new payload committed
+        for x, y in zip(jax.tree.leaves(_tree(99)), jax.tree.leaves(got)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        assert not any(".old-" in n for n in os.listdir(d))
+
+
+def test_restore_latest_skips_partial_dirs():
+    """``restore_latest`` never picks a .tmp-/.old-/manifest-less dir even
+    when its name sorts above every complete step."""
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        t = _tree()
+        mgr.save(3, t)
+        os.makedirs(os.path.join(d, "step_00000009.tmp-deadbeef"))
+        # torn dir with no manifest (crashed mid-write, pre-rename layout)
+        os.makedirs(os.path.join(d, "step_00000007"))
+        step, _ = mgr.restore_latest(t)
+        assert step == 3
+        assert mgr.all_steps() == [3]
+
+
+def test_concurrent_async_saves_and_restores():
+    """Async-save _gc churning old steps must never make restore_latest fail
+    or return a torn tree (the retry + _recover contract)."""
+    import threading
+
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=1)
+        t = _tree()
+        mgr.save(0, t)
+        errors = []
+
+        def writer():
+            try:
+                for s in range(1, 25):
+                    mgr.save(s, _tree(s), blocking=False)
+                    mgr.wait()
+            except Exception as e:  # pragma: no cover - failure path
+                errors.append(e)
+
+        wt = threading.Thread(target=writer)
+        wt.start()
+        try:
+            while wt.is_alive():
+                step, got = mgr.restore_latest(t)
+                assert step is not None
+                assert len(jax.tree.leaves(got)) == len(jax.tree.leaves(t))
+        finally:
+            wt.join()
+        assert not errors
+
+
+def test_blockstore_roundtrip_and_atomicity():
+    from repro.checkpoint.manager import BlockStore
+
+    with tempfile.TemporaryDirectory() as d:
+        bs = BlockStore(d)
+        bs.put("block_000001", b"abc" * 100)
+        assert bs.has("block_000001")
+        assert bs.get("block_000001") == b"abc" * 100
+        bs.put("block_000001", b"xyz")  # overwrite is atomic (os.replace)
+        assert bs.get("block_000001") == b"xyz"
+        assert bs.bytes_written == 303
+        assert not any(".tmp-" in n for n in os.listdir(d))
+        bs.delete("block_000001")
+        assert not bs.has("block_000001")
+        bs.delete("block_000001")  # idempotent

@@ -218,3 +218,67 @@ def test_emit_batch_with_mask():
 
     out = map_reduce(v, m, "sum", jnp.zeros((8,), jnp.int32))
     assert [int(x) for x in out[:4]] == [0, 1, 1, 1]
+
+
+# -- unique_combine sentinel boundaries ---------------------------------------
+# The sort used to push masked slots to INT32_MAX, conflating them with
+# genuine INT32_MAX keys and dropping genuine EMPTY_KEY keys; the mask now
+# rides through the sort (lexsort on (key, liveness)) so every int32 key is a
+# legal user key.
+
+INT32_MAX = np.iinfo(np.int32).max
+
+
+def _combine_oracle(keys, vals, mask):
+    want: dict = {}
+    for k, v, m in zip(keys, vals, mask):
+        if m:
+            want[int(k)] = want.get(int(k), 0.0) + float(v)
+    return want
+
+
+def _combine_got(keys, vals, mask):
+    red = get_reducer("sum")
+    k, v, valid = unique_combine(
+        jnp.asarray(keys, jnp.int32), jnp.asarray(vals, jnp.float32),
+        jnp.asarray(mask, bool), red,
+    )
+    return {int(a): float(b) for a, b, m in zip(k, v, valid) if m}
+
+
+@pytest.mark.parametrize(
+    "keys,mask",
+    [
+        # genuine INT32_MAX keys next to masked slots
+        ([INT32_MAX, 7, INT32_MAX, 7], [True, True, False, True]),
+        # genuine EMPTY_KEY (INT32_MIN) keys must come out valid
+        ([EMPTY_KEY, EMPTY_KEY, 3], [True, True, True]),
+        # masked slot whose key VALUE collides with a live key
+        ([5, 5, 5], [True, False, True]),
+        # all masked
+        ([1, 2, 3], [False, False, False]),
+        # masked INT32_MAX only — must produce nothing
+        ([INT32_MAX, 2], [False, True]),
+        # both sentinels live at once
+        ([EMPTY_KEY, INT32_MAX, EMPTY_KEY, INT32_MAX],
+         [True, True, True, False]),
+    ],
+)
+def test_unique_combine_boundary_keys_match_dict_oracle(keys, mask):
+    vals = [float(i + 1) for i in range(len(keys))]
+    assert _combine_got(keys, vals, mask) == _combine_oracle(keys, vals, mask)
+
+
+def test_unique_combine_boundary_fuzz():
+    rng = np.random.RandomState(11)
+    pool = np.asarray(
+        [EMPTY_KEY, EMPTY_KEY + 1, -1, 0, 1, INT32_MAX - 1, INT32_MAX],
+        np.int64,
+    )
+    for _ in range(25):
+        n = rng.randint(1, 64)
+        keys = pool[rng.randint(0, len(pool), n)]
+        vals = rng.randint(0, 100, n).astype(np.float64)  # exact in f32
+        mask = rng.rand(n) < 0.7
+        got = _combine_got(keys, vals, mask)
+        assert got == _combine_oracle(keys, vals, mask)

@@ -1,0 +1,117 @@
+"""Data-pipeline prefetch: both sides of the historical hang.
+
+The old implementation died silently when the worker raised (consumer blocked
+forever on ``q.get``) and wedged the worker when the consumer abandoned the
+iterator early (worker blocked forever on a full ``q.put``).  These are
+regression tests for ``prefetch_iter``'s failure contract.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch
+from repro.data.pipeline import (
+    _PREFETCH_THREAD_NAME,
+    TokenPipeline,
+    prefetch_iter,
+)
+
+
+def _live_prefetch_threads():
+    return [
+        t for t in threading.enumerate()
+        if t.name == _PREFETCH_THREAD_NAME and t.is_alive()
+    ]
+
+
+def _wait_no_prefetch_threads(timeout=5.0):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        if not _live_prefetch_threads():
+            return True
+        time.sleep(0.02)
+    return not _live_prefetch_threads()
+
+
+def test_prefetch_yields_all_items_in_order():
+    got = list(prefetch_iter(lambda i: i * i, range(20), depth=3))
+    assert got == [(i, i * i) for i in range(20)]
+    assert _wait_no_prefetch_threads()
+
+
+def test_prefetch_worker_exception_propagates():
+    """A producer crash must re-raise at the consumer — not leave it blocked
+    on an empty queue forever (the old silent-death hang)."""
+
+    def produce(i):
+        if i == 3:
+            raise ZeroDivisionError("synthetic producer crash")
+        return i * 2
+
+    got = []
+    with pytest.raises(ZeroDivisionError, match="synthetic producer crash"):
+        for item, val in prefetch_iter(produce, range(10), depth=2):
+            got.append(val)
+    # everything before the crash was delivered
+    assert got == [0, 2, 4]
+    assert _wait_no_prefetch_threads()
+
+
+def test_prefetch_exception_on_first_item():
+    def produce(i):
+        raise RuntimeError("dead on arrival")
+
+    with pytest.raises(RuntimeError, match="dead on arrival"):
+        list(prefetch_iter(produce, range(4)))
+    assert _wait_no_prefetch_threads()
+
+
+def test_prefetch_early_abandon_does_not_wedge_worker():
+    """Breaking out of the loop must unblock the worker's bounded ``put``
+    (the old consumer-abandonment hang left a thread spinning forever)."""
+    produced = []
+
+    def produce(i):
+        produced.append(i)
+        return i
+
+    it = prefetch_iter(produce, range(10_000), depth=2)
+    for item, _ in it:
+        if item >= 2:
+            break
+    it.close()  # runs the generator's finally: stop + join
+    assert _wait_no_prefetch_threads()
+    # worker stopped long before draining the 10k items
+    assert len(produced) < 100
+
+
+def test_prefetch_abandon_via_gc():
+    it = prefetch_iter(lambda i: i, range(10_000), depth=2)
+    next(it)
+    del it  # generator GC closes it -> finally -> stop/join
+    assert _wait_no_prefetch_threads()
+
+
+def test_token_pipeline_prefetch_matches_direct():
+    cfg = get_arch("qwen3-0.6b").reduced()
+    pipe = TokenPipeline(cfg, batch=2, seq_len=8, seed=3)
+    direct = [pipe.host_batch(s) for s in range(4)]
+    got = list(pipe.prefetch(0, 4))
+    assert [s for s, _ in got] == [0, 1, 2, 3]
+    for (s, b), ref in zip(got, direct):
+        np.testing.assert_array_equal(np.asarray(b["inputs"]), ref["inputs"])
+        np.testing.assert_array_equal(np.asarray(b["labels"]), ref["labels"])
+    assert _wait_no_prefetch_threads()
+
+
+def test_prefetch_deterministic_across_restart():
+    cfg = get_arch("qwen3-0.6b").reduced()
+    a = TokenPipeline(cfg, batch=2, seq_len=8, seed=7)
+    b = TokenPipeline(cfg, batch=2, seq_len=8, seed=7)
+    for (sa, ba), (sb, bb) in zip(a.prefetch(5, 3), b.prefetch(5, 3)):
+        assert sa == sb
+        np.testing.assert_array_equal(
+            np.asarray(ba["inputs"]), np.asarray(bb["inputs"])
+        )

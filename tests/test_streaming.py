@@ -1,0 +1,308 @@
+"""Out-of-core chunked datasets + double-buffered streaming execution.
+
+The contract under test: a dataset larger than one resident block, streamed
+block-at-a-time through ONE compiled executable, produces bit-identical
+results to the in-memory path — for standalone map_reduce, for fused
+programs driven by ``run_stream``, and for the wordcount / k-means /
+PageRank drivers.  (K-means inertia is the one allclose exception: the
+min-d² float sums reassociate across blocks.)
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (
+    BlazeSession,
+    ChunkedDistVector,
+    chunked,
+    make_dist_hashmap,
+)
+from repro.core.algorithms.kmeans import kmeans
+from repro.core.algorithms.pagerank import pagerank, pagerank_reference
+from repro.core.algorithms.wordcount import counts_dict, wordcount
+
+
+def _sq_mapper(i, x, emit):
+    emit(i % 7, x * x)
+
+
+def _mod_mapper(i, x, emit):
+    emit(x.astype(jnp.int32) % 11, 1)
+
+
+# -- container ----------------------------------------------------------------
+
+
+def test_chunked_roundtrip_and_padding():
+    sess = BlazeSession()
+    x = np.arange(1003, dtype=np.float32)  # deliberately not a block multiple
+    cv = sess.chunked(x, block_rows=256)
+    assert isinstance(cv, ChunkedDistVector)
+    assert cv.n == 1003
+    assert cv.n_blocks == 4
+    np.testing.assert_array_equal(cv.collect(), x)
+    # last block is padded to the block shape but reports its true rows
+    assert cv.block_true_rows(3) == 1003 - 3 * 256
+    assert cv.block_host(3).shape[0] == 256
+
+
+def test_chunked_compress_and_spill_lru():
+    sess = BlazeSession()
+    x = np.arange(5 * 64, dtype=np.float32)
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as d:
+        cv = sess.chunked(
+            x, block_rows=64, compress=True, spill_dir=d, max_resident=2
+        )
+        assert cv.n_blocks == 5
+        np.testing.assert_array_equal(cv.collect(), x)
+        st = cv.stats()
+        assert st["spill_bytes"] > 0  # LRU evicted past max_resident=2
+        assert st["resident_blocks"] <= 2
+        # spilled blocks reload transparently (and bit-exactly)
+        np.testing.assert_array_equal(cv.collect(), x)
+
+
+def test_chunked_rejects_bad_block_rows():
+    sess = BlazeSession()
+    with pytest.raises(ValueError):
+        sess.chunked(np.arange(8, dtype=np.float32), block_rows=0)
+
+
+# -- standalone map_reduce over chunked sources -------------------------------
+
+
+def test_chunked_map_reduce_dense_bit_equal_one_compile():
+    sess = BlazeSession()
+    # integer-valued with bounded sums: every partial is exact in f32, so
+    # block reassociation cannot perturb the result
+    x = (np.arange(1000) % 57).astype(np.float32)
+    ref = sess.map_reduce(
+        sess.distribute(x), _sq_mapper, "sum", jnp.zeros((7,), jnp.float32)
+    )
+    cv = sess.chunked(x, block_rows=128)  # 8 blocks
+    c0 = sess.stats.compiles
+    got, stats = sess.map_reduce(
+        cv, _sq_mapper, "sum", jnp.zeros((7,), jnp.float32),
+        return_stats=True,
+    )
+    fs = stats.finalize()
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+    # ONE executable serves all 8 blocks (traced base offset)
+    assert sess.stats.compiles - c0 == 1
+    assert fs.dispatches == cv.n_blocks
+
+
+def test_chunked_map_reduce_hash_target_equal():
+    sess = BlazeSession()
+    x = np.arange(500, dtype=np.float32)
+    hm_ref = make_dist_hashmap(sess.mesh, 256, (), jnp.int32, "sum")
+    hm_ref = sess.map_reduce(sess.distribute(x), _mod_mapper, "sum", hm_ref)
+    cv = sess.chunked(x, block_rows=64)
+    hm = make_dist_hashmap(sess.mesh, 256, (), jnp.int32, "sum")
+    hm = sess.map_reduce(cv, _mod_mapper, "sum", hm, key_range=11)
+    assert hm.to_dict() == hm_ref.to_dict()
+
+
+# -- fused programs: run_stream ----------------------------------------------
+
+
+def _stream_sum_program(sess, cv, n_blocks):
+    def step(ctx, s):
+        part = ctx.map_reduce(
+            cv, _sq_mapper, "sum", jnp.zeros((7,), jnp.float32)
+        )
+        acc = s["acc"] + part
+        last = s["blk"] == n_blocks - 1
+        return {
+            "acc": jnp.where(last, jnp.zeros_like(s["acc"]), acc),
+            "out": jnp.where(last, acc, s["out"]),
+            "blk": jnp.where(last, 0, s["blk"] + 1),
+        }
+
+    state = {
+        "acc": jnp.zeros((7,), jnp.float32),
+        "out": jnp.zeros((7,), jnp.float32),
+        "blk": jnp.zeros((), jnp.int32),
+    }
+    return sess.program(step), state
+
+
+@pytest.mark.parametrize("prefetch", [True, False])
+def test_run_stream_bit_equal_and_single_compile(prefetch):
+    sess = BlazeSession()
+    x = (np.arange(1003) % 57).astype(np.float32)  # exact f32 sums
+    ref = sess.map_reduce(
+        sess.distribute(x), _sq_mapper, "sum", jnp.zeros((7,), jnp.float32)
+    )
+    cv = sess.chunked(x, block_rows=256)
+    prog, state = _stream_sum_program(sess, cv, cv.n_blocks)
+    state, info = sess.run_stream(prog, state, prefetch=prefetch)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(state["out"]))
+    assert info.compiles == 1
+    assert info.epochs == 1
+    assert info.n_blocks == cv.n_blocks == 4
+    assert info.dispatches == 4
+    assert info.prefetch is prefetch
+    assert info.bytes_streamed > 0
+    # second epoch pass reuses the executable: zero new compiles
+    state, info2 = sess.run_stream(prog, state, prefetch=prefetch)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(state["out"]))
+    assert info2.compiles == 0
+
+
+def test_run_stream_block_count_invariant_compiles():
+    """1 program compile regardless of how many blocks the dataset splits
+    into — the acceptance bar for the streaming mode."""
+    sess = BlazeSession()
+    x = (np.arange(1024) % 57).astype(np.float32)
+    for rows, expect_blocks in ((512, 2), (128, 8)):
+        cv = sess.chunked(x, block_rows=rows)
+        prog, state = _stream_sum_program(sess, cv, cv.n_blocks)
+        c0 = sess.stats.program_compiles
+        state, info = sess.run_stream(prog, state)
+        assert cv.n_blocks == expect_blocks
+        assert info.compiles == 1
+        assert sess.stats.program_compiles - c0 == 1
+
+
+def test_run_stream_spilled_blocks():
+    import tempfile
+
+    sess = BlazeSession()
+    x = (np.arange(1024) % 57).astype(np.float32)
+    ref = sess.map_reduce(
+        sess.distribute(x), _sq_mapper, "sum", jnp.zeros((7,), jnp.float32)
+    )
+    with tempfile.TemporaryDirectory() as d:
+        cv = sess.chunked(
+            x, block_rows=128, compress=True, spill_dir=d, max_resident=2
+        )
+        prog, state = _stream_sum_program(sess, cv, cv.n_blocks)
+        state, info = sess.run_stream(prog, state)
+        np.testing.assert_array_equal(
+            np.asarray(ref), np.asarray(state["out"])
+        )
+        assert cv.stats()["spill_bytes"] > 0
+
+
+def test_program_call_without_blocks_raises():
+    sess = BlazeSession()
+    cv = sess.chunked(np.arange(64, dtype=np.float32), block_rows=32)
+    prog, state = _stream_sum_program(sess, cv, cv.n_blocks)
+    with pytest.raises(ValueError, match="stream"):
+        prog(state, 1)
+
+
+def test_run_stream_without_chunked_sources_raises():
+    sess = BlazeSession()
+    v = sess.distribute(np.arange(64, dtype=np.float32))
+
+    def step(ctx, s):
+        out = ctx.map_reduce(
+            v, _sq_mapper, "sum", jnp.zeros((7,), jnp.float32)
+        )
+        return {"out": out + 0.0 * s["out"]}
+
+    prog = sess.program(step)
+    with pytest.raises(ValueError, match="no chunked"):
+        sess.run_stream(prog, {"out": jnp.zeros((7,), jnp.float32)})
+
+
+def test_explain_shows_stream_schedule():
+    sess = BlazeSession()
+    cv = sess.chunked(np.arange(1003, dtype=np.float32), block_rows=256)
+    prog, state = _stream_sum_program(sess, cv, cv.n_blocks)
+    txt = sess.explain(prog, state)
+    assert "chunked float32[256] n=1003 blocks=4" in txt
+    assert "stream schedule" in txt
+
+
+# -- algorithm drivers over chunked sources -----------------------------------
+
+
+def test_wordcount_streaming_bit_equal():
+    rng = np.random.RandomState(0)
+    lines = rng.randint(0, 40, size=(600, 8)).astype(np.int32)
+    lines[rng.rand(*lines.shape) < 0.25] = -1
+    sess = BlazeSession()
+    ref = counts_dict(wordcount(lines, session=sess, vocab_size=40))
+    cv = sess.chunked(lines, block_rows=128)  # 5 blocks
+    # fused program mode: every block of every pass through ONE executable
+    res = wordcount(cv, session=sess, vocab_size=40, mode="program")
+    assert counts_dict(res.counts) == ref
+    assert res.program_compiles == 1
+    # per_op mode: the session's chunked block loop
+    hm = wordcount(cv, session=sess, vocab_size=40)
+    assert counts_dict(hm) == ref
+
+
+def test_wordcount_chunked_requires_vocab_size():
+    sess = BlazeSession()
+    cv = sess.chunked(np.zeros((8, 4), np.int32), block_rows=4)
+    with pytest.raises(ValueError, match="vocab_size"):
+        wordcount(cv, session=sess)
+
+
+def test_kmeans_streaming_centers_bit_equal():
+    rng = np.random.RandomState(1)
+    # integer-valued f32 coords: per-centre sums are exact, so the streamed
+    # reassociation across blocks cannot change the centres
+    pts = rng.randint(-20, 20, size=(900, 4)).astype(np.float32)
+    init = pts[:5].copy()
+    sess = BlazeSession()
+    ref = kmeans(pts, 5, init_centers=init, max_iters=6, session=sess)
+    cv = sess.chunked(pts, block_rows=256)  # 4 blocks
+    got = kmeans(
+        cv, 5, init_centers=init, max_iters=6, mode="stream", session=sess
+    )
+    np.testing.assert_array_equal(ref.centers, got.centers)
+    assert ref.iterations == got.iterations
+    assert ref.converged == got.converged
+    # inertia: float min-d2 sums reassociate across blocks -> allclose only
+    np.testing.assert_allclose(ref.inertia, got.inertia, rtol=1e-5)
+    assert got.program_compiles == 1
+
+
+def test_kmeans_chunked_program_mode_rejected():
+    sess = BlazeSession()
+    cv = sess.chunked(np.zeros((64, 2), np.float32), block_rows=32)
+    with pytest.raises(ValueError, match="stream"):
+        kmeans(cv, 2, mode="program", session=sess)
+
+
+def test_pagerank_streaming_bit_equal():
+    # chain graph: in-degree <= 1, so each page's incoming sum has exactly one
+    # non-zero contribution -> block accumulation is exact, and the tail page
+    # is a sink so the sink term is exercised too.  The bit-equality baseline
+    # is the in-memory fused program (same jitted update arithmetic); per_op
+    # computes the update eagerly, so it only agrees to float tolerance.
+    n = 48
+    edges = np.stack([np.arange(n - 1), np.arange(1, n)], 1).astype(np.int32)
+    sess = BlazeSession()
+    ref = pagerank(edges, n, max_iters=15, mode="program", session=sess)
+    cv = sess.chunked(edges, block_rows=16)  # 3 blocks
+    got = pagerank(cv, n, max_iters=15, mode="stream", session=sess)
+    np.testing.assert_array_equal(ref.scores, got.scores)
+    assert ref.iterations == got.iterations
+    assert ref.converged == got.converged
+    assert got.program_compiles == 1
+    per_op = pagerank(edges, n, max_iters=15, session=sess)
+    np.testing.assert_allclose(got.scores, per_op.scores, atol=1e-7)
+    np.testing.assert_allclose(
+        got.scores, pagerank_reference(edges, n, max_iters=15), atol=1e-5
+    )
+
+
+def test_pagerank_streaming_degrees_from_blocks():
+    """Out-degrees are computed host-side block-at-a-time: padding rows in
+    the final block must not leak edges into the degree vector."""
+    n = 10
+    edges = np.asarray([[0, 1], [0, 2], [3, 4]], np.int32)  # deg[0]=2
+    sess = BlazeSession()
+    cv = sess.chunked(edges, block_rows=2)  # last block padded
+    got = pagerank(cv, n, max_iters=8, mode="stream", session=sess)
+    ref = pagerank(edges, n, max_iters=8, mode="program", session=sess)
+    np.testing.assert_array_equal(ref.scores, got.scores)
