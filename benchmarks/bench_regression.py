@@ -1,0 +1,294 @@
+"""Cross-PR benchmark regression harness (writes ``results/BENCH_8.json``).
+
+Runs the paper's six algorithms at a PINNED smoke scale — the sizes below
+are part of the cross-PR contract and must not change, or walls stop being
+comparable across ``results/BENCH_*.json`` files — then:
+
+1. records one warm wall per algorithm (compile excluded: the timed run is
+   the second dispatch through one resident session),
+2. measures tuned-vs-static walls for the two autotunable program drivers
+   (k-means dense, word-count hash) and asserts the tuner measured each op
+   exactly once and that tuned results are bit-equal to static results,
+3. compares every ``regression.<alg>.wall_s`` against the BEST prior value
+   for the same metric across all existing ``results/BENCH_*.json`` files
+   and exits non-zero when ``current > best * (1 + threshold)``.
+
+``BENCH_REGRESSION_THRESHOLD`` (default ``1.0`` — i.e. fail beyond 2x the
+best prior wall) absorbs machine-to-machine variance; CI sets it higher
+because the pallas-interpret path is slower and noisier than compiled runs.
+The report is written BEFORE the threshold check, so a failing run still
+leaves its walls on disk for ``tools/bench_trends.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+BENCH = "BENCH_8"
+
+# Pinned smoke-scale workload — the cross-PR comparability contract.
+WORKLOAD = {
+    "n_pages": 256, "n_edges": 2048, "pagerank_iters": 10,
+    "n_tokens": 4096, "vocab": 128, "wordcount_iters": 3,
+    "kmeans_rows": 2048, "kmeans_dim": 8, "kmeans_k": 16, "kmeans_iters": 10,
+    "gmm_rows": 512, "gmm_dim": 4, "gmm_k": 4, "gmm_iters": 4,
+    "pi_samples": 65536,
+    "knn_rows": 2048, "knn_dim": 8, "knn_k": 64,
+    "seed": 0,
+}
+
+
+def _timed(fn):
+    """Wall of ``fn()`` with a device sync on its pytree result."""
+    t0 = time.perf_counter()
+    out = fn()
+    jax.block_until_ready(jax.tree_util.tree_leaves(out))
+    return time.perf_counter() - t0, out
+
+
+def _warm_and_time(fn):
+    """(wall_s, result): run twice through one session — first run compiles,
+    second run is the reported wall."""
+    fn()
+    return _timed(fn)
+
+
+def run_algorithms(w: dict) -> list[dict]:
+    from repro.core.algorithms.gmm import gmm_em
+    from repro.core.algorithms.kmeans import kmeans
+    from repro.core.algorithms.knn import knn
+    from repro.core.algorithms.pagerank import pagerank
+    from repro.core.algorithms.pi import estimate_pi
+    from repro.core.algorithms.wordcount import wordcount
+    from repro.core.session import BlazeSession
+
+    rng = np.random.RandomState(w["seed"])
+    edges = rng.randint(0, w["n_pages"], size=(w["n_edges"], 2)).astype(np.int32)
+    lines = rng.randint(0, w["vocab"], size=(w["n_tokens"],)).astype(np.int32)
+    pts = rng.randn(w["kmeans_rows"], w["kmeans_dim"]).astype(np.float32)
+    gpts = rng.randn(w["gmm_rows"], w["gmm_dim"]).astype(np.float32)
+    query = rng.randn(w["knn_dim"]).astype(np.float32)
+
+    rows = []
+
+    def record(name, fn):
+        sess = BlazeSession()
+        wall, _ = _warm_and_time(lambda: fn(sess))
+        rows.append({"name": name, "wall_s": wall})
+        print(f"{name:<10} wall={wall * 1e3:8.2f}ms")
+
+    record("pagerank", lambda s: pagerank(
+        edges, w["n_pages"], max_iters=w["pagerank_iters"], tol=0.0,
+        engine="auto", mode="program", session=s,
+    ))
+    record("wordcount", lambda s: wordcount(
+        lines, engine="auto", vocab_size=w["vocab"], mode="program",
+        iters=w["wordcount_iters"], session=s,
+    ))
+    record("kmeans", lambda s: kmeans(
+        pts, w["kmeans_k"], max_iters=w["kmeans_iters"], tol=0.0,
+        engine="auto", mode="program", seed=w["seed"], session=s,
+    ))
+    record("gmm", lambda s: gmm_em(
+        gpts, w["gmm_k"], max_iters=w["gmm_iters"], tol=0.0, engine="auto",
+        mode="program", seed=w["seed"], session=s,
+    ))
+    record("pi", lambda s: estimate_pi(
+        w["pi_samples"], engine="auto", mode="program", session=s,
+    ))
+    record("knn", lambda s: knn(
+        pts[: w["knn_rows"]], query, w["knn_k"], mode="program", session=s,
+    ))
+    return rows
+
+
+def run_tuned_vs_static(w: dict) -> dict:
+    """Tuned-vs-static walls for the two autotunable program drivers.
+
+    Static and tuned runs use fresh sessions over identical inputs; the
+    claims assert (a) the tuner measured once per op (counters), and (b)
+    tuned results are bit-identical to static results — integer counts for
+    word count, exact one-hot matmul sums for these k-means inputs.
+    """
+    from repro.core import containers as C
+    from repro.core.algorithms.kmeans import _program_step as _kmeans_step
+    from repro.core.algorithms.wordcount import _program_step as _wc_step
+    from repro.core.session import BlazeSession
+
+    rng = np.random.RandomState(w["seed"])
+    pts = rng.randint(-4, 5, size=(w["kmeans_rows"], w["kmeans_dim"])).astype(
+        np.float32
+    )
+    lines = rng.randint(0, w["vocab"], size=(w["n_tokens"],)).astype(np.int32)
+    centers0 = jnp.asarray(pts[: w["kmeans_k"]])
+    out = {}
+    bit_equal = True
+    measured_once = True
+
+    def kmeans_run(sess, tune):
+        pts_v = C.distribute(pts, sess.mesh)
+        step, state0 = _kmeans_step(pts_v, w["kmeans_k"], w["kmeans_dim"],
+                                    "auto", "none")
+        prog = sess.program(step, mesh=sess.mesh, tune=tune)
+        state, _ = sess.run_loop(prog, state0(centers0),
+                                 max_iters=w["kmeans_iters"])
+        return state["centers"]
+
+    def wc_run(sess, tune):
+        lines_v = C.distribute(lines, sess.mesh)
+        hm = C.make_dist_hashmap(sess.mesh, 4 * w["vocab"], (), jnp.int32,
+                                 "sum")
+        step, state0 = _wc_step(lines_v, hm, w["vocab"], "auto")
+        prog = sess.program(step, mesh=sess.mesh, tune=tune)
+        prog.build(state0)
+        prog.reset_carry()
+        prog(state0, 1)
+        return prog.hash_result(hm)
+
+    for name, run in (("kmeans", kmeans_run), ("wordcount", wc_run)):
+        s_static = BlazeSession()
+        wall_static, ref = _warm_and_time(lambda: run(s_static, False))
+        s_tuned = BlazeSession()
+        run(s_tuned, True)  # first dispatch: measures + compiles winner
+        first_measured = s_tuned.stats.tune_measurements
+        wall_tuned, got = _timed(lambda: run(s_tuned, True))
+        measured_once &= first_measured > 0
+        measured_once &= s_tuned.stats.tune_measurements == first_measured
+        if name == "wordcount":
+            rk, rv = ref.items()
+            gk, gv = got.items()
+            same = np.array_equal(rk, gk) and np.array_equal(rv, gv)
+        else:
+            same = np.array_equal(np.asarray(ref), np.asarray(got))
+        bit_equal &= bool(same)
+        out[name] = {
+            "wall_static_s": wall_static,
+            "wall_tuned_s": wall_tuned,
+            "tune_measurements": first_measured,
+        }
+        print(
+            f"{name:<10} static={wall_static * 1e3:8.2f}ms "
+            f"tuned={wall_tuned * 1e3:8.2f}ms "
+            f"measured={first_measured} bit_equal={bool(same)}"
+        )
+    out["claims"] = {
+        "tuned_measured_once": measured_once, "bit_equal": bit_equal,
+    }
+    return out
+
+
+# -- cross-PR comparison -------------------------------------------------------
+
+
+def comparable_metrics(doc: dict) -> dict[str, float]:
+    """Flatten a BENCH report's per-algorithm walls to bench-name-agnostic
+    dotted paths, so any later BENCH_N report with the same algorithm names
+    lines up against this one."""
+    reg = doc.get("regression")
+    if not isinstance(reg, dict):
+        return {}
+    out = {}
+    for row in reg.get("algorithms", []):
+        if isinstance(row, dict) and "name" in row and "wall_s" in row:
+            out[f"regression.{row['name']}.wall_s"] = float(row["wall_s"])
+    return out
+
+
+def best_prior(results_dir: str, exclude: str) -> dict[str, float]:
+    best: dict[str, float] = {}
+    for fname in sorted(os.listdir(results_dir)):
+        if not (fname.startswith("BENCH_") and fname.endswith(".json")):
+            continue
+        if fname == exclude:
+            continue
+        try:
+            with open(os.path.join(results_dir, fname)) as f:
+                doc = json.load(f)
+        except (OSError, ValueError):
+            continue
+        for k, v in comparable_metrics(doc).items():
+            if k not in best or v < best[k]:
+                best[k] = v
+    return best
+
+
+def check_regressions(current: dict[str, float], best: dict[str, float],
+                      threshold: float) -> list[str]:
+    failures = []
+    for k, v in sorted(current.items()):
+        ref = best.get(k)
+        if ref is None:
+            print(f"{k}: {v:.4f}s (no prior — baseline)")
+            continue
+        ratio = v / ref if ref > 0 else float("inf")
+        status = "OK" if v <= ref * (1.0 + threshold) else "REGRESSION"
+        print(f"{k}: {v:.4f}s vs best {ref:.4f}s ({ratio:.2f}x) {status}")
+        if status == "REGRESSION":
+            failures.append(
+                f"{k}: {v:.4f}s is {ratio:.2f}x the best prior {ref:.4f}s "
+                f"(threshold {1.0 + threshold:.2f}x)"
+            )
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", default=os.path.join(REPO, "results",
+                                                  f"{BENCH}.json"))
+    ap.add_argument(
+        "--threshold", type=float,
+        default=float(os.environ.get("BENCH_REGRESSION_THRESHOLD", "1.0")),
+        help="fail when wall > best_prior * (1 + threshold)",
+    )
+    args = ap.parse_args(argv)
+
+    algorithms = run_algorithms(WORKLOAD)
+    tuned = run_tuned_vs_static(WORKLOAD)
+    claims = tuned.pop("claims")
+    doc = {
+        "bench": BENCH,
+        "scale": "smoke",
+        "workload": dict(WORKLOAD),
+        "regression": {
+            "algorithms": algorithms,
+            "wall_total_s": sum(r["wall_s"] for r in algorithms),
+            "tuned_vs_static": tuned,
+            "threshold": args.threshold,
+        },
+        "claims": {
+            **claims,
+            "pinned_scale": True,
+        },
+    }
+    results_dir = os.path.dirname(os.path.abspath(args.out))
+    os.makedirs(results_dir, exist_ok=True)
+    best = best_prior(results_dir, exclude=os.path.basename(args.out))
+    failures = check_regressions(comparable_metrics(doc), best,
+                                 args.threshold)
+    doc["claims"]["no_regression"] = not failures
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    print(f"wrote {args.out}")
+    if not claims["tuned_measured_once"] or not claims["bit_equal"]:
+        print("FAIL: tuning claims violated "
+              f"(measured_once={claims['tuned_measured_once']}, "
+              f"bit_equal={claims['bit_equal']})")
+        return 1
+    if failures:
+        print("FAIL: " + "; ".join(failures))
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

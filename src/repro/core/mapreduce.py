@@ -450,7 +450,7 @@ def _local_view(kind, source, operands):
 
 def dense_shard_stage(
     kind, source, mapper, red, target, engine, wire, n_shards,
-    with_stats=True, feedback=False, collect=True,
+    with_stats=True, feedback=False, collect=True, tuned=None,
 ):
     """Build a pure, composable shard stage for a dense ``[K, ...]`` target.
 
@@ -484,9 +484,11 @@ def dense_shard_stage(
 
     Returns ``(stage, kernel_meta)``; ``kernel_meta`` is filled at trace time
     with the Pallas launch geometry (``block_n``, ``lanes``) when the kernel
-    runs.
+    runs.  ``tuned`` (a ``cost.TunedConfig``) pins the kernel's ``block_n``
+    instead of the analytic tuner — the measured-autotuning override.
     """
     K = target.shape[0]
+    tuned_bn = getattr(tuned, "block_n", None) if engine == "pallas" else None
     target_dtype = target.dtype
     kernel_meta: dict = {}
 
@@ -537,7 +539,7 @@ def dense_shard_stage(
                         dmask & (dkeys >= 0) & (dkeys < K), dkeys, -1
                     )
                     flat = dvals.reshape((dvals.shape[0], -1))
-                    seg = red.pallas_segment(ids, flat, K)
+                    seg = red.pallas_segment(ids, flat, K, block_n=tuned_bn)
                     seg = seg.reshape((K,) + dvals.shape[1:])
                     from repro.kernels.segment_reduce import (
                         segment_reduce_lanes,
@@ -545,7 +547,7 @@ def dense_shard_stage(
 
                     bn, lanes = segment_reduce_lanes(
                         flat.shape[0], K, flat.shape[1], red.name,
-                        flat.dtype,
+                        flat.dtype, block_n=tuned_bn,
                     )
                     kernel_meta["block_n"] = bn
                     kernel_meta["lanes"] = lanes * n_shards
@@ -586,7 +588,7 @@ def dense_shard_stage(
 
 def _map_reduce_dense(
     kind, source, mapper, red, target, mesh, n_shards, engine, wire, env,
-    with_stats=True, cache=None, node=None,
+    with_stats=True, cache=None, node=None, tuned=None,
 ):
     """Dense [K, ...] target — the paper's small fixed key range fast path."""
     K = target.shape[0]
@@ -598,12 +600,14 @@ def _map_reduce_dense(
     # The executable cache key IS the plan node's identity-faithful cache
     # signature: everything that shapes the lowered plan, with the mapper and
     # reducer kept by object (two lambdas with one qualname stay distinct).
+    # A tuned kernel config bakes into the lowered kernel, so it is part of
+    # the identity (TunedConfig equality ignores measurement outcomes).
     cache_key = (
         "dense", mapper, red.name, red, engine, wire, mesh, kind, with_stats,
         _abstract(_source_operands(kind, source)[0]),
         getattr(source, "n", None) if kind in ("vector", "chunked") else
         (source.start, source.stop, source.step) if kind == "range" else None,
-        _abstract(target), _abstract(env),
+        _abstract(target), _abstract(env), tuned,
     )
     if node is not None:
         node.cache_sig = cache_key
@@ -612,7 +616,7 @@ def _map_reduce_dense(
     if compiled_now:
         stage, kernel_meta = dense_shard_stage(
             kind, source, mapper, red, target, engine, wire, n_shards,
-            with_stats=with_stats,
+            with_stats=with_stats, tuned=tuned,
         )
 
         def shard_fn(env_, *operands):
@@ -697,7 +701,7 @@ def _wire_key_dtype(key_range: int | None) -> jnp.dtype:
 
 def hash_shard_stage(
     kind, source, mapper, red, val_dtype, engine, slack, n_shards,
-    key_range=None,
+    key_range=None, tuned=None,
 ):
     """Build the composable shard stage for a ``DistHashMap`` target.
 
@@ -753,10 +757,19 @@ def hash_shard_stage(
             # table's live rows *are* the locally-reduced pairs (at most one
             # per key), so the sort-based unique_combine disappears.
             vflat = vals.reshape((n_emit, -1))
-            cap, bn, probes = HK.choose_table_cap(
-                n_emit, vflat.shape[1], red.name, vflat.dtype,
-                distinct_hint=key_range,
-            )
+            if tuned is not None and tuned.table_cap:
+                # Measured override: the full (cap, block, probes) triple is
+                # pinned (only offered when key_range bounds the distinct
+                # keys, so the pinned capacity cannot overflow).
+                cap = tuned.table_cap
+                bn = max(8, min(tuned.block_n or 8, max(8, n_emit)))
+                probes = min(cap, tuned.probe_depth or
+                             HK.choose_probe_depth(n_emit, cap))
+            else:
+                cap, bn, probes = HK.choose_table_cap(
+                    n_emit, vflat.shape[1], red.name, vflat.dtype,
+                    distinct_hint=key_range,
+                )
             mkeys = jnp.where(valid, keys, HK.EMPTY_KEY)
             tk, tv, pre_drop = red.pallas_hash(
                 mkeys, vflat, cap, max_probes=probes, block_n=bn
@@ -840,7 +853,7 @@ def hash_shard_stage(
 
 def _map_reduce_hash(
     kind, source, mapper, red, target, mesh, n_shards, engine, slack, env,
-    key_range=None, cache=None, node=None,
+    key_range=None, cache=None, node=None, tuned=None,
 ):
     """DistHashMap target: local combine → hash-partition → all_to_all → merge."""
     axis = C.DATA_AXIS
@@ -852,6 +865,7 @@ def _map_reduce_hash(
         getattr(source, "n", None) if kind in ("vector", "chunked") else
         (source.start, source.stop, source.step) if kind == "range" else None,
         _abstract((target.table.keys, target.table.vals)), _abstract(env),
+        tuned,
     )
     if node is not None:
         node.cache_sig = cache_key
@@ -860,7 +874,7 @@ def _map_reduce_hash(
     if compiled_now:
         stage, kernel_meta = hash_shard_stage(
             kind, source, mapper, red, target.table.vals.dtype, engine,
-            slack, n_shards, key_range=key_range,
+            slack, n_shards, key_range=key_range, tuned=tuned,
         )
 
         def shard_fn(env_, tkeys, tvals, tovf, *operands):

@@ -56,6 +56,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import containers as C
+from repro.core import cost as cost_mod
+from repro.core.cost import PALLAS_AUTO_MAX_KEYS, TunedConfig, TuningCache
 from repro.core.reducers import Reducer
 
 __all__ = [
@@ -69,7 +71,9 @@ __all__ = [
     "Plan",
     "SourceInfo",
     "abstract_sig",
+    "apply_tuned",
     "build_mapreduce_node",
+    "node_key_count",
     "resolve_engine",
     "single_op_plan",
 ]
@@ -82,11 +86,18 @@ ENGINES = ("eager", "pallas", "naive", "auto")
 # — which is how benchmarks measure the before/after of collective batching.
 DEFAULT_PASSES = ("cse", "batch-collectives", "prune-dead-sources")
 
-# engine="auto" picks the Pallas kernel combine only while the dense [K, V]
-# accumulator tile plausibly stays VMEM-resident: K·V·4 B against a ~16 MB
-# core budget, with V unknown until trace.  4096 keys × 128 f32 lanes ≈ 2 MB —
-# comfortably resident; beyond that eager's XLA segmented reduce wins anyway.
-PALLAS_AUTO_MAX_KEYS = 4096
+# PALLAS_AUTO_MAX_KEYS now lives in repro.core.cost as the fallback cost
+# model's calibration anchor (re-exported here for back-compat): the modelled
+# eager-vs-pallas crossover sits at exactly K == 4096 keys, so engine="auto"
+# keeps the policy PR 2's differential matrix pinned.
+
+
+def node_key_count(target) -> int:
+    """Accumulator rows ``k`` the cost model prices a node by: the dense key
+    range, or the hash table's per-shard capacity.  0 when unknowable."""
+    if isinstance(target, C.DistHashMap):
+        return target.capacity_per_shard
+    return jnp.asarray(target).shape[0] if jnp.ndim(target) else 0
 
 
 def resolve_engine(engine: str, target, reducer: Reducer) -> str:
@@ -102,12 +113,14 @@ def resolve_engine(engine: str, target, reducer: Reducer) -> str:
     ``MapReduceStats.engine`` / ``MapReduceNode.engine`` matches the plan
     that runs).
 
-    ``"auto"`` picks the kernel exactly when its accumulator plausibly stays
-    VMEM-resident: dense targets with ``K <= PALLAS_AUTO_MAX_KEYS``, hash
-    targets with ``capacity_per_shard <= PALLAS_AUTO_MAX_KEYS``; eager
-    otherwise.  Lives here (not in ``session.py``) since PR 5: resolution is
-    a planning pass applied node-by-node, which is what lets one fused
-    program mix engines.
+    ``"auto"`` asks the calibrated fallback cost model
+    (``cost.pick_engine``): the modelled-cheaper engine over ``k``
+    accumulator rows (dense key range / hash ``capacity_per_shard``), whose
+    calibration puts the eager/pallas crossover at exactly
+    ``k == PALLAS_AUTO_MAX_KEYS`` — deterministic, and pinned against the
+    old static rule by the PR 2 differential matrix.  Lives here (not in
+    ``session.py``) since PR 5: resolution is a planning pass applied
+    node-by-node, which is what lets one fused program mix engines.
     """
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; choose from {ENGINES}")
@@ -119,11 +132,7 @@ def resolve_engine(engine: str, target, reducer: Reducer) -> str:
         return engine
     if kernel is None:
         return "eager"
-    if hash_target:
-        k = target.capacity_per_shard
-    else:
-        k = jnp.asarray(target).shape[0] if jnp.ndim(target) else 0
-    return "pallas" if 0 < k <= PALLAS_AUTO_MAX_KEYS else "eager"
+    return cost_mod.pick_engine(node_key_count(target))
 
 
 def abstract_sig(tree) -> tuple:
@@ -217,6 +226,12 @@ class MapReduceNode:
     dead: bool = False  # result provably unused -> op pruned
     collective: str = ""  # what carries this op's shuffle
     cache_sig: tuple | None = None  # identity-faithful executable cache key
+    # -- cost-model / autotuning annotations (NOT part of stable_desc: the
+    # tuning cache is keyed by the hash of the un-tuned node, so applying a
+    # cached winner must not move the key it was cached under) --------------
+    cost_estimate: float | None = None  # model units for the resolved engine
+    tune_key: str = ""  # node hash at resolve time, before any tuned override
+    tuned: TunedConfig | None = None  # the applied winner (measured or loaded)
 
     def stable_desc(self) -> str:
         return (
@@ -293,6 +308,11 @@ class Plan:
     pruned_sources: int = 0
     residual_specs: list[tuple] = dataclasses.field(default_factory=list)
     hash_targets: dict = dataclasses.field(default_factory=dict)
+    # node idx -> (target_kind, k, v, reducer_name, dtype_str, key_range,
+    # has_kernel): the candidate-grid parameters the program autotuner needs
+    # to rebuild measurement variants without re-tracing.  Not part of the
+    # plan hash — it describes the same ops the hashed descs already cover.
+    tune_info: dict = dataclasses.field(default_factory=dict)
 
     @property
     def hash(self) -> str:
@@ -332,14 +352,24 @@ class Plan:
                     flags.append(f"group {chr(ord('A') + n.group)}")
                 if n.feedback:
                     flags.append("int8 feedback")
-                if n.engine_requested != n.engine:
+                if n.engine_requested != n.engine and n.tuned is None:
                     flags.append(f"requested {n.engine_requested!r}")
+                if n.tuned is not None:
+                    cfg = n.tuned
+                    wall = (
+                        f" {cfg.wall_s * 1e3:.2f}ms"
+                        if cfg.wall_s is not None
+                        else ""
+                    )
+                    flags.append(f"tuned {cfg.source}: {cfg.describe()}{wall}")
                 mapper_name = _fn_name(n.mapper).rsplit(".", 1)[-1]
                 body = (
                     f"map_reduce {n.reducer:<4} fn={mapper_name} "
                     f"src={n.kind}:{n.src} -> "
                     f"{n.target_desc}  engine={n.engine} wire={n.wire}"
                 )
+                if n.cost_estimate is not None:
+                    body += f" cost~{int(n.cost_estimate)}"
                 if n.key_range is not None:
                     body += f" key_range={n.key_range}"
                 if n.collective and not n.dead and n.cse_of is None:
@@ -414,6 +444,21 @@ def target_desc_of(target) -> tuple[str, str]:
     return "dense", f"dense {_dtype_name(t.dtype)}[{'x'.join(map(str, t.shape))}]"
 
 
+def apply_tuned(node: MapReduceNode, red: Reducer, cfg: TunedConfig) -> None:
+    """Apply a tuning-cache winner to a freshly built node: override the
+    resolved engine (when the reducer actually carries the kernel the config
+    asks for) and attach the kernel config for the stage builders.  The
+    override is applied *after* ``tune_key`` was captured, so the node's
+    cache identity in the tuning cache is unchanged."""
+    kernel = (
+        red.pallas_hash if node.target_kind == "hash" else red.pallas_segment
+    )
+    if cfg.engine == "pallas" and kernel is None:
+        return  # custom reducer: the config cannot lower; keep the fallback
+    node.engine = cfg.engine
+    node.tuned = cfg
+
+
 def build_mapreduce_node(
     idx: int,
     kind: str,
@@ -426,13 +471,17 @@ def build_mapreduce_node(
     wire: str,
     key_range: int | None,
     env: Any,
+    tuning: TuningCache | None = None,
 ) -> MapReduceNode:
     """Build a MapReduce node and run the resolve-engines pass on it.
 
     This is THE node constructor: ``BlazeSession.map_reduce`` builds its
     single-node plan through it and ``ProgramContext`` builds every program
     node through it, which is why the two paths produce identical node
-    hashes for the same op.
+    hashes for the same op.  When a ``tuning`` cache is passed, a cached
+    measured winner for this node (keyed by its un-tuned hash) is applied
+    before the node is returned — the resolve-engines pass consulting the
+    measured cost model instead of the analytic fallback.
     """
     target_kind, tdesc = target_desc_of(target)
     if target_kind == "hash":
@@ -458,7 +507,7 @@ def build_mapreduce_node(
         )
         vb = jnp.dtype(target.table.vals.dtype).itemsize
         collective = f"all_to_all[pairs x {kb + vb}B]"
-    return MapReduceNode(
+    node = MapReduceNode(
         idx=idx,
         kind=kind,
         src=src,
@@ -474,6 +523,16 @@ def build_mapreduce_node(
         env_sig=abstract_sig(env),
         collective=collective,
     )
+    if resolved in ("eager", "pallas"):
+        node.cost_estimate = cost_mod.node_cost(
+            resolved, node_key_count(target)
+        )
+    node.tune_key = node.hash  # identity BEFORE any tuned override
+    if tuning is not None:
+        cfg = tuning.get(node.tune_key)
+        if cfg is not None:
+            apply_tuned(node, red, cfg)
+    return node
 
 
 def single_op_plan(node: MapReduceNode, n_shards: int) -> Plan:

@@ -70,6 +70,8 @@ leaving the executable).
 from __future__ import annotations
 
 import dataclasses
+import math
+import time
 from typing import Any, Callable
 
 import jax
@@ -356,10 +358,17 @@ class ProgramContext:
     def __init__(
         self, n_shards: int, mode: str, coll=None, operands=None,
         residuals=None, hash_tables=None, plan: Plan | None = None,
-        passes: tuple = DEFAULT_PASSES,
+        passes: tuple = DEFAULT_PASSES, tuning=None, overrides=None,
     ):
         self._n_shards = n_shards
         self._mode = mode  # "discover" | "execute"
+        # discover-mode autotuning hooks: ``tuning`` is the session's
+        # TuningCache (cached winners apply to every node built), and
+        # ``overrides`` maps tune_key -> candidate TunedConfig for the
+        # throwaway measurement variants Program._maybe_tune builds.
+        self._tuning = tuning
+        self._overrides = overrides or {}
+        self._tune_info: dict[int, tuple] = {}  # idx -> candidate-grid params
         inner = coll if coll is not None else _mr.AbstractCollectives(n_shards)
         if mode == "discover":
             inner = _CountingCollectives(inner)
@@ -669,10 +678,19 @@ class ProgramContext:
                 idx=self._call_i, kind=kind, src=src_desc,
                 source_key=source_key, mapper=mapper, red=red, target=target,
                 engine=engine, wire=wire, key_range=key_range, env=env,
+                tuning=self._tuning,
             )
+            ov = self._overrides.get(node.tune_key)
+            if ov is not None:
+                plan_mod.apply_tuned(node, red, ov)
             self._call_i += 1
             self._nodes.append(node)
             self._meta[node.idx] = (red, target)
+            v = math.prod(target.shape[1:]) if target.ndim > 1 else 1
+            self._tune_info[node.idx] = (
+                "dense", target.shape[0] if target.ndim else 0, v, red.name,
+                str(target.dtype), None, red.pallas_segment is not None,
+            )
             if self._cse and not (
                 wire == "int8" and red.name == "sum"
             ):
@@ -717,7 +735,7 @@ class ProgramContext:
         stage, _ = _mr.dense_shard_stage(
             kind, src_static, mapper, red, target, resolved, wire,
             self._n_shards, with_stats=False, feedback=feedback,
-            collect=not deferrable,
+            collect=not deferrable, tuned=getattr(node, "tuned", None),
         )
         residual = None
         if feedback:
@@ -759,9 +777,19 @@ class ProgramContext:
                 idx=self._call_i, kind=kind, src=src_desc,
                 source_key=source_key, mapper=mapper, red=red, target=target,
                 engine=engine, wire="none", key_range=key_range, env=env,
+                tuning=self._tuning,
             )
+            ov = self._overrides.get(node.tune_key)
+            if ov is not None:
+                plan_mod.apply_tuned(node, red, ov)
             self._call_i += 1
             self._nodes.append(node)
+            vals = target.table.vals
+            v = math.prod(vals.shape[2:]) if vals.ndim > 2 else 1
+            self._tune_info[node.idx] = (
+                "hash", 0, v, red.name, str(vals.dtype), key_range,
+                red.pallas_hash is not None,
+            )
         else:
             _, node = self._next_node(MapReduceNode)
         resolved = node.engine if node is not None else plan_mod.resolve_engine(
@@ -789,6 +817,7 @@ class ProgramContext:
         stage, _meta = _mr.hash_shard_stage(
             kind, src_static, mapper, red, target.table.vals.dtype, resolved,
             shuffle_slack, self._n_shards, key_range=key_range,
+            tuned=getattr(node, "tuned", None),
         )
         table, _le, _ls, _kp = stage(env, table, local, self._coll)
         self._hash_tables[tkey] = table
@@ -931,6 +960,7 @@ class ProgramContext:
             pruned_sources=sum(1 for s in sources if s.pruned),
             residual_specs=residual_specs,
             hash_targets=dict(self._hash_targets),
+            tune_info=dict(self._tune_info),
         )
 
 
@@ -964,13 +994,21 @@ class Program:
 
     def __init__(
         self, session, step_fn: Callable, *, mesh: Mesh | None = None,
-        passes: tuple | None = None,
+        passes: tuple | None = None, tune: bool = False,
+        overrides: dict | None = None,
     ):
         self._session = session
         self._step_fn = step_fn
         self._mesh = mesh if mesh is not None else session.mesh
         self._n_shards = self._mesh.shape[C.DATA_AXIS]
         self._passes = DEFAULT_PASSES if passes is None else tuple(passes)
+        # ``tune``: on first build per state signature, measure the candidate
+        # grid for every tunable op (see _maybe_tune) and cache winners in
+        # the session's TuningCache.  ``overrides`` pins tune_key -> config
+        # for the throwaway measurement variants — such a variant never
+        # recursively tunes.
+        self._tune = bool(tune)
+        self._overrides = overrides
         self._cache: dict = {}  # state signature -> (jitted fused fn, operands)
         self._plans: dict = {}  # state signature -> optimized Plan
         # state signature -> live per-shard error-feedback residuals, carried
@@ -993,7 +1031,10 @@ class Program:
     # -- build ---------------------------------------------------------------
 
     def _discover(self, state) -> Plan:
-        ctx = ProgramContext(self._n_shards, "discover", passes=self._passes)
+        ctx = ProgramContext(
+            self._n_shards, "discover", passes=self._passes,
+            tuning=self._session.tuning, overrides=self._overrides,
+        )
 
         def run(s):
             out = self._step_fn(ctx, s)
@@ -1017,6 +1058,92 @@ class Program:
                 )
         return ctx.build_plan(_state_desc(state), self._passes)
 
+    def _maybe_tune(self, state) -> None:
+        """First-dispatch autotuning: measure the candidate grid and cache
+        the winners in the session's TuningCache.
+
+        A probe discovery finds every tunable op (kernel available, not
+        ``naive``, not already measured for its ``tune_key``).  Candidate
+        configurations are index-aligned across ops — variant ``j`` pins
+        each op to its ``min(j, len-1)``-th candidate — and each variant is
+        a throwaway ``Program`` with ``overrides`` set, dispatched once to
+        warm/compile and once timed end-to-end.  The fastest variant's
+        per-op configs are stored keyed by ``tune_key``, so the real build
+        that follows (and any later program/map_reduce/serve dispatch with
+        the same op) picks them up from the cache.  Streamed (chunked-
+        source) programs are skipped: their operands arrive per dispatch.
+        """
+        from repro.core import cost as cost_mod
+
+        session = self._session
+        tuning = session.tuning
+        probe = self._discover(state)
+        if any(
+            _mr._source_kind(s.source) == "chunked"
+            for s in probe.live_sources()
+        ):
+            return
+        cand_lists: list[tuple[str, list]] = []
+        seen: set[str] = set()
+        for n in probe.mapreduce_nodes():
+            if n.dead or n.cse_of is not None:
+                continue
+            if n.tuned is not None or n.tune_key in seen:
+                continue
+            if tuning.peek(n.tune_key) is not None:
+                continue
+            info = probe.tune_info.get(n.idx)
+            if info is None:
+                continue
+            tkind, k, v, red_name, dtype_s, key_range, has_kernel = info
+            if not has_kernel or n.engine_requested == "naive":
+                continue
+            dtype = jnp.dtype(dtype_s)
+            if tkind == "hash":
+                cands = cost_mod.hash_tuning_candidates(
+                    v, red_name, dtype, key_range=key_range
+                )
+            else:
+                cands = cost_mod.dense_tuning_candidates(k, v, red_name, dtype)
+            if len(cands) < 2:
+                continue
+            seen.add(n.tune_key)
+            cand_lists.append((n.tune_key, cands))
+        if not cand_lists:
+            return
+        n_variants = max(len(c) for _, c in cand_lists)
+        best_wall, best_set = None, None
+        measured = 0
+        for j in range(n_variants):
+            ov = {
+                tk: cands[min(j, len(cands) - 1)] for tk, cands in cand_lists
+            }
+            variant = Program(
+                session, self._step_fn, mesh=self._mesh, passes=self._passes,
+                overrides=ov,
+            )
+            try:
+                out = variant(state, 1)
+                jax.block_until_ready(jax.tree_util.tree_leaves(out))
+                t0 = time.perf_counter()
+                out = variant(state, 1)
+                jax.block_until_ready(jax.tree_util.tree_leaves(out))
+                wall = time.perf_counter() - t0
+            except Exception:
+                continue
+            measured += 1
+            if best_wall is None or wall < best_wall:
+                best_wall, best_set = wall, ov
+        tuning.record_measurements(measured)
+        session.stats.tune_measurements += measured
+        if best_set is None:
+            return
+        for tk, cfg in best_set.items():
+            tuning.put(
+                tk,
+                dataclasses.replace(cfg, source="measured", wall_s=best_wall),
+            )
+
     def build(self, state) -> Plan:
         """Discover, optimize and lower the plan for ``state``'s signature
         WITHOUT dispatching (compilation itself stays lazy under jit).
@@ -1031,6 +1158,8 @@ class Program:
         if key in self._cache:
             self.plan = self._plans[key]
             return self._cache[key]
+        if self._tune and self._overrides is None:
+            self._maybe_tune(state)
         plan = self._discover(state)
         self._plans[key] = plan
         self.plan = plan

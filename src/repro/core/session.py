@@ -25,14 +25,18 @@ create/receive one explicitly.
 from __future__ import annotations
 
 import dataclasses
+import os
 import threading
+import time
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh
 
 from repro.core import containers as C
+from repro.core import cost as cost_mod
 from repro.core import mapreduce as _mr
 from repro.core import plan as plan_mod
 # The engine-resolution policy moved to repro.core.plan in PR 5 (it is the
@@ -70,6 +74,7 @@ class SessionStats:
     host_syncs: int = 0  # blocking host materialisations (host_value/cond)
     program_compiles: int = 0  # fused-program executables built
     program_dispatches: int = 0  # fused-program blocks launched
+    tune_measurements: int = 0  # candidate configs timed by the autotuner
 
     @property
     def hit_rate(self) -> float:
@@ -86,10 +91,21 @@ class BlazeSession:
     >>> sess.stats.compiles   # 1 — nine of the ten calls reused it
     """
 
-    def __init__(self, mesh: Mesh | None = None):
+    def __init__(
+        self, mesh: Mesh | None = None, *, tuning_path: str | None = None,
+    ):
         self._mesh = mesh
         self._exec_cache: dict = {}
         self.stats = SessionStats()
+        # Measured autotuning winners, keyed by node plan-hash.  Populated by
+        # tune=True dispatches; consulted by EVERY node build (per-op,
+        # program discovery, serve), so a winner measured once is reused by
+        # all later dispatches of the same plan.  ``tuning_path`` preloads a
+        # cache persisted beside checkpoints (``save_tuning``).
+        self.tuning = cost_mod.TuningCache()
+        self._tuning_path = tuning_path
+        if tuning_path and os.path.exists(tuning_path):
+            self.tuning.load(tuning_path)
         # Session state (exec cache, stats, program carries) is not safe to
         # mutate from concurrent threads.  Multi-threaded front-ends — the
         # serving layer's dispatcher, notably — serialize all session work
@@ -119,6 +135,7 @@ class BlazeSession:
         shuffle_slack: float = 2.0,
         key_range: int | None = None,
         return_stats: bool = False,
+        tune: bool = False,
     ):
         """Run one MapReduce op, reusing this session's compiled executables.
 
@@ -138,6 +155,13 @@ class BlazeSession:
         executable cache is keyed on the node's cache signature, and
         ``MapReduceStats.plan_hash`` carries the node's stable digest — equal
         to the hash the same op gets inside a fused program.
+
+        ``tune=True`` enables first-dispatch autotuning: if this node's plan
+        hash has no measured winner yet, a small candidate grid (engine ∈
+        {eager, pallas} × kernel block/capacity configs from the shared
+        ``cost`` grids) is timed once, and the winner is cached in
+        ``session.tuning`` — every later dispatch of the same plan (tuned or
+        not, per-op or inside a program) reuses it.
         """
         red = get_reducer(reducer)
         mesh = mesh or self.mesh
@@ -147,7 +171,21 @@ class BlazeSession:
             idx=0, kind=kind, src=plan_mod.source_desc(kind, source),
             source_key=None, mapper=mapper, red=red, target=target,
             engine=engine, wire=wire, key_range=key_range, env=env,
+            tuning=self.tuning,
         )
+        if (
+            tune
+            and node.tuned is None
+            and kind != "chunked"
+            and self._tunable(node, red, target)
+        ):
+            self._tune_map_reduce(
+                kind, source, mapper, red, target, mesh, n_shards, wire,
+                env, shuffle_slack, key_range, node,
+            )
+            cfg = self.tuning.peek(node.tune_key)
+            if cfg is not None:
+                plan_mod.apply_tuned(node, red, cfg)
         engine = node.engine
 
         if isinstance(source, C.ChunkedDistVector):
@@ -159,13 +197,13 @@ class BlazeSession:
             out, stats = _mr._map_reduce_hash(
                 kind, source, mapper, red, target, mesh, n_shards, engine,
                 shuffle_slack, env, key_range=key_range,
-                cache=self._exec_cache, node=node,
+                cache=self._exec_cache, node=node, tuned=node.tuned,
             )
         else:
             out, stats = _mr._map_reduce_dense(
                 kind, source, mapper, red, jnp.asarray(target), mesh,
                 n_shards, engine, wire, env, return_stats,
-                cache=self._exec_cache, node=node,
+                cache=self._exec_cache, node=node, tuned=node.tuned,
             )
         self.stats.calls += 1
         self.stats.compiles += stats.compiles
@@ -210,13 +248,13 @@ class BlazeSession:
                 out, st = _mr._map_reduce_hash(
                     "chunked", bv, mapper, red, out, mesh, n_shards, engine,
                     shuffle_slack, env, key_range=key_range,
-                    cache=self._exec_cache, node=node,
+                    cache=self._exec_cache, node=node, tuned=node.tuned,
                 )
             else:
                 out, st = _mr._map_reduce_dense(
                     "chunked", bv, mapper, red, out, mesh, n_shards, engine,
                     wire, env, return_stats, cache=self._exec_cache,
-                    node=node,
+                    node=node, tuned=node.tuned,
                 )
             emitted = emitted + st.pairs_emitted
             shipped = shipped + st.pairs_shipped
@@ -239,9 +277,122 @@ class BlazeSession:
         self.stats.dispatches += stats.dispatches
         return (out, stats) if return_stats else out
 
+    # -- measured autotuning (tune=True) -------------------------------------
+
+    @staticmethod
+    def _tunable(node, red: Reducer, target) -> bool:
+        """Nodes the measured autotuner can act on: a builtin reducer whose
+        kernel exists for the target kind, and no ``naive`` request (naive is
+        a benchmarking baseline, not a candidate)."""
+        kernel = (
+            red.pallas_hash
+            if isinstance(target, C.DistHashMap)
+            else red.pallas_segment
+        )
+        return kernel is not None and node.engine_requested != "naive"
+
+    def _candidates_for(self, red: Reducer, target, key_range):
+        """The measurement grid for one node, off the shared cost grids."""
+        if isinstance(target, C.DistHashMap):
+            val_shape = target.table.vals.shape[2:]
+            v = int(np.prod(val_shape)) if val_shape else 1
+            return cost_mod.hash_tuning_candidates(
+                v, red.name, target.table.vals.dtype, key_range=key_range
+            )
+        t = jnp.asarray(target)
+        k = t.shape[0] if t.ndim else 0
+        v = int(np.prod(t.shape[1:])) if t.ndim > 1 else 1
+        return cost_mod.dense_tuning_candidates(k, v, red.name, t.dtype)
+
+    def _tune_map_reduce(
+        self, kind, source, mapper, red, target, mesh, n_shards, wire, env,
+        shuffle_slack, key_range, node,
+    ):
+        """Time the candidate grid for ``node`` and cache the winner.
+
+        Each candidate is dispatched twice — once to compile + warm, once
+        timed to completion (``block_until_ready``) — through the normal
+        engine entry points, so candidate executables land in the session's
+        executable cache and the winning config's executable is already warm
+        for the real dispatch that follows.  ``map_reduce`` is functional
+        (the target is merged into a *new* container), so the measurement
+        outputs are simply discarded.
+        """
+        hash_target = isinstance(target, C.DistHashMap)
+        candidates = self._candidates_for(red, target, key_range)
+        best_cfg, best_wall = None, float("inf")
+        measured = 0
+        for cfg in candidates:
+            tuned = cfg if cfg.engine == "pallas" else None
+
+            def run():
+                if hash_target:
+                    return _mr._map_reduce_hash(
+                        kind, source, mapper, red, target, mesh, n_shards,
+                        cfg.engine, shuffle_slack, env, key_range=key_range,
+                        cache=self._exec_cache, tuned=tuned,
+                    )
+                return _mr._map_reduce_dense(
+                    kind, source, mapper, red, jnp.asarray(target), mesh,
+                    n_shards, cfg.engine, wire, env, False,
+                    cache=self._exec_cache, tuned=tuned,
+                )
+
+            try:
+                out, st = run()  # compile + warm
+                leaves = (
+                    (out.table.keys, out.table.vals, out.table.overflow)
+                    if hash_target
+                    else out
+                )
+                jax.block_until_ready(leaves)
+                t0 = time.perf_counter()
+                out, st2 = run()
+                leaves = (
+                    (out.table.keys, out.table.vals, out.table.overflow)
+                    if hash_target
+                    else out
+                )
+                jax.block_until_ready(leaves)
+                wall = time.perf_counter() - t0
+            except Exception:  # noqa: BLE001 — a failed candidate just loses
+                continue
+            measured += 1
+            self.stats.compiles += st.compiles + st2.compiles
+            self.stats.cache_hits += st.cache_hits + st2.cache_hits
+            if wall < best_wall:
+                best_cfg, best_wall = cfg, wall
+        self.tuning.record_measurements(measured)
+        self.stats.tune_measurements += measured
+        if best_cfg is not None:
+            self.tuning.put(
+                node.tune_key,
+                dataclasses.replace(
+                    best_cfg, source="measured", wall_s=best_wall
+                ),
+            )
+
+    def save_tuning(self, path: str | None = None) -> str:
+        """Persist the tuning cache (JSON, atomic) — call it beside your
+        checkpoint writes.  Defaults to the session's ``tuning_path``."""
+        path = path or self._tuning_path
+        if not path:
+            raise ValueError("no path given and session has no tuning_path")
+        self.tuning.save(path)
+        return path
+
+    def load_tuning(self, path: str | None = None) -> int:
+        """Merge a persisted tuning cache into this session; returns the
+        number of entries loaded."""
+        path = path or self._tuning_path
+        if not path:
+            raise ValueError("no path given and session has no tuning_path")
+        return self.tuning.load(path)
+
     # -- fused iteration programs (see repro.core.program) -------------------
 
-    def program(self, step_fn: Callable, *, mesh=None, passes=None):
+    def program(self, step_fn: Callable, *, mesh=None, passes=None,
+                tune: bool = False):
         """Lower ``step_fn(ctx, state) -> state`` — a whole iteration of
         MapReduce ops plus elementwise glue — into ONE optimized executable.
 
@@ -254,10 +405,19 @@ class BlazeSession:
         ``passes=()`` disables the optional three for A/B comparisons.  Run
         the result with ``program(state, n_iters)`` or ``run_loop``; render
         the plan with ``session.explain(program)``.
+
+        ``tune=True``: on the program's first build, any tunable node without
+        a measured winner triggers one measurement sweep — throwaway program
+        variants with candidate engine/kernel configs are each dispatched for
+        one timed iteration, and the per-node winners land in
+        ``session.tuning``, shared with every later program, per-op call and
+        BlazeServe query over the same plan.
         """
         from repro.core.program import Program
 
-        return Program(self, step_fn, mesh=mesh or self.mesh, passes=passes)
+        return Program(
+            self, step_fn, mesh=mesh or self.mesh, passes=passes, tune=tune
+        )
 
     def explain(self, program, state=None) -> str:
         """Render ``program``'s optimized logical plan, Spark-EXPLAIN-style:

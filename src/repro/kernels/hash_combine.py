@@ -64,9 +64,37 @@ REDUCERS = ("sum", "prod", "min", "max")
 # tests/test_hash_kernel.py.
 EMPTY_KEY = np.iinfo(np.int32).min
 
-# VMEM budget for the autotuner (bytes): the [C, V] value tile, the [C] key
-# row and ~4 [bn, C] probe-round intermediates must all stay resident.
-_VMEM_BUDGET = 4 * 1024 * 1024
+# The (capacity, block, probe-depth) tuner arithmetic is shared with the
+# dense tuner and the measured autotuner in repro.core.cost; the delegates
+# import lazily at call time (a module-level import would re-enter
+# repro.core.__init__ mid-import — same constraint as segment_reduce).
+
+
+def choose_probe_depth(n: int, table_cap: int) -> int:
+    """Probe rounds for ``n`` pairs into a ``table_cap`` table (load-factor
+    tiers; see ``cost.choose_probe_depth``)."""
+    from repro.core.cost import choose_probe_depth as f
+
+    return f(n, table_cap)
+
+
+def choose_table_cap(
+    n: int,
+    v: int,
+    reducer: str = "sum",
+    dtype=jnp.float32,
+    *,
+    distinct_hint: int | None = None,
+    vmem_budget: int | None = None,
+) -> tuple[int, int, int]:
+    """(table_cap, block_n, max_probes) for a fresh-table combine of ``n``
+    pairs — the pick over ``cost.hash_table_candidates`` (shared grid)."""
+    from repro.core import cost
+
+    return cost.choose_table_cap(
+        n, v, reducer, dtype, distinct_hint=distinct_hint,
+        vmem_budget=cost.VMEM_BUDGET if vmem_budget is None else vmem_budget,
+    )
 
 
 def hash32(x: jax.Array) -> jax.Array:
@@ -77,68 +105,6 @@ def hash32(x: jax.Array) -> jax.Array:
     x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
     x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
     return x ^ (x >> 16)
-
-
-def choose_probe_depth(n: int, table_cap: int) -> int:
-    """Probe rounds to configure for ``n`` pairs into a ``table_cap`` table.
-
-    Linear-probing cluster lengths grow with the load factor α = n/C: ~16
-    probes cover α ≤ 0.5 comfortably, near-full tables need more rounds to
-    *find* the free slots that do exist.  The while-loop early exit makes a
-    generous depth nearly free in the common case — this bound only matters
-    under collision pressure, where overflow counting must be honest.
-    """
-    alpha = min(1.0, n / max(1, table_cap))
-    if alpha <= 0.5:
-        depth = 16
-    elif alpha <= 0.75:
-        depth = 32
-    else:
-        depth = 64
-    return min(table_cap, depth)
-
-
-def choose_table_cap(
-    n: int,
-    v: int,
-    reducer: str = "sum",
-    dtype=jnp.float32,
-    *,
-    distinct_hint: int | None = None,
-    vmem_budget: int = _VMEM_BUDGET,
-) -> tuple[int, int, int]:
-    """(table_cap, block_n, max_probes) for a fresh-table combine of ``n``
-    pairs.
-
-    Capacity targets load factor ≤ 0.5 over the *distinct*-key bound —
-    ``distinct_hint`` (e.g. a known vocabulary size / ``key_range``) when the
-    caller has one, else the stream length — rounded up to a power of two,
-    then clamped so the per-round working set (``[C, V]`` + ``[C]`` table,
-    ~4 ``[bn, C]``-shaped probe intermediates for the matmul strategy, the
-    ``[bn, C, V]`` select-scatter fold otherwise) fits the VMEM budget at
-    ``block_n >= 8``.  Probe depth follows the resulting load factor
-    (``choose_probe_depth``).
-    """
-    distinct = min(n, distinct_hint) if distinct_hint else n
-    cap = 128
-    while cap < 2 * max(1, distinct) and cap < (1 << 20):
-        cap *= 2
-
-    def fits(cap_: int, bn_: int) -> bool:
-        acc = _acc_dtype(dtype)
-        table = cap_ * (max(v, 1) + 1) * 4
-        if _use_matmul(reducer, acc):
-            per_round = 4 * bn_ * cap_ * 4 + bn_ * max(v, 1) * 4
-        else:
-            per_round = bn_ * cap_ * max(v, 1) * 4 + 2 * bn_ * cap_ * 4
-        return table + per_round <= vmem_budget
-
-    while cap > 128 and not fits(cap, 8):
-        cap //= 2
-    bn = 8
-    while bn < 1024 and bn < n and fits(cap, 2 * bn):
-        bn *= 2
-    return cap, max(8, min(bn, max(8, n))), choose_probe_depth(n, cap)
 
 
 def _hash_kernel(

@@ -37,9 +37,38 @@ from jax.experimental import pallas as pl
 
 REDUCERS = ("sum", "prod", "min", "max")
 
-# Default VMEM budget for the autotuner (bytes).  Real cores have ~16 MB;
-# leave room for the [K, V] accumulator tile and double-buffered inputs.
-_VMEM_BUDGET = 4 * 1024 * 1024
+# The VMEM-budget/candidate-scoring arithmetic lives in repro.core.cost
+# (shared with the hash-combine tuner and the measured autotuner).  The
+# delegates below import it lazily at call time: a module-level import would
+# re-enter repro.core.__init__ while this module is itself being imported by
+# the containers → reducers → kernels chain.
+
+
+def _acc_dtype(dtype):
+    """Accumulator dtype: f32 for floats (bf16 upcast), i32 for ints."""
+    from repro.core.cost import acc_dtype
+
+    return acc_dtype(dtype)
+
+
+def _use_matmul(reducer: str, acc_dtype) -> bool:
+    from repro.core.cost import use_matmul
+
+    return use_matmul(reducer, acc_dtype)
+
+
+def choose_block_n(
+    n: int, num_segments: int, v: int, reducer: str = "sum",
+    dtype=jnp.float32, vmem_budget: int | None = None,
+) -> int:
+    """Largest power-of-two block (8..2048) whose per-step working set fits
+    — the pick over ``cost.segment_block_candidates`` (shared grid)."""
+    from repro.core import cost
+
+    return cost.choose_block_n(
+        n, num_segments, v, reducer, dtype,
+        cost.VMEM_BUDGET if vmem_budget is None else vmem_budget,
+    )
 
 
 def pallas_interpret_default() -> bool:
@@ -49,14 +78,6 @@ def pallas_interpret_default() -> bool:
     if env is not None and env != "":
         return env not in ("0", "false", "no")
     return jax.default_backend() != "tpu"
-
-
-def _acc_dtype(dtype):
-    """Accumulator dtype: f32 for floats (bf16 upcast), i32 for ints — the
-    widths the MXU/VPU natively accumulate in."""
-    if jnp.issubdtype(jnp.dtype(dtype), jnp.floating):
-        return jnp.float32
-    return jnp.int32
 
 
 def _identity(reducer: str, dtype):
@@ -89,30 +110,6 @@ def _fold(reducer: str):
         "min": jnp.min,
         "max": jnp.max,
     }[reducer]
-
-
-def _use_matmul(reducer: str, acc_dtype) -> bool:
-    return reducer == "sum" and acc_dtype == jnp.float32
-
-
-def choose_block_n(
-    n: int, num_segments: int, v: int, reducer: str = "sum",
-    dtype=jnp.float32, vmem_budget: int = _VMEM_BUDGET,
-) -> int:
-    """Largest power-of-two block (8..2048) whose per-step working set fits.
-
-    matmul strategy:          onehot [bn, K] + vals [bn, V]      (f32)
-    select-scatter strategy:  masked [bn, K, V]                  (acc dtype)
-    """
-    per_row = (
-        (num_segments + v) * 4
-        if _use_matmul(reducer, _acc_dtype(dtype))
-        else num_segments * max(v, 1) * 4
-    )
-    bn = 8
-    while bn < 2048 and (2 * bn) * per_row <= vmem_budget:
-        bn *= 2
-    return max(8, min(bn, max(8, n)))
 
 
 def onehot_accumulate(ids, vals, k: int, *, valid=None, acc_dtype=jnp.float32):

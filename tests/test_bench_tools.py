@@ -1,0 +1,106 @@
+"""Bench-harness tool tests: the unified BENCH_*.json schema checker and the
+cross-PR regression comparison logic (no benchmarks are actually run)."""
+import json
+import os
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, REPO)
+
+from benchmarks.bench_regression import (  # noqa: E402
+    best_prior,
+    check_regressions,
+    comparable_metrics,
+)
+from tools.bench_trends import flatten_walls  # noqa: E402
+from tools.check_bench_schema import check_report  # noqa: E402
+
+GOOD = {
+    "bench": "BENCH_9",
+    "scale": "smoke",
+    "workload": {"rows": 128},
+    "regression": {
+        "algorithms": [{"name": "kmeans", "wall_s": 0.25}],
+        "wall_total_s": 0.25,
+    },
+    "claims": {"bit_equal": True},
+}
+
+
+def _write(tmp_path, name, doc):
+    p = tmp_path / name
+    p.write_text(json.dumps(doc))
+    return str(p)
+
+
+def test_repo_reports_pass_schema():
+    # results/ is gitignored — reports exist only after the benchmarks have
+    # run (locally or in the bench-smoke CI job), so validate what's there.
+    results = os.path.join(REPO, "results")
+    reports = [
+        os.path.join(results, f)
+        for f in sorted(os.listdir(results) if os.path.isdir(results) else [])
+        if f.startswith("BENCH_") and f.endswith(".json")
+    ]
+    if not reports:
+        pytest.skip("no benchmark reports generated yet")
+    for p in reports:
+        assert check_report(p) == [], p
+
+
+def test_schema_checker_accepts_good(tmp_path):
+    assert check_report(_write(tmp_path, "BENCH_9.json", GOOD)) == []
+
+
+@pytest.mark.parametrize("mutate,fragment", [
+    (lambda d: d.update(bench="BENCH_1"), "bench must be"),
+    (lambda d: d.pop("scale"), "scale"),
+    (lambda d: d.update(workload={}), "workload"),
+    (lambda d: d.update(claims={"x": "yes"}), "booleans"),
+    (lambda d: d.pop("claims"), "claims"),
+    (lambda d: d.pop("regression"), "payload"),
+    (lambda d: d.update(extra={"also": {}}), "payload"),
+    (lambda d: d.update(regression={"note": "no walls"}), "wall"),
+])
+def test_schema_checker_rejects_bad(tmp_path, mutate, fragment):
+    doc = json.loads(json.dumps(GOOD))
+    mutate(doc)
+    errors = check_report(_write(tmp_path, "BENCH_9.json", doc))
+    assert errors and any(fragment in e for e in errors), errors
+
+
+def test_comparable_metrics_flatten():
+    m = comparable_metrics(GOOD)
+    assert m == {"regression.kmeans.wall_s": 0.25}
+    # trend flattening includes the same paths plus section scalars
+    walls = flatten_walls(GOOD)
+    assert walls["regression.kmeans.wall_s"] == 0.25
+    assert walls["regression.wall_total_s"] == 0.25
+
+
+def test_best_prior_and_threshold(tmp_path):
+    prior = json.loads(json.dumps(GOOD))
+    prior["bench"] = "BENCH_7"
+    prior["regression"]["algorithms"][0]["wall_s"] = 0.10
+    _write(tmp_path, "BENCH_7.json", prior)
+    slower = json.loads(json.dumps(GOOD))
+    slower["regression"]["algorithms"][0]["wall_s"] = 0.30
+    _write(tmp_path, "BENCH_9.json", slower)
+    best = best_prior(str(tmp_path), exclude="BENCH_9.json")
+    assert best == {"regression.kmeans.wall_s": 0.10}
+
+    current = comparable_metrics(slower)
+    # 3x the best prior: fails a 1.0 threshold (2x), passes a 4.0 one (5x)
+    assert check_regressions(current, best, threshold=1.0)
+    assert not check_regressions(current, best, threshold=4.0)
+    # no prior at all -> baseline, never fails
+    assert not check_regressions(current, {}, threshold=0.0)
+
+
+def test_best_prior_skips_excluded_and_garbage(tmp_path):
+    _write(tmp_path, "BENCH_9.json", GOOD)
+    (tmp_path / "BENCH_4.json").write_text("{not json")
+    best = best_prior(str(tmp_path), exclude="BENCH_9.json")
+    assert best == {}

@@ -1,0 +1,111 @@
+"""Render a cross-PR benchmark trend table from ``results/BENCH_*.json``.
+
+Prints GitHub-flavoured markdown (CI appends it to the job summary): one
+row per metric, one column per BENCH file, newest column last, with the
+per-metric best value marked.  Metrics are the same bench-name-agnostic
+dotted paths ``benchmarks/bench_regression.py`` compares against — plus
+each report's headline wall section — so the table shows exactly what the
+regression gate sees.
+
+Usage: ``python tools/bench_trends.py [--results results/]``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+
+
+def _num(x) -> bool:
+    return isinstance(x, (int, float)) and not isinstance(x, bool)
+
+
+def flatten_walls(doc: dict) -> dict[str, float]:
+    """Every numeric wall/latency/throughput metric in the report, as
+    ``section.metric`` paths (``regression.algorithms`` rows become
+    ``regression.<name>.wall_s`` — the comparable form)."""
+    out: dict[str, float] = {}
+    for section, body in doc.items():
+        if section in ("bench", "scale", "workload", "claims"):
+            continue
+        if not isinstance(body, dict):
+            continue
+        for k, v in body.items():
+            if k == "algorithms" and isinstance(v, list):
+                for row in v:
+                    if isinstance(row, dict) and "name" in row:
+                        for mk, mv in row.items():
+                            if mk != "name" and _num(mv):
+                                out[f"{section}.{row['name']}.{mk}"] = mv
+            elif isinstance(v, dict):
+                for mk, mv in v.items():
+                    if _num(mv):
+                        out[f"{section}.{k}.{mk}"] = mv
+            elif _num(v):
+                out[f"{section}.{k}"] = v
+    return out
+
+
+def load_reports(results_dir: str) -> list[tuple[str, dict]]:
+    reports = []
+    for fname in os.listdir(results_dir):
+        m = re.fullmatch(r"BENCH_(\d+)\.json", fname)
+        if not m:
+            continue
+        try:
+            with open(os.path.join(results_dir, fname)) as f:
+                reports.append((int(m.group(1)), json.load(f)))
+        except (OSError, ValueError) as e:
+            print(f"<!-- skipped {fname}: {e} -->")
+    return [(f"BENCH_{n}", doc) for n, doc in sorted(reports)]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--results", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "results",
+    ))
+    args = ap.parse_args(argv)
+    reports = load_reports(args.results)
+    if not reports:
+        print("no BENCH_*.json reports found")
+        return 0
+
+    cols = [name for name, _ in reports]
+    tables = [flatten_walls(doc) for _, doc in reports]
+    metrics = sorted({k for t in tables for k in t})
+
+    print("### Benchmark trends\n")
+    print("| metric | " + " | ".join(cols) + " |")
+    print("|---|" + "---|" * len(cols))
+    for mk in metrics:
+        vals = [t.get(mk) for t in tables]
+        present = [v for v in vals if v is not None]
+        best = min(present) if present else None
+        cells = []
+        for v in vals:
+            if v is None:
+                cells.append("—")
+            elif v == best and len(present) > 1:
+                cells.append(f"**{v:.4g}**")
+            else:
+                cells.append(f"{v:.4g}")
+        print(f"| `{mk}` | " + " | ".join(cells) + " |")
+
+    print("\n### Claims\n")
+    print("| report | claims |")
+    print("|---|---|")
+    for name, doc in reports:
+        claims = doc.get("claims", {})
+        rendered = ", ".join(
+            f"{k}={'✅' if v else '❌'}" for k, v in sorted(claims.items())
+        )
+        print(f"| {name} | {rendered} |")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,131 @@
+"""Validate every ``results/BENCH_*.json`` against the unified report shape.
+
+One schema for all cross-PR benchmark reports (BENCH_6 serving, BENCH_7
+streaming, BENCH_8 regression, and whatever comes next):
+
+* ``bench``   — string matching the file name (``BENCH_8`` in
+  ``BENCH_8.json``), so a copied report can't masquerade as another PR's;
+* ``scale``   — non-empty string (``smoke`` / ``default`` / ``big``);
+* ``workload``— non-empty object of scalars: the pinned sizes that make
+  walls comparable across files;
+* exactly ONE payload section — any other key mapping to an object — that
+  contains at least one numeric wall metric (a key containing ``wall`` or
+  ``_ms``/``_s``-suffixed latency), because a report without a wall can't
+  participate in trend/regression comparison;
+* ``claims``  — non-empty object of booleans.
+
+Exit status is the number of invalid files.  CI runs this in the
+bench-smoke job right after the reports are (re)generated.
+
+Usage: ``python tools/check_bench_schema.py [files...]``
+(defaults to every ``results/BENCH_*.json``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import sys
+
+RESULTS = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "results"
+)
+META_KEYS = ("bench", "scale", "workload", "claims")
+
+
+def _is_wall_key(k: str) -> bool:
+    return "wall" in k or k.endswith("_ms") or k.endswith("_s")
+
+
+def _numeric_walls(body) -> int:
+    """Count numeric wall metrics in a payload section, including one level
+    of nesting and ``algorithms``-style row lists."""
+    count = 0
+    items = []
+    if isinstance(body, dict):
+        items = list(body.items())
+    for k, v in items:
+        if isinstance(v, (int, float)) and not isinstance(v, bool):
+            count += _is_wall_key(k)
+        elif isinstance(v, dict):
+            count += _numeric_walls(v)
+        elif isinstance(v, list):
+            for row in v:
+                count += _numeric_walls(row)
+    return count
+
+
+def check_report(path: str) -> list[str]:
+    errors = []
+    name = os.path.basename(path)
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        return [f"unreadable JSON: {e}"]
+    if not isinstance(doc, dict):
+        return ["top level must be an object"]
+
+    m = re.fullmatch(r"(BENCH_\d+)\.json", name)
+    expect = m.group(1) if m else None
+    if doc.get("bench") != expect:
+        errors.append(
+            f"bench must be {expect!r} (the file name), got {doc.get('bench')!r}"
+        )
+    if not (isinstance(doc.get("scale"), str) and doc["scale"]):
+        errors.append(f"scale must be a non-empty string, got {doc.get('scale')!r}")
+    wl = doc.get("workload")
+    if not (isinstance(wl, dict) and wl):
+        errors.append("workload must be a non-empty object")
+    claims = doc.get("claims")
+    if not (isinstance(claims, dict) and claims):
+        errors.append("claims must be a non-empty object")
+    elif not all(isinstance(v, bool) for v in claims.values()):
+        bad = {k: v for k, v in claims.items() if not isinstance(v, bool)}
+        errors.append(f"claims values must be booleans, got {bad!r}")
+
+    payload = {
+        k: v for k, v in doc.items()
+        if k not in META_KEYS and isinstance(v, dict)
+    }
+    stray = [
+        k for k in doc
+        if k not in META_KEYS and not isinstance(doc[k], dict)
+    ]
+    if stray:
+        errors.append(f"non-object top-level keys besides meta: {stray}")
+    if len(payload) != 1:
+        errors.append(
+            f"expected exactly one payload section, got {sorted(payload) or 'none'}"
+        )
+    else:
+        ((section, body),) = payload.items()
+        if _numeric_walls(body) == 0:
+            errors.append(f"payload section {section!r} has no numeric wall metric")
+    return errors
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    paths = argv or sorted(
+        os.path.join(RESULTS, f)
+        for f in os.listdir(RESULTS)
+        if re.fullmatch(r"BENCH_\d+\.json", f)
+    )
+    if not paths:
+        print("no BENCH_*.json reports to check")
+        return 0
+    bad = 0
+    for p in paths:
+        errors = check_report(p)
+        if errors:
+            bad += 1
+            for e in errors:
+                print(f"{os.path.basename(p)}: FAIL: {e}")
+        else:
+            print(f"{os.path.basename(p)}: ok")
+    return bad
+
+
+if __name__ == "__main__":
+    sys.exit(main())
