@@ -1,0 +1,191 @@
+"""BENCH 9 — fault-tolerant execution: supervision overhead + crash/resume.
+
+The PR 9 acceptance workload: a fused k-means-style program driven through
+``run_loop`` three ways —
+
+* **fault-free, supervised vs raw** — the same loop under
+  ``retry=RetryPolicy()`` and ``retry=None``; the supervisor is a
+  try/except wrapper on the dispatch path, so its fault-free overhead
+  should be noise;
+* **chaos** — a deterministic transient fault on every 7th ``dispatch``
+  hit; bounded retry re-runs the failed dispatch (faults fire before any
+  carry writes, so the result stays bit-equal) and the injection ledger
+  must balance (``injected == retried + ... + fatal``);
+* **crash + resume vs restart** — checkpoint every ``ckpt`` iterations,
+  inject one fatal fault near the end, then resume from the latest
+  checkpoint and compare against re-running from iteration zero.
+
+Claims recorded as measurements:
+
+* ``overhead_small`` — supervised wall within 15% of the raw wall;
+* ``chaos_bit_equal`` — retried run identical to the fault-free run;
+* ``resume_bit_equal`` — resumed run identical to the fault-free run;
+* ``resume_faster_than_restart`` — resuming the tail beats a full rerun;
+* ``ledger_balanced`` — every injected fault has exactly one disposition.
+
+Run:  PYTHONPATH=src:. python -m benchmarks.bench9_faults
+Writes ``results/BENCH_9.json``.  ``BENCH_SCALE=smoke`` shrinks the dataset
+for CI; ``BENCH_SCALE=big`` grows it.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+BIG = os.environ.get("BENCH_SCALE") == "big"
+SMOKE = os.environ.get("BENCH_SCALE") == "smoke"
+
+
+def _sizes():
+    if SMOKE:
+        return {"n": 1 << 14, "dim": 8, "k": 32, "iters": 24, "ckpt": 6}
+    if BIG:
+        return {"n": 1 << 18, "dim": 16, "k": 128, "iters": 48, "ckpt": 8}
+    return {"n": 1 << 16, "dim": 16, "k": 64, "iters": 36, "ckpt": 6}
+
+
+def _loop_program(sess, pts, k, dim, centers0):
+    import jax.numpy as jnp
+
+    from repro.core.algorithms.kmeans import assign_inertia_mapper
+
+    pts_v = sess.distribute(pts)
+
+    def step(ctx, s):
+        c = s["centers"]
+        sums = ctx.map_reduce(
+            pts_v, assign_inertia_mapper, "sum",
+            jnp.zeros((k, dim + 2), jnp.float32), env=c,
+        )
+        counts = jnp.maximum(sums[:, dim:dim + 1], 1.0)
+        return {"centers": sums[:, :dim] / counts}
+
+    return sess.program(step), {"centers": jnp.asarray(centers0)}
+
+
+def _timed_loop(sess, prog, state0, iters, repeats=2, **kw):
+    best, out, info = float("inf"), None, None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out, info = sess.run_loop(prog, state0, max_iters=iters, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return best, out, info
+
+
+def main():
+    from repro.core import faults
+    from repro.core.session import BlazeSession
+
+    sz = _sizes()
+    n, dim, k, iters, ckpt = sz["n"], sz["dim"], sz["k"], sz["iters"], sz["ckpt"]
+    rng = np.random.RandomState(0)
+    # integer-valued f32: reassociation-free sums keep bit-equality checkable
+    pts = rng.randint(-30, 30, size=(n, dim)).astype(np.float32)
+    centers0 = pts[:k].copy()
+
+    faults.reset(env=False)
+
+    # -- phase 1: fault-free supervision overhead ---------------------------
+    sup = BlazeSession(retry=faults.RetryPolicy())
+    raw = BlazeSession(retry=None)
+    sup_prog, sup_state = _loop_program(sup, pts, k, dim, centers0)
+    raw_prog, raw_state = _loop_program(raw, pts, k, dim, centers0)
+    sup.run_loop(sup_prog, sup_state, max_iters=1)  # warm both executables
+    raw.run_loop(raw_prog, raw_state, max_iters=1)
+    sup_wall, sup_out, _ = _timed_loop(sup, sup_prog, sup_state, iters)
+    raw_wall, raw_out, _ = _timed_loop(raw, raw_prog, raw_state, iters)
+    ref = np.asarray(sup_out["centers"])
+    overhead_pct = 100.0 * (sup_wall - raw_wall) / raw_wall if raw_wall else 0.0
+
+    # -- phase 2: chaos — transient dispatch faults, bounded retry ----------
+    retries0 = sup.stats.retries
+    with faults.inject("dispatch", every=7):
+        t0 = time.perf_counter()
+        chaos_out, _ = sup.run_loop(sup_prog, sup_state, max_iters=iters)
+        chaos_wall = time.perf_counter() - t0
+    chaos_retries = sup.stats.retries - retries0
+    chaos_bit_equal = bool(np.array_equal(ref, np.asarray(chaos_out["centers"])))
+
+    # -- phase 3: fatal crash, resume from checkpoint vs restart ------------
+    crash_at = iters - 2
+    with tempfile.TemporaryDirectory() as ckdir:
+        crash_dir = os.path.join(ckdir, "crash")
+        crashed = False
+        # hit counters persist while armed, so aim past phase 2's hits
+        hits0 = faults.snapshot()["hits"].get("dispatch", 0)
+        with faults.inject("dispatch", at=hits0 + crash_at, fatal=True):
+            try:
+                sup.run_loop(sup_prog, sup_state, max_iters=iters,
+                             checkpoint=crash_dir, checkpoint_every=ckpt)
+            except faults.FatalFault:
+                crashed = True
+
+        # single shot: a second resume would restore the final checkpoint
+        # and do zero work, so best-of-N would be a lie here
+        resume_wall, res_out, res_info = _timed_loop(
+            sup, sup_prog, sup_state, iters, repeats=1,
+            checkpoint=crash_dir, checkpoint_every=ckpt, resume=True,
+        )
+        restart_dir = os.path.join(ckdir, "restart")
+        restart_wall, _, _ = _timed_loop(
+            sup, sup_prog, sup_state, iters,
+            checkpoint=restart_dir, checkpoint_every=ckpt,
+        )
+    resume_bit_equal = bool(np.array_equal(ref, np.asarray(res_out["centers"])))
+    resumed_from = res_info.resumed_from or 0
+
+    ledger = faults.snapshot()
+    faults.reset(env=False)
+
+    report = {
+        "bench": "BENCH_9",
+        "scale": "smoke" if SMOKE else ("big" if BIG else "default"),
+        "workload": {
+            "rows": n,
+            "dim": dim,
+            "k": k,
+            "iters": iters,
+            "checkpoint_every": ckpt,
+            "crash_at_dispatch": crash_at,
+        },
+        "faults": {
+            "supervised_wall_s": sup_wall,
+            "unsupervised_wall_s": raw_wall,
+            "overhead_pct": overhead_pct,
+            "chaos_wall_s": chaos_wall,
+            "chaos_retries": chaos_retries,
+            "resume_wall_s": resume_wall,
+            "restart_wall_s": restart_wall,
+            "resumed_from": resumed_from,
+            "resumed_iterations": res_info.iterations,
+            "injected_total": ledger["injected_total"],
+            "retried": ledger["dispositions"].get("retried", 0),
+            "fatal": ledger["dispositions"].get("fatal", 0),
+        },
+        "claims": {
+            "overhead_small": overhead_pct < 15.0,
+            "chaos_bit_equal": chaos_bit_equal,
+            "resume_bit_equal": resume_bit_equal,
+            "resume_faster_than_restart": resume_wall < restart_wall,
+            "crashed": crashed,
+            "ledger_balanced": bool(ledger["balanced"]),
+        },
+    }
+    os.makedirs("results", exist_ok=True)
+    with open("results/BENCH_9.json", "w") as f:
+        json.dump(report, f, indent=1)
+    print(json.dumps(report, indent=1))
+    assert report["claims"]["crashed"], report["faults"]
+    assert report["claims"]["chaos_bit_equal"]
+    assert report["claims"]["resume_bit_equal"]
+    assert report["claims"]["ledger_balanced"], ledger
+    assert report["claims"]["resume_faster_than_restart"], report["faults"]
+    return report
+
+
+if __name__ == "__main__":
+    main()

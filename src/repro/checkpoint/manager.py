@@ -30,6 +30,8 @@ from typing import Any
 import jax
 import numpy as np
 
+from repro.core import faults
+
 _SENTINEL = "MANIFEST.json"
 
 
@@ -53,6 +55,9 @@ class CheckpointManager:
     # -- save ---------------------------------------------------------------
 
     def save(self, step: int, tree, *, blocking: bool = True) -> str:
+        # Fired on the caller's thread (not the async writer) so injected
+        # write faults surface to whoever supervises the save.
+        faults.fault_point("checkpoint.write")
         leaves, treedef = _flatten(tree)
         if blocking:
             return self._write(step, leaves, str(treedef))

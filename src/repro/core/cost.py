@@ -42,6 +42,7 @@ import json
 import os
 import tempfile
 import threading
+import warnings
 from typing import Iterator
 
 import jax.numpy as jnp
@@ -59,6 +60,7 @@ __all__ = [
     "dense_tuning_candidates",
     "hash_table_candidates",
     "hash_tuning_candidates",
+    "next_capacity",
     "node_cost",
     "pick_engine",
     "segment_block_candidates",
@@ -226,6 +228,22 @@ def choose_table_cap(
         vmem_budget=vmem_budget,
     )[-1]
     return cap, max(8, min(bn, max(8, n))), probes
+
+
+def next_capacity(cap: int, *, limit: int = 1 << 20) -> int | None:
+    """The next rung of the hash-capacity grid above ``cap``.
+
+    The grid is the same one ``hash_table_candidates`` walks: powers of two
+    from 128 up to ``limit``.  Overflow escalation climbs it one rung per
+    re-dispatch; ``None`` means the grid is exhausted and the supervisor must
+    stop escalating (overflow stays counted, as before).
+    """
+    if cap >= limit:
+        return None
+    nxt = 128
+    while nxt <= cap:
+        nxt *= 2
+    return min(nxt, limit)
 
 
 # ---------------------------------------------------------------------------
@@ -431,6 +449,11 @@ class TuningCache:
         try:
             with os.fdopen(fd, "w") as f:
                 json.dump(doc, f, indent=1, sort_keys=True)
+                # fsync before the rename: os.replace orders the directory
+                # entry, not the data blocks — without the sync a crash can
+                # commit a truncated file under the final name.
+                f.flush()
+                os.fsync(f.fileno())
             os.replace(tmp, path)
         except BaseException:
             if os.path.exists(tmp):
@@ -439,11 +462,27 @@ class TuningCache:
 
     def load(self, path: str) -> int:
         """Merge entries from ``path`` (loaded winners keep their recorded
-        ``source``/``wall_s``); returns how many were loaded."""
-        with open(path) as f:
-            doc = json.load(f)
-        entries = doc.get("entries", {})
+        ``source``/``wall_s``); returns how many were loaded.
+
+        A truncated, corrupt, or otherwise unreadable cache is a warning,
+        not a crash: tuning is an optimisation, so the session starts with
+        whatever loaded (usually nothing) and re-measures on demand.
+        """
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+            entries = doc.get("entries", {})
+            items = [
+                (k, TunedConfig.from_dict(d)) for k, d in entries.items()
+            ]
+        except (OSError, ValueError, TypeError, UnicodeDecodeError) as e:
+            warnings.warn(
+                f"ignoring unreadable tuning cache {path!r}: {e}",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+            return 0
         with self._lock:
-            for k, d in entries.items():
-                self._entries[k] = TunedConfig.from_dict(d)
-        return len(entries)
+            for k, cfg in items:
+                self._entries[k] = cfg
+        return len(items)

@@ -68,6 +68,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.compat import shard_map
 
 from repro.core import containers as C
+from repro.core import faults
 from repro.core.plan import abstract_sig as _abstract
 from repro.core.reducers import Reducer, get_reducer
 from repro.core.serialization import narrowest_int_dtype
@@ -105,6 +106,12 @@ class MapReduceStats:
     # stable digest of this op's plan node (repro.core.plan) — identical for
     # the per-op and program spellings of the same op.
     plan_hash: str | None = None
+    # supervised-dispatch provenance (repro.core.faults / session supervisor):
+    # the engine this node was degraded FROM (None = never degraded), dispatch
+    # retries absorbed, and hash-capacity escalations taken for this call.
+    degraded_engine: str | None = None
+    retries: int = 0
+    escalations: int = 0
 
     def finalize(self) -> "MapReduceStats":
         def _get(x):
@@ -135,6 +142,9 @@ class MapReduceStats:
             kernel_table_cap=self.kernel_table_cap,
             kernel_probe_depth=self.kernel_probe_depth,
             plan_hash=self.plan_hash,
+            degraded_engine=self.degraded_engine,
+            retries=self.retries,
+            escalations=self.escalations,
         )
 
 
@@ -314,6 +324,9 @@ class RealCollectives:
         )
 
     def reduce(self, partial: Array, red: Reducer, wire: str) -> Array:
+        # Host code running during trace: an injected collective fault
+        # surfaces as a compile-time failure of the dispatch that traced it.
+        faults.fault_point("collective")
         return _collective_reduce(partial, red, self.axis, wire)
 
     def reduce_feedback(
@@ -641,6 +654,9 @@ def _map_reduce_dense(
 
     run_fn, kernel_meta = cache[cache_key]
     operands, _ = _source_operands(kind, source)
+    faults.fault_point("dispatch")
+    if engine == "pallas":
+        faults.fault_point("kernel.segment")
     merged, live, kernel_pairs = run_fn(env, target, *operands)
 
     val_bytes = {"bf16": 2, "int8": 1}.get(wire, jnp.dtype(target.dtype).itemsize)
@@ -910,6 +926,9 @@ def _map_reduce_hash(
 
     run_fn, kernel_meta = cache[cache_key]
     operands, _ = _source_operands(kind, source)
+    faults.fault_point("dispatch")
+    if engine == "pallas":
+        faults.fault_point("kernel.hash")
     nk, nv, novf, emitted, shipped, kernel_pairs = run_fn(
         env, target.table.keys, target.table.vals, target.table.overflow, *operands
     )

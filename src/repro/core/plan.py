@@ -232,6 +232,10 @@ class MapReduceNode:
     cost_estimate: float | None = None  # model units for the resolved engine
     tune_key: str = ""  # node hash at resolve time, before any tuned override
     tuned: TunedConfig | None = None  # the applied winner (measured or loaded)
+    # -- fault-supervision provenance: the engine a kernel fault degraded
+    # this node FROM (None = never degraded).  Like tuned, not part of
+    # stable_desc — but degradation rewrites ``engine``, which is.
+    degraded_from: str | None = None
 
     def stable_desc(self) -> str:
         return (
@@ -352,7 +356,12 @@ class Plan:
                     flags.append(f"group {chr(ord('A') + n.group)}")
                 if n.feedback:
                     flags.append("int8 feedback")
-                if n.engine_requested != n.engine and n.tuned is None:
+                if n.degraded_from is not None:
+                    flags.append(
+                        f"degraded {n.degraded_from!r} -> {n.engine!r} "
+                        "(kernel fault)"
+                    )
+                elif n.engine_requested != n.engine and n.tuned is None:
                     flags.append(f"requested {n.engine_requested!r}")
                 if n.tuned is not None:
                     cfg = n.tuned
@@ -459,6 +468,23 @@ def apply_tuned(node: MapReduceNode, red: Reducer, cfg: TunedConfig) -> None:
     node.tuned = cfg
 
 
+def degrade_node(node: MapReduceNode) -> None:
+    """Degrade a kernel-faulted node to the always-available eager engine.
+
+    Records where the node came FROM (rendered by ``explain`` and surfaced
+    as ``MapReduceStats.degraded_engine``) and drops any tuned kernel config
+    — a pinned Pallas geometry cannot lower the eager plan.  The rewritten
+    ``engine`` moves ``node.hash``/``cache_sig`` so the degraded executable
+    caches beside, never over, the faulted one; ``tune_key`` was captured
+    before any override and stays put.
+    """
+    if node.engine == "eager":
+        return
+    node.degraded_from = node.engine
+    node.engine = "eager"
+    node.tuned = None
+
+
 def build_mapreduce_node(
     idx: int,
     kind: str,
@@ -472,6 +498,7 @@ def build_mapreduce_node(
     key_range: int | None,
     env: Any,
     tuning: TuningCache | None = None,
+    degraded: set | None = None,
 ) -> MapReduceNode:
     """Build a MapReduce node and run the resolve-engines pass on it.
 
@@ -532,6 +559,11 @@ def build_mapreduce_node(
         cfg = tuning.get(node.tune_key)
         if cfg is not None:
             apply_tuned(node, red, cfg)
+    # A node the session supervisor already degraded stays degraded: the
+    # rebuilt node resolves straight to eager and hits the executable the
+    # recovery dispatch compiled (the no-cache-poisoning contract).
+    if degraded and node.tune_key in degraded:
+        degrade_node(node)
     return node
 
 

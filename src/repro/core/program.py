@@ -80,6 +80,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core import containers as C
+from repro.core import faults
 from repro.core import mapreduce as _mr
 from repro.core import plan as plan_mod
 from repro.core.plan import (
@@ -154,6 +155,7 @@ class LoopInfo:
     host_syncs: int  # blocking host materialisations (cond evaluations)
     converged: bool  # cond() went True before max_iters
     compiles: int  # program executables built during this loop (0 or 1)
+    resumed_from: int | None = None  # checkpointed iteration restored, if any
 
 
 @dataclasses.dataclass
@@ -172,6 +174,7 @@ class StreamInfo:
     compiles: int  # program executables built during this stream (0 or 1)
     prefetch: bool  # double-buffered background transfer was on
     bytes_streamed: int  # host->device block bytes moved across dispatches
+    resumed_from: int | None = None  # checkpointed epoch restored, if any
 
 
 def _source_key(kind: str, source) -> tuple:
@@ -359,6 +362,7 @@ class ProgramContext:
         self, n_shards: int, mode: str, coll=None, operands=None,
         residuals=None, hash_tables=None, plan: Plan | None = None,
         passes: tuple = DEFAULT_PASSES, tuning=None, overrides=None,
+        degraded=None,
     ):
         self._n_shards = n_shards
         self._mode = mode  # "discover" | "execute"
@@ -366,8 +370,11 @@ class ProgramContext:
         # TuningCache (cached winners apply to every node built), and
         # ``overrides`` maps tune_key -> candidate TunedConfig for the
         # throwaway measurement variants Program._maybe_tune builds.
+        # ``degraded`` is the session's set of kernel-faulted tune_keys:
+        # nodes matching it resolve straight to eager on (re)discovery.
         self._tuning = tuning
         self._overrides = overrides or {}
+        self._degraded = degraded
         self._tune_info: dict[int, tuple] = {}  # idx -> candidate-grid params
         inner = coll if coll is not None else _mr.AbstractCollectives(n_shards)
         if mode == "discover":
@@ -678,7 +685,7 @@ class ProgramContext:
                 idx=self._call_i, kind=kind, src=src_desc,
                 source_key=source_key, mapper=mapper, red=red, target=target,
                 engine=engine, wire=wire, key_range=key_range, env=env,
-                tuning=self._tuning,
+                tuning=self._tuning, degraded=self._degraded,
             )
             ov = self._overrides.get(node.tune_key)
             if ov is not None:
@@ -777,7 +784,7 @@ class ProgramContext:
                 idx=self._call_i, kind=kind, src=src_desc,
                 source_key=source_key, mapper=mapper, red=red, target=target,
                 engine=engine, wire="none", key_range=key_range, env=env,
-                tuning=self._tuning,
+                tuning=self._tuning, degraded=self._degraded,
             )
             ov = self._overrides.get(node.tune_key)
             if ov is not None:
@@ -964,6 +971,17 @@ class ProgramContext:
         )
 
 
+def _as_checkpoint_manager(checkpoint):
+    """Accept a ``CheckpointManager``, a directory path, or ``None``."""
+    if checkpoint is None:
+        return None
+    if isinstance(checkpoint, str):
+        from repro.checkpoint.manager import CheckpointManager
+
+        return CheckpointManager(checkpoint)
+    return checkpoint
+
+
 def _state_desc(state) -> str:
     leaves, treedef = jax.tree_util.tree_flatten(state)
     descs = ",".join(
@@ -1034,6 +1052,7 @@ class Program:
         ctx = ProgramContext(
             self._n_shards, "discover", passes=self._passes,
             tuning=self._session.tuning, overrides=self._overrides,
+            degraded=getattr(self._session, "_degraded", None),
         )
 
         def run(s):
@@ -1123,12 +1142,18 @@ class Program:
                 overrides=ov,
             )
             try:
+                faults.fault_point("tuning.measure")
                 out = variant(state, 1)
                 jax.block_until_ready(jax.tree_util.tree_leaves(out))
                 t0 = time.perf_counter()
                 out = variant(state, 1)
                 jax.block_until_ready(jax.tree_util.tree_leaves(out))
                 wall = time.perf_counter() - t0
+            except faults.InjectedFault as e:
+                # A faulted candidate is simply not measured — tuning is an
+                # optimisation, so the fault is absorbed, never retried.
+                faults.record("absorbed", e)
+                continue
             except Exception:
                 continue
             measured += 1
@@ -1263,17 +1288,22 @@ class Program:
         # Residual AND hash-table state outlive the dispatch: the executable
         # returns the updated per-shard arrays and the next dispatch feeds
         # them back in, so both stay live across blocks (even unroll=1).
-        self._residual_state[key] = tuple(
-            jnp.zeros((n_shards,) + shape, dtype)
-            for shape, dtype in plan.residual_specs
-        )
-        self._hash_state[key] = (
-            hash_keys,
-            tuple(
-                (hm.table.keys, hm.table.vals, hm.table.overflow)
-                for hm in plan.hash_targets.values()
-            ),
-        )
+        # A rebuild for an already-carried signature (engine degradation
+        # dropped the executable mid-run) keeps the live carry — degradation
+        # must not lose accumulated state.
+        if key not in self._residual_state:
+            self._residual_state[key] = tuple(
+                jnp.zeros((n_shards,) + shape, dtype)
+                for shape, dtype in plan.residual_specs
+            )
+        if key not in self._hash_state:
+            self._hash_state[key] = (
+                hash_keys,
+                tuple(
+                    (hm.table.keys, hm.table.vals, hm.table.overflow)
+                    for hm in plan.hash_targets.values()
+                ),
+            )
         self._stream_state[key] = (tuple(stream_keys), tuple(stream_sources))
         entry = (jax.jit(fused), tuple(operands))
         self._cache[key] = entry
@@ -1312,6 +1342,104 @@ class Program:
                 ),
             )
 
+    # -- fault supervision ----------------------------------------------------
+
+    def degrade(self) -> int:
+        """Degrade every live Pallas node of this program to eager.
+
+        Called by the session supervisor on a kernel fault: the faulted
+        nodes' ``tune_key``s go into the session's degraded set (so every
+        later build — this program's, a per-op call's, or another
+        program's — resolves them straight to eager) and the compiled
+        executables are dropped so the next dispatch rebuilds.  Carry state
+        (residuals, hash tables) survives the rebuild; the tuning cache is
+        never touched.  Returns how many nodes were degraded.
+        """
+        degraded = getattr(self._session, "_degraded", None)
+        if degraded is None:
+            return 0
+        n = 0
+        for key, plan in self._plans.items():
+            hit = False
+            for node in plan.mapreduce_nodes():
+                if (
+                    node.engine == "pallas"
+                    and not node.dead
+                    and node.cse_of is None
+                ):
+                    degraded.add(node.tune_key)
+                    hit = True
+                    n += 1
+            if hit:
+                self._cache.pop(key, None)
+        return n
+
+    # -- carry export/restore (epoch-granular resume) -------------------------
+
+    def export_carry(self, state) -> dict:
+        """The program's cross-dispatch carry for ``state``'s signature, as
+        a checkpointable pytree: error-feedback residuals and hash-target
+        tables.  Together with the user state and the loop position this
+        fully determines the remainder of a run — the resume payload of
+        ``run_loop``/``run_stream``."""
+        key = _mr._abstract(state)
+        self._build(state)
+        _hash_keys, hash_tuples = self._hash_state[key]
+        return {
+            "residual": list(self._residual_state[key]),
+            "hash": [list(t) for t in hash_tuples],
+        }
+
+    def import_carry(self, state, carry: dict) -> None:
+        """Overwrite the carry for ``state``'s signature with a previously
+        exported (and checkpoint-restored) one."""
+        key = _mr._abstract(state)
+        self._build(state)
+        self._residual_state[key] = tuple(carry["residual"])
+        hash_keys, _old = self._hash_state[key]
+        self._hash_state[key] = (
+            hash_keys,
+            tuple(tuple(t) for t in carry["hash"]),
+        )
+
+    def checkpoint_payload(self, state, pos: int) -> dict:
+        """The full resume payload: user state + carry + position."""
+        return {
+            "state": state,
+            "carry": self.export_carry(state),
+            "pos": jnp.asarray(pos, jnp.int32),
+        }
+
+    def save_checkpoint(self, manager, state, pos: int) -> str:
+        """Supervised checkpoint save: transient ``checkpoint.write`` faults
+        are retried (bounded), fatal ones propagate."""
+        payload = self.checkpoint_payload(state, pos)
+        tries = 0
+        while True:
+            try:
+                return manager.save(pos, payload)
+            except faults.FatalFault as e:
+                faults.record("fatal", e)
+                raise
+            except faults.TransientFault as e:
+                tries += 1
+                if tries >= 3:
+                    faults.record("fatal", e)
+                    raise
+                faults.record("retried", e)
+
+    def restore_checkpoint(self, manager, state):
+        """Restore the latest checkpoint into ``(state, position)``; returns
+        ``(state, None)`` when no checkpoint exists.  The carry is installed
+        on this program as a side effect."""
+        template = self.checkpoint_payload(state, 0)
+        step, restored = manager.restore_latest(template)
+        if step is None:
+            return state, None
+        state = restored["state"]
+        self.import_carry(state, restored["carry"])
+        return state, int(jax.device_get(restored["pos"]))
+
     # -- run -----------------------------------------------------------------
 
     def __call__(self, state, n_iters: int = 1, *, stream_blocks=None):
@@ -1324,6 +1452,17 @@ class Program:
         """
         key = _mr._abstract(state)
         fn, operands = self._build(state)
+        # Fault points fire BEFORE the executable runs or any carry is
+        # written back, so a supervised retry of this dispatch is exact.
+        faults.fault_point("dispatch")
+        if self.plan is not None and faults.registry.armed:
+            for node in self.plan.mapreduce_nodes():
+                if node.engine != "pallas" or node.dead or node.cse_of is not None:
+                    continue
+                faults.fault_point(
+                    "kernel.hash" if node.target_kind == "hash"
+                    else "kernel.segment"
+                )
         residuals = self._residual_state[key]
         hash_keys, hash_tuples = self._hash_state[key]
         flat_hash = [a for t in hash_tuples for a in t]
@@ -1359,6 +1498,9 @@ class Program:
         cond: Callable | None = None,
         prefetch: bool = True,
         depth: int = 2,
+        checkpoint=None,
+        checkpoint_every: int | None = None,
+        resume: bool = False,
     ):
         """Out-of-core epochs: stream every block through ONE executable.
 
@@ -1375,9 +1517,22 @@ class Program:
 
         ``cond(state) -> bool`` is evaluated once per epoch (one host sync),
         mirroring ``run_loop``.  Returns ``(state, StreamInfo)``.
+
+        Epoch-granular fault tolerance: with ``checkpoint=`` (a
+        ``CheckpointManager`` or a directory) and ``checkpoint_every=K``,
+        the user state + program carry + epoch position are saved every K
+        completed epochs; ``resume=True`` restores the latest checkpoint and
+        continues from its epoch — bit-equal to the uninterrupted run,
+        because the carry and position fully determine the remainder (a
+        crash mid-epoch replays that epoch from its boundary).  Per-block
+        dispatches run under the session's retry policy, so transient
+        injected faults are absorbed in place.
         """
         from repro.data.pipeline import prefetch_iter
 
+        manager = _as_checkpoint_manager(checkpoint)
+        if resume and manager is None:
+            raise ValueError("resume=True needs checkpoint=")
         compiles0 = self.stats.compiles
         self._build(state)
         key = _mr._abstract(state)
@@ -1402,19 +1557,35 @@ class Program:
                 views[sk] = (bv.data, bv.base)
             return views
 
-        epochs = blocks = syncs = 0
+        resumed_from = None
+        if resume:
+            state, pos = self.restore_checkpoint(manager, state)
+            if pos is not None:
+                resumed_from = pos
+        epochs = resumed_from or 0
+        blocks = syncs = 0
         converged = False
-        for _ in range(max_epochs):
+        supervised = getattr(self._session, "supervised", None)
+        while epochs < max_epochs:
             if prefetch:
                 it = prefetch_iter(produce, range(n_blocks), depth=depth)
             else:
                 it = ((b, produce(b)) for b in range(n_blocks))
             for _b, views in it:
-                state = self(state, 1, stream_blocks=views)
+                if supervised is not None:
+                    state = supervised(
+                        lambda: self(state, 1, stream_blocks=views),
+                        program=self,
+                    )
+                else:
+                    state = self(state, 1, stream_blocks=views)
                 blocks += 1
                 if not prefetch:
                     jax.block_until_ready(jax.tree_util.tree_leaves(state))
             epochs += 1
+            if manager is not None and checkpoint_every:
+                if epochs % checkpoint_every == 0:
+                    self.save_checkpoint(manager, state, epochs)
             if cond is not None:
                 self._session.stats.host_syncs += 1
                 syncs += 1
@@ -1430,6 +1601,7 @@ class Program:
             compiles=self.stats.compiles - compiles0,
             prefetch=prefetch,
             bytes_streamed=blocks * bytes_per_block,
+            resumed_from=resumed_from,
         )
 
     def hash_result(self, target: C.DistHashMap) -> C.DistHashMap:

@@ -37,6 +37,7 @@ from jax.sharding import Mesh
 
 from repro.core import containers as C
 from repro.core import cost as cost_mod
+from repro.core import faults
 from repro.core import mapreduce as _mr
 from repro.core import plan as plan_mod
 # The engine-resolution policy moved to repro.core.plan in PR 5 (it is the
@@ -75,10 +76,19 @@ class SessionStats:
     program_compiles: int = 0  # fused-program executables built
     program_dispatches: int = 0  # fused-program blocks launched
     tune_measurements: int = 0  # candidate configs timed by the autotuner
+    retries: int = 0  # transient-fault dispatches re-attempted
+    degraded_nodes: int = 0  # pallas nodes demoted to eager after a kernel fault
+    escalations: int = 0  # hash targets regrown after overflow
 
     @property
     def hit_rate(self) -> float:
         return self.cache_hits / self.calls if self.calls else 0.0
+
+
+# Default supervision policy: 3 attempts, 5 ms initial backoff, 30 s deadline.
+# A module-level constant (not a fresh instance per session) so the default is
+# introspectable and tests can compare against it.
+_DEFAULT_RETRY = faults.RetryPolicy()
 
 
 class BlazeSession:
@@ -93,10 +103,30 @@ class BlazeSession:
 
     def __init__(
         self, mesh: Mesh | None = None, *, tuning_path: str | None = None,
+        retry: faults.RetryPolicy | None = _DEFAULT_RETRY,
+        escalate_overflow: bool = False, max_escalations: int = 3,
     ):
         self._mesh = mesh
         self._exec_cache: dict = {}
         self.stats = SessionStats()
+        # Supervision: every dispatch the session issues (per-op, chunked
+        # block, fused-program block, served batch) runs under ``retry`` —
+        # transient faults are re-attempted with exponential backoff, kernel
+        # faults demote the node's engine to eager, and (with
+        # ``escalate_overflow=True``) hash overflow regrows the target along
+        # the cost grid.  Escalation is opt-in because counted-and-dropped
+        # overflow is itself a documented contract (see the differential
+        # tests' near-capacity invariants).  ``retry=None`` disables
+        # supervision (dispatch exceptions propagate raw, as before PR 9).
+        self.retry = retry
+        self.escalate_overflow = escalate_overflow
+        self.max_escalations = max_escalations
+        # tune_keys of nodes demoted to eager after a pallas kernel fault.
+        # Consulted by every node build (per-op, program discovery, serve),
+        # so a node degraded once stays degraded for the session — and its
+        # eager executable caches under a *different* signature, leaving the
+        # faulted pallas entry's cache slots untouched (no poisoning).
+        self._degraded: set = set()
         # Measured autotuning winners, keyed by node plan-hash.  Populated by
         # tune=True dispatches; consulted by EVERY node build (per-op,
         # program discovery, serve), so a winner measured once is reused by
@@ -171,7 +201,7 @@ class BlazeSession:
             idx=0, kind=kind, src=plan_mod.source_desc(kind, source),
             source_key=None, mapper=mapper, red=red, target=target,
             engine=engine, wire=wire, key_range=key_range, env=env,
-            tuning=self.tuning,
+            tuning=self.tuning, degraded=self._degraded,
         )
         if (
             tune
@@ -194,16 +224,27 @@ class BlazeSession:
                 env, shuffle_slack, key_range, node, return_stats,
             )
         if isinstance(target, C.DistHashMap):
-            out, stats = _mr._map_reduce_hash(
-                kind, source, mapper, red, target, mesh, n_shards, engine,
-                shuffle_slack, env, key_range=key_range,
-                cache=self._exec_cache, node=node, tuned=node.tuned,
+            def dispatch_hash(tgt):
+                return _mr._map_reduce_hash(
+                    kind, source, mapper, red, tgt, mesh, n_shards,
+                    node.engine, shuffle_slack, env, key_range=key_range,
+                    cache=self._exec_cache, node=node, tuned=node.tuned,
+                )
+
+            out, stats = self._dispatch_supervised(
+                lambda: dispatch_hash(target), node
+            )
+            out, stats = self._maybe_escalate(
+                out, stats, target, red, node, dispatch_hash
             )
         else:
-            out, stats = _mr._map_reduce_dense(
-                kind, source, mapper, red, jnp.asarray(target), mesh,
-                n_shards, engine, wire, env, return_stats,
-                cache=self._exec_cache, node=node, tuned=node.tuned,
+            out, stats = self._dispatch_supervised(
+                lambda: _mr._map_reduce_dense(
+                    kind, source, mapper, red, jnp.asarray(target), mesh,
+                    n_shards, node.engine, wire, env, return_stats,
+                    cache=self._exec_cache, node=node, tuned=node.tuned,
+                ),
+                node,
             )
         self.stats.calls += 1
         self.stats.compiles += stats.compiles
@@ -232,7 +273,7 @@ class BlazeSession:
         hash_target = isinstance(target, C.DistHashMap)
         out = target if hash_target else jnp.asarray(target)
         emitted = shipped = payload = 0
-        compiles = cache_hits = 0
+        compiles = cache_hits = retries = 0
         last_stats = None
 
         def produce(b):
@@ -245,22 +286,29 @@ class BlazeSession:
         )
         for _b, bv in blocks:
             if hash_target:
-                out, st = _mr._map_reduce_hash(
-                    "chunked", bv, mapper, red, out, mesh, n_shards, engine,
-                    shuffle_slack, env, key_range=key_range,
-                    cache=self._exec_cache, node=node, tuned=node.tuned,
+                out, st = self._dispatch_supervised(
+                    lambda bv=bv, out=out: _mr._map_reduce_hash(
+                        "chunked", bv, mapper, red, out, mesh, n_shards,
+                        node.engine, shuffle_slack, env, key_range=key_range,
+                        cache=self._exec_cache, node=node, tuned=node.tuned,
+                    ),
+                    node,
                 )
             else:
-                out, st = _mr._map_reduce_dense(
-                    "chunked", bv, mapper, red, out, mesh, n_shards, engine,
-                    wire, env, return_stats, cache=self._exec_cache,
-                    node=node, tuned=node.tuned,
+                out, st = self._dispatch_supervised(
+                    lambda bv=bv, out=out: _mr._map_reduce_dense(
+                        "chunked", bv, mapper, red, out, mesh, n_shards,
+                        node.engine, wire, env, return_stats,
+                        cache=self._exec_cache, node=node, tuned=node.tuned,
+                    ),
+                    node,
                 )
             emitted = emitted + st.pairs_emitted
             shipped = shipped + st.pairs_shipped
             payload = payload + st.shuffle_payload_bytes
             compiles += st.compiles
             cache_hits += st.cache_hits
+            retries += st.retries
             last_stats = st
         stats = _dc.replace(
             last_stats,
@@ -269,6 +317,7 @@ class BlazeSession:
             shuffle_payload_bytes=payload,
             compiles=compiles,
             cache_hits=cache_hits,
+            retries=retries,
             dispatches=source.n_blocks,
         )
         self.stats.calls += 1
@@ -276,6 +325,211 @@ class BlazeSession:
         self.stats.cache_hits += stats.cache_hits
         self.stats.dispatches += stats.dispatches
         return (out, stats) if return_stats else out
+
+    # -- supervised dispatch (fault recovery) --------------------------------
+
+    def supervised(self, attempt: Callable, *, program=None):
+        """Run one dispatch ``attempt()`` under the session's retry policy.
+
+        The recovery state machine (see docs/architecture.md):
+
+        * ``faults.FatalFault`` — recorded and re-raised immediately;
+        * a *kernel* fault (injected ``kernel.*``, or any real exception
+          while a pallas node is live) — if ``program`` is given and still
+          has pallas nodes, those nodes are demoted to eager
+          (``program.degrade()``) and the dispatch re-attempted.  Live carry
+          is preserved: all fault points fire before the executable runs, so
+          the retry replays the exact same block;
+        * any other ``faults.TransientFault`` — re-attempted up to
+          ``retry.attempts`` times with exponential backoff, bounded by
+          ``retry.deadline_s``; exhaustion records the fault as fatal and
+          re-raises.
+
+        Every injected fault is recorded in ``faults.registry`` under exactly
+        one disposition, so the chaos suite's conservation law
+        (injected == retried + degraded + escalated + fatal + absorbed)
+        holds across any schedule.
+        """
+        policy = self.retry
+        if policy is None:
+            return attempt()
+        t0 = time.monotonic()
+        delay = policy.backoff_s
+        tries = 0
+        while True:
+            try:
+                return attempt()
+            except faults.FatalFault as e:
+                faults.record("fatal", e)
+                raise
+            except Exception as e:  # noqa: BLE001 — classified below
+                transient = isinstance(e, faults.TransientFault)
+                kernel = transient and e.point.startswith("kernel.")
+                real = not isinstance(e, faults.InjectedFault)
+                if (kernel or real) and program is not None:
+                    if program.degrade() > 0:
+                        faults.record("degraded", e)
+                        self.stats.degraded_nodes += 1
+                        continue
+                if not transient:
+                    raise
+                tries += 1
+                deadline_hit = (
+                    policy.deadline_s is not None
+                    and time.monotonic() - t0 + delay > policy.deadline_s
+                )
+                if tries >= policy.attempts or deadline_hit:
+                    faults.record("fatal", e)
+                    raise
+                faults.record("retried", e)
+                self.stats.retries += 1
+                if delay > 0:
+                    time.sleep(delay)
+                delay *= policy.multiplier
+
+    def _degrade_op_node(self, node, e) -> None:
+        """Demote a per-op node to eager after a kernel fault.
+
+        The tune_key lands in ``self._degraded`` so every later build of the
+        same logical node (per-op, program, serve) is born degraded; the
+        faulted pallas executable's cache entry is dropped, and the eager
+        rebuild caches under the node's *new* signature (engine is part of
+        ``stable_desc``), so the pallas entry can never be served again —
+        and nothing else in the cache is touched.
+        """
+        self._degraded.add(node.tune_key)
+        if node.cache_sig is not None:
+            self._exec_cache.pop(node.cache_sig, None)
+        plan_mod.degrade_node(node)
+        faults.record("degraded", e)
+        self.stats.degraded_nodes += 1
+
+    def _dispatch_supervised(self, dispatch: Callable, node):
+        """``supervised`` specialised to one per-op node: kernel faults
+        degrade just this node (not a whole program) and the returned
+        ``MapReduceStats`` carries the recovery provenance
+        (``degraded_engine``, ``retries``)."""
+        policy = self.retry
+        if policy is None:
+            return dispatch()
+        t0 = time.monotonic()
+        delay = policy.backoff_s
+        tries = retries = 0
+        while True:
+            try:
+                out, stats = dispatch()
+                if retries or node.degraded_from is not None:
+                    stats = dataclasses.replace(
+                        stats, retries=retries,
+                        degraded_engine=node.degraded_from,
+                    )
+                return out, stats
+            except faults.FatalFault as e:
+                faults.record("fatal", e)
+                raise
+            except Exception as e:  # noqa: BLE001 — classified below
+                transient = isinstance(e, faults.TransientFault)
+                kernel = transient and e.point.startswith("kernel.")
+                real = not isinstance(e, faults.InjectedFault)
+                if (kernel or real) and node.engine == "pallas":
+                    self._degrade_op_node(node, e)
+                    continue
+                if not transient:
+                    raise
+                tries += 1
+                deadline_hit = (
+                    policy.deadline_s is not None
+                    and time.monotonic() - t0 + delay > policy.deadline_s
+                )
+                if tries >= policy.attempts or deadline_hit:
+                    faults.record("fatal", e)
+                    raise
+                faults.record("retried", e)
+                self.stats.retries += 1
+                retries += 1
+                if delay > 0:
+                    time.sleep(delay)
+                delay *= policy.multiplier
+
+    def _maybe_escalate(self, out, stats, target, red, node, dispatch):
+        """Hash-overflow recovery: if the dispatch dropped pairs (overflow
+        grew), regrow the target to the next capacity on the cost grid and
+        re-dispatch the *same* op against the grown original.
+
+        ``map_reduce`` is functional (merged-into-target returns a NEW
+        container) and ``shard_of_key`` is capacity-independent, so the
+        re-dispatch is exact — the failed output is simply discarded.
+        Bounded by ``max_escalations``; each round is counted in
+        ``MapReduceStats.escalations`` and ``session.stats.escalations``.
+        """
+        if self.retry is None or not self.escalate_overflow:
+            return out, stats
+        base = target.total_overflow()
+        new = out.total_overflow()
+        escal = 0
+        cur = target
+        while new > base and escal < self.max_escalations:
+            cap = cost_mod.next_capacity(cur.capacity_per_shard)
+            if cap is None:
+                break
+            cur = self._grow_hash_target(cur, cap, red)
+            escal += 1
+            out, st = self._dispatch_supervised(
+                lambda tgt=cur: dispatch(tgt), node
+            )
+            stats = dataclasses.replace(
+                st,
+                escalations=escal,
+                compiles=stats.compiles + st.compiles,
+                cache_hits=stats.cache_hits + st.cache_hits,
+                dispatches=stats.dispatches + st.dispatches,
+                retries=stats.retries + st.retries,
+            )
+            base = cur.total_overflow()
+            new = out.total_overflow()
+        if escal:
+            self.stats.escalations += escal
+        return out, stats
+
+    def _grow_hash_target(self, target: C.DistHashMap, new_cap: int, red):
+        """Rebuild ``target`` with ``new_cap`` slots per shard, re-inserting
+        every live entry on its original shard (``shard_of_key`` does not
+        depend on capacity, so entries never migrate between shards).
+        Historical per-shard overflow counters are carried over so the
+        caller's overflow-delta test sees only *new* drops."""
+        keys = np.asarray(jax.device_get(target.table.keys))
+        vals = np.asarray(jax.device_get(target.table.vals))
+        ovf = np.asarray(jax.device_get(target.table.overflow))
+        val_shape = vals.shape[2:]
+        grown = C.make_dist_hashmap(
+            self.mesh, new_cap, val_shape=val_shape,
+            val_dtype=target.table.vals.dtype, reducer=red.name,
+        )
+        nk = np.array(jax.device_get(grown.table.keys))
+        nv = np.array(jax.device_get(grown.table.vals))
+        no = np.array(jax.device_get(grown.table.overflow))
+        for s in range(target.n_shards):
+            valid = keys[s] != C.EMPTY_KEY
+            if not valid.any():
+                no[s] = no[s] + ovf[s]
+                continue
+            t = C.hashmap_insert(
+                C.HashTable(
+                    jnp.asarray(nk[s]), jnp.asarray(nv[s]),
+                    jnp.asarray(no[s]),
+                ),
+                jnp.asarray(keys[s]), jnp.asarray(vals[s]),
+                jnp.asarray(valid), red, max_probes=64,
+            )
+            nk[s] = np.asarray(jax.device_get(t.keys))
+            nv[s] = np.asarray(jax.device_get(t.vals))
+            no[s] = np.asarray(jax.device_get(t.overflow)) + ovf[s]
+        table = C.HashTable(
+            jax.device_put(jnp.asarray(nk), grown.table.keys.sharding),
+            jax.device_put(jnp.asarray(nv), grown.table.vals.sharding),
+            jax.device_put(jnp.asarray(no), grown.table.overflow.sharding),
+        )
+        return dataclasses.replace(grown, table=table)
 
     # -- measured autotuning (tune=True) -------------------------------------
 
@@ -339,6 +593,7 @@ class BlazeSession:
                 )
 
             try:
+                faults.fault_point("tuning.measure")
                 out, st = run()  # compile + warm
                 leaves = (
                     (out.table.keys, out.table.vals, out.table.overflow)
@@ -355,6 +610,12 @@ class BlazeSession:
                 )
                 jax.block_until_ready(leaves)
                 wall = time.perf_counter() - t0
+            except faults.InjectedFault as e:
+                # A faulted measurement just loses the race — the candidate
+                # is skipped, nothing retries, and the ledger records the
+                # injection as absorbed.
+                faults.record("absorbed", e)
+                continue
             except Exception:  # noqa: BLE001 — a failed candidate just loses
                 continue
             measured += 1
@@ -443,6 +704,9 @@ class BlazeSession:
         cond: Callable | None = None,
         max_iters: int,
         unroll: int = 1,
+        checkpoint=None,
+        checkpoint_every: int | None = None,
+        resume: bool = False,
     ):
         """Drive a fused ``Program``: ``unroll`` iterations per dispatch.
 
@@ -452,19 +716,43 @@ class BlazeSession:
         ``unroll`` iterations instead of one per iteration.  Returns
         ``(state, LoopInfo)``; ``LoopInfo`` carries the assertable counters
         (iterations, dispatches, host_syncs, compiles).
+
+        ``checkpoint=`` (a ``CheckpointManager`` or directory path) with
+        ``checkpoint_every=k`` saves program state + carry + position every
+        k iterations at dispatch boundaries; ``resume=True`` restores the
+        latest checkpoint first and continues from its iteration — the
+        resumed run is bit-equal to the uninterrupted one
+        (``LoopInfo.resumed_from`` carries the restored position).
+        Dispatches run supervised (see ``supervised``).
         """
-        from repro.core.program import LoopInfo
+        from repro.core.program import LoopInfo, _as_checkpoint_manager
 
         if unroll < 1:
             raise ValueError(f"unroll must be >= 1, got {unroll}")
+        manager = _as_checkpoint_manager(checkpoint)
+        if resume and manager is None:
+            raise ValueError("resume=True requires checkpoint=")
         compiles0 = program.stats.compiles
         it = dispatches = host_syncs = 0
+        resumed_from = None
+        if resume:
+            state, pos = program.restore_checkpoint(manager, state)
+            if pos is not None:
+                resumed_from = it = pos
+        start_it = it
+        last_saved = it
         converged = False
         while it < max_iters:
             u = min(unroll, max_iters - it)
-            state = program(state, u)
+            state = self.supervised(
+                lambda state=state, u=u: program(state, u), program=program
+            )
             dispatches += 1
             it += u
+            if manager is not None and checkpoint_every:
+                if it - last_saved >= checkpoint_every:
+                    program.save_checkpoint(manager, state, it)
+                    last_saved = it
             if cond is not None:
                 self.stats.host_syncs += 1
                 host_syncs += 1
@@ -472,11 +760,12 @@ class BlazeSession:
                     converged = True
                     break
         return state, LoopInfo(
-            iterations=it,
+            iterations=it - start_it,
             dispatches=dispatches,
             host_syncs=host_syncs,
             converged=converged,
             compiles=program.stats.compiles - compiles0,
+            resumed_from=resumed_from,
         )
 
     def run_stream(
@@ -488,6 +777,9 @@ class BlazeSession:
         max_epochs: int = 1,
         prefetch: bool = True,
         depth: int = 2,
+        checkpoint=None,
+        checkpoint_every: int | None = None,
+        resume: bool = False,
     ):
         """Drive a fused ``Program`` over its chunked (out-of-core) sources.
 
@@ -496,10 +788,16 @@ class BlazeSession:
         executable (block k+1 prefetched while block k reduces), and
         ``cond(state)`` is evaluated once per epoch.  Returns
         ``(state, StreamInfo)``.
+
+        ``checkpoint=`` / ``checkpoint_every=`` / ``resume=`` mirror
+        ``run_loop`` at epoch granularity: the stream position saved is the
+        epoch count, and a resumed run replays the remaining epochs
+        bit-equal to the uninterrupted one (``StreamInfo.resumed_from``).
         """
         return program.run_stream(
             state, max_epochs=max_epochs, cond=cond, prefetch=prefetch,
-            depth=depth,
+            depth=depth, checkpoint=checkpoint,
+            checkpoint_every=checkpoint_every, resume=resume,
         )
 
     def host_value(self, x):
@@ -551,6 +849,9 @@ class BlazeSession:
             "host_syncs": self.stats.host_syncs,
             "program_compiles": self.stats.program_compiles,
             "program_dispatches": self.stats.program_dispatches,
+            "retries": self.stats.retries,
+            "degraded_nodes": self.stats.degraded_nodes,
+            "escalations": self.stats.escalations,
         }
 
     def clear_cache(self) -> None:

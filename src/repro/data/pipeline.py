@@ -21,9 +21,13 @@ import numpy as np
 from jax.sharding import NamedSharding
 
 from repro.configs.base import ArchConfig
+from repro.core import faults
 
 _DONE = object()
 _PREFETCH_THREAD_NAME = "blaze-prefetch"
+#: Block reads are pure functions of the block index, so the worker may
+#: retry an injected read fault in place — results stay bit-equal.
+_READ_RETRIES = 3
 
 
 class _PrefetchFailure:
@@ -53,9 +57,30 @@ def prefetch_iter(
     * if the consumer abandons the iterator early (``break``, ``close()``,
       GC), a stop event unblocks the worker's bounded ``put`` so it exits
       instead of blocking forever on a full queue.
+
+    Each read passes the ``prefetch.read`` fault point.  Because ``produce``
+    is deterministic in its item, a :class:`~repro.core.faults.TransientFault`
+    is retried in the worker (bounded); a fatal fault — or an exhausted
+    retry budget — crosses the queue like any other worker exception.
     """
     q: queue.Queue = queue.Queue(maxsize=max(1, depth))
     stop = threading.Event()
+
+    def _read(it):
+        tries = 0
+        while True:
+            try:
+                faults.fault_point("prefetch.read")
+                return produce(it)
+            except faults.FatalFault as e:
+                faults.record("fatal", e)
+                raise
+            except faults.TransientFault as e:
+                tries += 1
+                if tries >= _READ_RETRIES:
+                    faults.record("fatal", e)
+                    raise
+                faults.record("retried", e)
 
     def _put(x) -> bool:
         # Bounded put that gives up once the consumer has gone away.
@@ -72,7 +97,7 @@ def prefetch_iter(
             for it in items:
                 if stop.is_set():
                     return
-                if not _put((it, produce(it))):
+                if not _put((it, _read(it))):
                     return
             _put(_DONE)
         except BaseException as e:  # noqa: BLE001 — must cross the thread

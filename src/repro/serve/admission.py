@@ -144,6 +144,11 @@ class Request:
     result: Any = None
     meta: dict = dataclasses.field(default_factory=dict)
     error: ServeError | None = None
+    # Set by the server's ``_finish`` (under its lock) the first time the
+    # request is accounted; makes finishing idempotent so the shutdown path
+    # can sweep stragglers without double-counting a race with the
+    # dispatcher's own fulfilment.
+    finished: bool = False
 
     def succeed(self, result: Any, meta: dict) -> None:
         self.result = result

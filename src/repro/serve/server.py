@@ -39,6 +39,7 @@ from typing import Any
 import jax
 
 from repro.core import containers as C
+from repro.core import faults
 from repro.core.session import BlazeSession
 from repro.serve import batching
 from repro.serve.admission import (
@@ -114,6 +115,12 @@ class BlazeServer:
         self._programs: dict[tuple, PreparedQuery] = {}  # the plan cache
         self._running = False
         self._paused = threading.Event()
+        # Requests the dispatcher has taken but not yet finished (keyed by
+        # request id — Request is an unhashable mutable dataclass) — what
+        # the shutdown drain sweeps.  ``_finish_lock`` also guards the
+        # per-request ``finished`` flag, making _finish idempotent.
+        self._inflight: dict[str, Request] = {}
+        self._finish_lock = threading.Lock()
         self._dispatcher: threading.Thread | None = None
         self._httpd: ThreadingHTTPServer | None = None
         self._http_thread: threading.Thread | None = None
@@ -154,15 +161,29 @@ class BlazeServer:
         self._http_thread.start()
         return self
 
-    def stop(self) -> None:
+    def stop(self, drain_timeout: float = 5.0) -> None:
+        """Graceful shutdown: refuse new admissions, answer everything still
+        queued with a typed ``SHUTDOWN``, let the dispatcher finish the batch
+        it holds for up to ``drain_timeout`` seconds, then answer any
+        straggler it didn't fulfil with ``SHUTDOWN`` too — no waiter is left
+        hanging until its request timeout."""
         if not self._running:
             return
         self._running = False
         for req in self._queue.close():
-            self._finish(req, ok=False)
-            req.fail(ServerClosedError("server stopped before dispatch"))
+            if self._finish(req, ok=False):
+                req.fail(ServerClosedError("server stopped before dispatch"))
         if self._dispatcher is not None:
-            self._dispatcher.join(timeout=30)
+            self._dispatcher.join(timeout=drain_timeout)
+        # Stragglers: taken by the dispatcher but not finished inside the
+        # drain deadline (or orphaned by a dispatcher crash).
+        with self._finish_lock:
+            stragglers = [
+                r for r in self._inflight.values() if not r.finished
+            ]
+        for req in stragglers:
+            if self._finish(req, ok=False):
+                req.fail(ServerClosedError("server shut down mid-flight"))
         if self._httpd is not None:
             self._httpd.shutdown()
             self._httpd.server_close()
@@ -251,8 +272,8 @@ class BlazeServer:
                 # Pause landed while we were inside take_batch — put the
                 # batch back so pause_dispatch() really holds the backlog.
                 for req in self._queue.requeue(batch):
-                    self._finish(req, ok=False)
-                    req.fail(ServerClosedError("server stopped"))
+                    if self._finish(req, ok=False):
+                        req.fail(ServerClosedError("server stopped"))
                 continue
             self._execute_batch(batch)
 
@@ -268,21 +289,38 @@ class BlazeServer:
         return prepared, False
 
     def _execute_batch(self, batch: list[Request]) -> None:
+        with self._finish_lock:
+            for req in batch:
+                self._inflight[req.id] = req
         groups = batching.dedup_groups(batch)
         executed: list[tuple[list[Request], PreparedQuery, Any, str]] = []
         served = 0
         # Phase 1: resolve + dispatch every execution group, NO host sync.
+        # Each group dispatch runs supervised: transient faults retry with
+        # backoff, kernel faults demote the program's pallas nodes to eager
+        # and re-dispatch — the query still answers, and the degradation is
+        # visible in /stats (recovery block) and the plan's explain().
         for group in groups:
             lead = group[0]
             try:
                 with self.session.lock:
                     compiles0 = self.session.stats.program_compiles
+                    retries0 = self.session.stats.retries
+                    degraded0 = self.session.stats.degraded_nodes
                     prepared, cached = self._prepared_for(lead)
                     # Isolation: shared resident programs carry per-shard
                     # state (hash tables, int8 residuals) across dispatches.
                     prepared.program.reset_carry()
-                    dev = prepared.run(lead.params)
+                    dev = self.session.supervised(
+                        lambda prepared=prepared, lead=lead:
+                            prepared.run(lead.params),
+                        program=prepared.program,
+                    )
                     compiled = self.session.stats.program_compiles - compiles0
+                    retried = self.session.stats.retries - retries0
+                    degraded = self.session.stats.degraded_nodes - degraded0
+                if retried or degraded:
+                    self.stats.on_recovery(retried, degraded)
                 self.stats.on_plan(cache_hit=(cached and compiled == 0))
                 cache = "hit" if (cached and compiled == 0) else "compile"
                 executed.append((group, prepared, dev, cache))
@@ -320,8 +358,10 @@ class BlazeServer:
             for j, req in enumerate(group):
                 # Account the finish BEFORE releasing the waiter, so "done
                 # is set" implies "counted in stats" (the property suite's
-                # drain check relies on this ordering).
-                self._finish(req, ok=True)
+                # drain check relies on this ordering).  A request the
+                # shutdown sweep already answered is skipped.
+                if not self._finish(req, ok=True):
+                    continue
                 req.succeed(payload, {
                     "plan_hash": prepared.plan_hash,
                     "cache": cache if j == 0 else "dedup",
@@ -334,12 +374,21 @@ class BlazeServer:
 
     def _fail_group(self, group: list[Request], err: ServeError) -> None:
         for req in group:
-            self._finish(req, ok=False)
-            req.fail(err)
+            if self._finish(req, ok=False):
+                req.fail(err)
 
-    def _finish(self, req: Request, *, ok: bool) -> None:
+    def _finish(self, req: Request, *, ok: bool) -> bool:
+        """Account one request's completion exactly once.  Returns False if
+        it was already finished (the shutdown sweep racing the dispatcher) —
+        the caller must then skip ``succeed``/``fail`` too."""
+        with self._finish_lock:
+            if req.finished:
+                return False
+            req.finished = True
+            self._inflight.pop(req.id, None)
         self._queue.release(req)
         self.stats.on_finished(ok, time.perf_counter() - req.t_submit)
+        return True
 
     # -- observability ---------------------------------------------------------
 
@@ -352,7 +401,26 @@ class BlazeServer:
         snap["datasets"] = sorted(self._datasets)
         snap["mesh_shards"] = self.mesh.shape[C.DATA_AXIS]
         snap["tuning"] = self._tuning_snapshot()
+        snap["recovery"] = self._recovery_snapshot()
         return snap
+
+    def _recovery_snapshot(self) -> dict:
+        """Fault-recovery provenance for operators: what was injected, how
+        each injection was disposed (the conservation ledger), and how often
+        this server's dispatches retried or degraded.  ``balanced`` is the
+        invariant the chaos suite pins: every injected fault was disposed
+        exactly once."""
+        ledger = faults.snapshot()
+        return {
+            "retried_batches": self.stats.retries,
+            "degraded_batches": self.stats.degraded,
+            "session_retries": self.session.stats.retries,
+            "session_degraded_nodes": self.session.stats.degraded_nodes,
+            "session_escalations": self.session.stats.escalations,
+            "faults_injected": ledger["injected_total"],
+            "dispositions": ledger["dispositions"],
+            "balanced": ledger["balanced"],
+        }
 
     def _tuning_snapshot(self) -> dict:
         """Per-resident-plan engine/config provenance.

@@ -61,6 +61,9 @@ class ServerStats:
         self.compiles = 0  # resolutions that compiled a new program
         # -- transport -------------------------------------------------------
         self.disconnects = 0  # clients gone before their response was written
+        # -- fault recovery (PR 9) -------------------------------------------
+        self.retries = 0  # supervised batch dispatches that re-attempted
+        self.degraded = 0  # batch dispatches that demoted pallas -> eager
 
     # -- transitions ---------------------------------------------------------
 
@@ -107,6 +110,11 @@ class ServerStats:
         with self._lock:
             self.disconnects += 1
 
+    def on_recovery(self, retried: int, degraded: int) -> None:
+        with self._lock:
+            self.retries += retried
+            self.degraded += degraded
+
     # -- reads ---------------------------------------------------------------
 
     def percentiles(self) -> tuple[float, float]:
@@ -139,6 +147,8 @@ class ServerStats:
                 "cache_hits": self.cache_hits,
                 "compiles": self.compiles,
                 "disconnects": self.disconnects,
+                "retries": self.retries,
+                "degraded": self.degraded,
                 "uptime_s": uptime,
             }
         if lat.size:

@@ -10,6 +10,7 @@ mid-flight — are likewise absorbed without taking the service down.
 from __future__ import annotations
 
 import json
+import re
 import socket
 import urllib.parse
 
@@ -181,7 +182,7 @@ def test_malformed_and_typed_http_errors(server):
     )
     with socket.create_connection((host, port), timeout=30) as sock:
         sock.sendall(req)
-        resp = sock.recv(65536).decode()
+        resp = _recv_response(sock)
     assert resp.startswith("HTTP/1.1 400")
     payload = json.loads(resp.split("\r\n\r\n", 1)[1])
     assert payload["error"] == "MALFORMED"
@@ -193,7 +194,7 @@ def test_malformed_and_typed_http_errors(server):
             b"POST /query HTTP/1.1\r\nHost: x\r\nContent-Length: "
             + str(len(good)).encode() + b"\r\n\r\n" + good
         )
-        resp = sock.recv(65536).decode()
+        resp = _recv_response(sock)
     assert resp.startswith("HTTP/1.1 400")
 
     # After all that abuse the server still serves real queries.
@@ -250,3 +251,23 @@ def test_bad_params_never_reach_the_queue(server):
 def _host_port(url: str) -> tuple[str, int]:
     p = urllib.parse.urlparse(url)
     return p.hostname, p.port
+
+
+def _recv_response(sock: socket.socket) -> str:
+    """Read one full HTTP response: headers, then Content-Length bytes of
+    body.  A single recv() may return a partial body under load."""
+    buf = b""
+    while b"\r\n\r\n" not in buf:
+        chunk = sock.recv(65536)
+        if not chunk:
+            return buf.decode()
+        buf += chunk
+    head, body = buf.split(b"\r\n\r\n", 1)
+    m = re.search(rb"content-length:\s*(\d+)", head, re.I)
+    want = int(m.group(1)) if m else 0
+    while len(body) < want:
+        chunk = sock.recv(65536)
+        if not chunk:
+            break
+        body += chunk
+    return (head + b"\r\n\r\n" + body).decode()
