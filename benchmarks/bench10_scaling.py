@@ -1,0 +1,214 @@
+"""BENCH scaling — multi-host scale-out with hierarchical collectives.
+
+The PR 10 acceptance workload: word count, PageRank and k-means as dense
+iterative reductions on one pool of 8 simulated devices, re-partitioned as
+``("node", "data")`` meshes of 1/2/4/8 nodes (8x1-per-node down to 1x8).
+Each point runs the same op twice — topology-oblivious flat collectives vs
+the ``hierarchical-collectives`` rewrite — and reports walls plus the
+intra-node / inter-node wire-byte split of the combine-edge model.
+
+Simulated CPU devices share one socket, so the walls are sanity numbers,
+not the scaling claim; the claim this bench pins is the *wire* one from the
+paper's cross-rack argument: a flat reduce pays every combine edge on the
+slow inter-node links, the hierarchical reduce pays ``n_nodes - 1`` of them
+(at the narrowed width when a wire is set) and keeps the rest on fast
+intra-node links.
+
+Claims recorded as measurements:
+
+* ``hier_cuts_inter_bytes_<workload>`` — at every non-degenerate multi-node
+  split (1 < nodes < devices, i.e. 2 and 4 here) the hierarchical wire
+  moves strictly fewer inter-node bytes than flat; at 8 nodes every node
+  holds one device, there is no intra leg, and hier must equal flat;
+* ``hier_matches_flat_<workload>`` — results agree (bit-equal for the
+  integer-valued word count; <= 1e-4 relative for the float workloads);
+* ``curve_complete`` — all 3 workloads measured at all of 1/2/4/8 nodes.
+
+Run:  PYTHONPATH=src:. python -m benchmarks.bench10_scaling
+Writes ``results/BENCH_scaling.json``.  ``BENCH_SCALE=smoke`` shrinks the
+datasets for CI; ``BENCH_SCALE=big`` grows them.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SCALE = os.environ.get("BENCH_SCALE", "default")
+NODE_COUNTS = (1, 2, 4, 8)
+
+
+def _sizes():
+    if SCALE == "smoke":
+        return {"rows": 1 << 13, "vocab": 512, "pages": 256, "k": 16,
+                "dim": 8, "iters": 6}
+    if SCALE == "big":
+        return {"rows": 1 << 17, "vocab": 4096, "pages": 2048, "k": 64,
+                "dim": 16, "iters": 16}
+    return {"rows": 1 << 15, "vocab": 2048, "pages": 1024, "k": 32,
+            "dim": 16, "iters": 10}
+
+
+_CHILD = """
+import json, os, time
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.session import BlazeSession
+from repro.launch.mesh import make_node_data_mesh
+
+sizes = json.loads(os.environ["BENCH_SIZES"])
+rows, vocab = sizes["rows"], sizes["vocab"]
+pages, k, dim, iters = sizes["pages"], sizes["k"], sizes["dim"], sizes["iters"]
+rng = np.random.RandomState(0)
+
+# word count as a dense histogram (key_range known -> hier-eligible)
+words = rng.zipf(1.4, rows).astype(np.int32) % vocab
+# PageRank: random edges, out-degree precomputed host-side
+edges = rng.randint(0, pages, (rows, 2)).astype(np.int32)
+deg = np.maximum(np.bincount(edges[:, 0], minlength=pages), 1).astype(np.float32)
+# k-means: clustered points, fixed initial centers
+pts = (rng.randn(rows, dim) + rng.randint(0, k, rows)[:, None]).astype(np.float32)
+centers0 = pts[:k].copy()
+
+
+def wc_op(sess, v, hier):
+    def m(i, w, emit):
+        emit(w, 1)
+    return sess.map_reduce(v, m, "sum", jnp.zeros((vocab,), jnp.int32),
+                           return_stats=True, hierarchical=hier)
+
+
+def pr_op(sess, v, hier, ranks):
+    def m(i, e, emit, env):
+        r, d = env
+        emit(e[1], r[e[0]] / d[e[0]])
+    contrib, st = sess.map_reduce(v, m, "sum", jnp.zeros((pages,), jnp.float32),
+                                  env=(ranks, jnp.asarray(deg)),
+                                  return_stats=True, hierarchical=hier)
+    return 0.85 * contrib + 0.15 / pages, st
+
+
+def km_op(sess, v, hier, centers):
+    def m(i, p, emit, env):
+        j = jnp.argmin(jnp.sum((env - p) ** 2, axis=1))
+        emit(j, jnp.concatenate([p, jnp.ones((1,), p.dtype)]))
+    acc, st = sess.map_reduce(v, m, "sum", jnp.zeros((k, dim + 1), jnp.float32),
+                              env=centers, return_stats=True, hierarchical=hier)
+    cnt = jnp.maximum(acc[:, dim:], 1.0)
+    return acc[:, :dim] / cnt, st
+
+
+def run_workload(name, sess, v, hier):
+    # warm (compile), then time the iteration loop
+    if name == "wordcount":
+        out, st = wc_op(sess, v, hier)
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out, st = wc_op(sess, v, hier)
+        jax.block_until_ready(out)
+        wall = time.perf_counter() - t0
+        result = np.asarray(out)
+    else:
+        op = pr_op if name == "pagerank" else km_op
+        state0 = (jnp.full((pages,), 1.0 / pages, jnp.float32)
+                  if name == "pagerank" else jnp.asarray(centers0))
+        state, st = op(sess, v, hier, state0)
+        jax.block_until_ready(state)
+        state = state0
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            state, st = op(sess, v, hier, state)
+        jax.block_until_ready(state)
+        wall = time.perf_counter() - t0
+        result = np.asarray(state)
+    st = st.finalize()
+    return {
+        "wall_s": wall,
+        "intra_bytes": int(st.intra_bytes) * iters,
+        "inter_bytes": int(st.inter_bytes) * iters,
+        "collective": st.collective,
+    }, result
+
+
+report = []
+for n_nodes in (1, 2, 4, 8):
+    sess = BlazeSession(mesh=make_node_data_mesh(n_nodes))
+    sources = {
+        "wordcount": sess.distribute(words),
+        "pagerank": sess.distribute(edges),
+        "kmeans": sess.distribute(pts),
+    }
+    for name, v in sources.items():
+        flat, r_flat = run_workload(name, sess, v, hier=False)
+        hier, r_hier = run_workload(name, sess, v, hier=True)
+        if name == "wordcount":
+            match = bool(np.array_equal(r_flat, r_hier))
+        else:
+            scale = float(np.abs(r_flat).max()) or 1.0
+            match = float(np.abs(r_flat - r_hier).max()) / scale <= 1e-4
+        report.append({
+            "workload": name, "nodes": n_nodes,
+            "flat_wall_s": flat["wall_s"], "hier_wall_s": hier["wall_s"],
+            "flat_intra_bytes": flat["intra_bytes"],
+            "flat_inter_bytes": flat["inter_bytes"],
+            "hier_intra_bytes": hier["intra_bytes"],
+            "hier_inter_bytes": hier["inter_bytes"],
+            "hier_collective": hier["collective"],
+            "matches_flat": match,
+        })
+print(json.dumps(report))
+"""
+
+
+def run() -> dict:
+    from repro.launch import simulate
+
+    sizes = _sizes()
+    env = simulate.simulated_env(8, pythonpath=os.path.join(ROOT, "src"))
+    env["BENCH_SIZES"] = json.dumps(sizes)
+    out = subprocess.run(
+        [sys.executable, "-c", _CHILD], capture_output=True, text=True,
+        env=env, timeout=1800,
+    )
+    if out.returncode != 0:
+        raise RuntimeError(f"scaling child failed:\n{out.stderr[-3000:]}")
+    rows = json.loads(out.stdout.strip().splitlines()[-1])
+
+    claims = {"curve_complete": len(rows) == 3 * len(NODE_COUNTS)}
+    for wl in ("wordcount", "pagerank", "kmeans"):
+        mine = [r for r in rows if r["workload"] == wl]
+        multi = [r for r in mine if 1 < r["nodes"] < 8]
+        degen = [r for r in mine if r["nodes"] == 8]
+        claims[f"hier_cuts_inter_bytes_{wl}"] = bool(multi) and all(
+            r["hier_inter_bytes"] < r["flat_inter_bytes"] for r in multi
+        ) and all(
+            r["hier_inter_bytes"] == r["flat_inter_bytes"] for r in degen
+        )
+        claims[f"hier_matches_flat_{wl}"] = all(r["matches_flat"] for r in mine)
+
+    return {
+        "bench": "BENCH_scaling",
+        "scale": SCALE,
+        "workload": {
+            **sizes, "devices": 8, "node_counts": "1/2/4/8",
+        },
+        "scaling": {"algorithms": rows},
+        "claims": claims,
+    }
+
+
+def main() -> int:
+    report = run()
+    path = os.path.join(ROOT, "results", "BENCH_scaling.json")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(report, f, indent=1)
+        f.write("\n")
+    print(json.dumps(report, indent=1))
+    return 0 if all(report["claims"].values()) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

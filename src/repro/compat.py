@@ -26,11 +26,52 @@ import jax
 
 __all__ = [
     "AxisType",
+    "distributed_initialize",
     "get_abstract_mesh",
     "make_mesh",
+    "process_count",
+    "process_index",
     "set_mesh",
     "shard_map",
 ]
+
+
+# -- multi-process bring-up --------------------------------------------------
+
+
+def distributed_initialize(
+    coordinator_address: str | None = None,
+    num_processes: int | None = None,
+    process_id: int | None = None,
+    **kwargs: Any,
+) -> bool:
+    """``jax.distributed.initialize`` gated for single-process and old JAX.
+
+    Returns True iff a multi-process runtime actually came up.  A
+    single-process launch (no coordinator, ``num_processes`` absent or 1) is
+    a silent no-op — the same code path then runs on the local mesh, which
+    is what lets the simulated-topology harness and a real cluster share one
+    entry point (``repro.launch.mesh.init_distributed``).
+    """
+    single = coordinator_address is None and num_processes in (None, 1)
+    dist = getattr(jax, "distributed", None)
+    if single or dist is None or not hasattr(dist, "initialize"):
+        return False
+    dist.initialize(
+        coordinator_address=coordinator_address,
+        num_processes=num_processes,
+        process_id=process_id,
+        **kwargs,
+    )
+    return True
+
+
+def process_count() -> int:
+    return jax.process_count() if hasattr(jax, "process_count") else 1
+
+
+def process_index() -> int:
+    return jax.process_index() if hasattr(jax, "process_index") else 0
 
 
 # -- shard_map ---------------------------------------------------------------

@@ -33,10 +33,18 @@ Array = jax.Array
 
 EMPTY_KEY = np.iinfo(np.int32).min  # open-addressing "slot free" sentinel
 DATA_AXIS = "data"
+NODE_AXIS = "node"
 
 
 # ---------------------------------------------------------------------------
 # Mesh helpers
+#
+# Containers shard their leading dim over ALL data-parallel mesh axes: the
+# 1-D ``("data",)`` mesh of a single host, or the 2-D ``("node", "data")``
+# mesh of a multi-host launch (``repro.launch.mesh.make_node_data_mesh``),
+# where ``node`` is the slow inter-host axis and ``data`` the fast
+# intra-host axis.  Shard indices are flattened node-major: shard
+# ``node_idx * n_data + data_idx``.
 # ---------------------------------------------------------------------------
 
 
@@ -48,8 +56,34 @@ def data_mesh(n_devices: int | None = None) -> Mesh:
     return Mesh(np.asarray(devs), (DATA_AXIS,))
 
 
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Mesh axes container leading dims shard over, slowest (node) first."""
+    if NODE_AXIS in mesh.axis_names:
+        return (NODE_AXIS, DATA_AXIS)
+    return (DATA_AXIS,)
+
+
+def data_pspec(mesh: Mesh) -> P:
+    """PartitionSpec sharding a leading dim over every data-parallel axis."""
+    axes = data_axes(mesh)
+    return P(axes) if len(axes) > 1 else P(DATA_AXIS)
+
+
+def n_nodes(mesh: Mesh) -> int:
+    """Simulated/real host count: the ``node`` axis size (1 on 1-D meshes)."""
+    return mesh.shape[NODE_AXIS] if NODE_AXIS in mesh.axis_names else 1
+
+
 def _nshards(mesh: Mesh) -> int:
-    return mesh.shape[DATA_AXIS]
+    n = 1
+    for ax in data_axes(mesh):
+        n *= mesh.shape[ax]
+    return n
+
+
+def shard_count(mesh: Mesh) -> int:
+    """Total data-parallel shards: product over ``data_axes(mesh)``."""
+    return _nshards(mesh)
 
 
 # ---------------------------------------------------------------------------
@@ -270,7 +304,7 @@ def make_dist_hashmap(
 ) -> DistHashMap:
     red = get_reducer(reducer)
     n = _nshards(mesh)
-    sharding = NamedSharding(mesh, P(DATA_AXIS))
+    sharding = NamedSharding(mesh, data_pspec(mesh))
     keys = jax.device_put(
         jnp.full((n, capacity_per_shard), EMPTY_KEY, jnp.int32), sharding
     )
@@ -341,7 +375,7 @@ def distribute(x: np.ndarray | Array, mesh: Mesh | None = None) -> DistVector:
     pad = (-n) % shards
     if pad:
         x = np.concatenate([x, np.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
-    arr = jax.device_put(x, NamedSharding(mesh, P(DATA_AXIS)))
+    arr = jax.device_put(x, NamedSharding(mesh, data_pspec(mesh)))
     return DistVector(arr, n)
 
 
@@ -680,7 +714,7 @@ class ChunkedDistVector:
         """Transfer block ``b`` to the device(s), sharded over ``data``."""
         mesh = mesh or self.mesh
         data = jax.device_put(
-            self.block_host(b), NamedSharding(mesh, P(DATA_AXIS))
+            self.block_host(b), NamedSharding(mesh, data_pspec(mesh))
         )
         base = jnp.asarray(b * self.block_rows, jnp.int32)
         return BlockView(data=data, base=base, n=self.n)

@@ -12,6 +12,8 @@ The named points (see ``POINTS``) cover every layer that can fail:
 ``dispatch``        a per-op or fused-program dispatch (``mapreduce.py``,
                     ``program.py``)
 ``collective``      tracing a cross-shard collective (``RealCollectives``)
+``collective.inter``the inter-node hop of a hierarchical reduce (the slow
+                    cross-host leg; fires only on multi-node meshes)
 ``kernel.segment``  the Pallas segment kernel path of a dense dispatch
 ``kernel.hash``     the Pallas hash-combine path of a hash dispatch
 ``prefetch.read``   a block read inside the prefetch worker
@@ -81,6 +83,7 @@ __all__ = [
 POINTS = (
     "dispatch",
     "collective",
+    "collective.inter",
     "kernel.segment",
     "kernel.hash",
     "prefetch.read",

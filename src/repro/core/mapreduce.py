@@ -69,7 +69,7 @@ from repro.compat import shard_map
 
 from repro.core import containers as C
 from repro.core import faults
-from repro.core.plan import abstract_sig as _abstract
+from repro.core.plan import abstract_sig as _abstract, hier_collective_desc
 from repro.core.reducers import Reducer, get_reducer
 from repro.core.serialization import narrowest_int_dtype
 
@@ -89,6 +89,14 @@ class MapReduceStats:
     pairs_emitted: Any  # live emitted pairs (device array until finalize)
     pairs_shipped: Any  # pairs that went on the wire post eager-combine
     shuffle_payload_bytes: Any  # bytes the shuffle moves (global, one call)
+    # Topology split of the shuffle payload (combine-edge model): a reduce
+    # over P participants has P-1 combine edges; hierarchical mode keeps
+    # `n_shards - n_nodes` of them on fast intra-node links at FULL
+    # precision and only `n_nodes - 1` on slow inter-node links at wire
+    # precision, while a flat reduce on a multi-node mesh pays every edge
+    # inter-node.  Both zero on 1-node meshes' inter side.
+    intra_bytes: Any = 0  # bytes crossing intra-node links
+    inter_bytes: Any = 0  # bytes crossing inter-node links
     overflow: Any = None  # hash-table / bucket drops
     compiles: int = 0  # 1 iff this call lowered+compiled a new executable
     cache_hits: int = 0  # 1 iff this call reused a session-cached executable
@@ -131,6 +139,8 @@ class MapReduceStats:
             pairs_emitted=_get(self.pairs_emitted),
             pairs_shipped=_get(self.pairs_shipped),
             shuffle_payload_bytes=_get(self.shuffle_payload_bytes),
+            intra_bytes=_get(self.intra_bytes),
+            inter_bytes=_get(self.inter_bytes),
             overflow=_get(self.overflow),
             compiles=self.compiles,
             cache_hits=self.cache_hits,
@@ -306,31 +316,73 @@ def bucket_by_dest(
 
 
 class RealCollectives:
-    """Mesh collectives bound to an axis name — valid inside ``shard_map``."""
+    """Mesh collectives bound to the data-parallel axes — valid inside
+    ``shard_map``.
 
-    def __init__(self, axis: str, n_shards: int):
+    ``axis`` is the fast intra-node axis; on a 2-D ``("node", "data")`` mesh
+    ``node_axis``/``n_nodes`` describe the slow inter-node axis and flat
+    collectives run over the ``(node, data)`` tuple (shard indices flatten
+    node-major, matching the containers' leading-dim sharding).  ``reduce``
+    and ``reduce_feedback`` additionally take ``hier=True``: intra-node
+    reduction first at full precision, then only the node-level partials
+    cross the inter-node hop (wire-compressed when requested) — routed
+    through ``distributed.collectives``'s hierarchical entry points.
+    """
+
+    def __init__(
+        self,
+        axis: str,
+        n_shards: int,
+        *,
+        node_axis: str | None = None,
+        n_nodes: int = 1,
+    ):
         self.axis = axis
         self.n_shards = n_shards
+        self.node_axis = node_axis
+        self.n_nodes = n_nodes
+        self.all_axes = (node_axis, axis) if node_axis is not None else axis
+
+    def _is_hier(self, hier: bool) -> bool:
+        return bool(hier) and self.node_axis is not None and self.n_nodes > 1
 
     def axis_index(self) -> Array:
-        return jax.lax.axis_index(self.axis)
+        return jax.lax.axis_index(self.all_axes)
 
     def all_gather_tiled(self, x: Array) -> Array:
-        return jax.lax.all_gather(x, self.axis, tiled=True)
+        return jax.lax.all_gather(x, self.all_axes, tiled=True)
 
     def all_to_all_tiled(self, x: Array) -> Array:
         return jax.lax.all_to_all(
-            x, self.axis, split_axis=0, concat_axis=0, tiled=True
+            x, self.all_axes, split_axis=0, concat_axis=0, tiled=True
         )
 
-    def reduce(self, partial: Array, red: Reducer, wire: str) -> Array:
+    def reduce(
+        self, partial: Array, red: Reducer, wire: str, hier: bool = False
+    ) -> Array:
         # Host code running during trace: an injected collective fault
         # surfaces as a compile-time failure of the dispatch that traced it.
         faults.fault_point("collective")
-        return _collective_reduce(partial, red, self.axis, wire)
+        if self._is_hier(hier):
+            if wire != "none" and red.name == "sum":
+                faults.fault_point("collective.inter")
+                from repro.distributed.collectives import compressed_psum
+
+                return compressed_psum(
+                    partial, self.node_axis, wire=wire, intra_axis=self.axis
+                )
+            intra = _collective_reduce(partial, red, self.axis, "none")
+            faults.fault_point("collective.inter")
+            return _collective_reduce(intra, red, self.node_axis, wire)
+        return _collective_reduce(partial, red, self.all_axes, wire)
 
     def reduce_feedback(
-        self, partial: Array, red: Reducer, wire: str, residual: Array
+        self,
+        partial: Array,
+        red: Reducer,
+        wire: str,
+        residual: Array,
+        hier: bool = False,
     ) -> tuple[Array, Array]:
         """``wire="int8"`` with error feedback (``quantize_with_feedback``).
 
@@ -339,15 +391,26 @@ class RealCollectives:
         int8 blocks + scales, as in ``_collective_reduce``), and returns what
         this round's narrowing dropped as the next round's residual — the
         iterative path stays unbiased instead of accumulating rounding bias.
+
+        Hierarchical mode folds the intra-node axis at full precision
+        BEFORE quantisation, so only ``n_nodes`` addends (not ``n_shards``)
+        pass through the int8 lattice and the residual tracks exactly the
+        one lossy hop (every node member computes the same node-level
+        residual — deterministic, no echo needed).
         """
         if wire != "int8" or red.name != "sum":
-            return self.reduce(partial, red, wire), residual
+            return self.reduce(partial, red, wire, hier=hier), residual
         from repro.core.serialization import dequantize, quantize_with_feedback
 
         p32 = partial.astype(jnp.float32)
+        axes = self.all_axes
+        if self._is_hier(hier):
+            p32 = jax.lax.psum(p32, self.axis)  # full-precision intra hop
+            faults.fault_point("collective.inter")
+            axes = self.node_axis
         q, new_residual = quantize_with_feedback(p32, residual, "int8")
         deq = dequantize(q, p32)
-        total = jax.lax.psum(deq, self.axis).astype(partial.dtype)
+        total = jax.lax.psum(deq, axes).astype(partial.dtype)
         return total, new_residual
 
 
@@ -360,11 +423,13 @@ class AbstractCollectives:
     ``n_shards`` copies; ``all_to_all(tiled)`` over equal splits is
     shape-preserving.  Values computed under these are never used — only
     their shapes/dtypes (``jax.eval_shape``) and the op-recording side
-    effects of the trace.
+    effects of the trace.  The hierarchical flag is shape-invisible, so
+    both modes share one abstraction.
     """
 
-    def __init__(self, n_shards: int):
+    def __init__(self, n_shards: int, *, n_nodes: int = 1):
         self.n_shards = n_shards
+        self.n_nodes = n_nodes
 
     def axis_index(self) -> Array:
         return jnp.zeros((), jnp.int32)
@@ -375,10 +440,12 @@ class AbstractCollectives:
     def all_to_all_tiled(self, x: Array) -> Array:
         return x
 
-    def reduce(self, partial: Array, red: Reducer, wire: str) -> Array:
+    def reduce(
+        self, partial: Array, red: Reducer, wire: str, hier: bool = False
+    ) -> Array:
         return partial
 
-    def reduce_feedback(self, partial, red, wire, residual):
+    def reduce_feedback(self, partial, red, wire, residual, hier=False):
         return partial, residual
 
 
@@ -433,15 +500,16 @@ def map_reduce(
     )
 
 
-def _source_operands(kind, source):
+def _source_operands(kind, source, mesh=None):
     """(device operands, in_specs) for shard_map, per source kind.
 
     For ``kind="chunked"`` the dispatch-time source is a ``BlockView``
     (one resident block): data sharded over ``data`` plus the replicated
     traced ``base`` offset — per-block values vary, abstract signature
-    doesn't, so every block reuses one executable.
+    doesn't, so every block reuses one executable.  Specs shard over every
+    data-parallel mesh axis (``node`` and ``data`` on 2-D meshes).
     """
-    d = P(C.DATA_AXIS)
+    d = C.data_pspec(mesh) if mesh is not None else P(C.DATA_AXIS)
     if kind == "range":
         return (), ()
     if kind == "vector":
@@ -463,7 +531,7 @@ def _local_view(kind, source, operands):
 
 def dense_shard_stage(
     kind, source, mapper, red, target, engine, wire, n_shards,
-    with_stats=True, feedback=False, collect=True, tuned=None,
+    with_stats=True, feedback=False, collect=True, tuned=None, hier=False,
 ):
     """Build a pure, composable shard stage for a dense ``[K, ...]`` target.
 
@@ -481,6 +549,11 @@ def dense_shard_stage(
       ``shard_map``, ``AbstractCollectives`` under program discovery);
     * ``residual`` — per-shard error-feedback carry when ``feedback=True``
       (``wire="int8"`` sums in an iterative program), else passed through.
+
+    ``hier=True`` (multi-node meshes, set by the plan layer's
+    ``hierarchical-collectives`` pass) makes the stage's collective
+    topology-aware: intra-node reduce first at full precision, wire
+    narrowing only on the inter-node hop (``RealCollectives.reduce``).
 
     ``collect=False`` (eager/pallas only) makes the stage stop at the
     per-shard PARTIAL: ``total`` comes back *unreduced* and the caller owns
@@ -579,10 +652,10 @@ def dense_shard_stage(
                 total = partial  # caller runs the (possibly batched) collective
             elif feedback:
                 total, residual = coll.reduce_feedback(
-                    partial, red, wire, residual
+                    partial, red, wire, residual, hier=hier
                 )
             else:
-                total = coll.reduce(partial, red, wire)
+                total = coll.reduce(partial, red, wire, hier=hier)
         else:
             # Conventional plan: ship ALL raw pairs (padded lanes and all);
             # reduce only at the destination.  all_gather of the raw pair
@@ -599,16 +672,56 @@ def dense_shard_stage(
     return stage, kernel_meta
 
 
+def make_collectives(mesh, n_shards: int) -> "RealCollectives":
+    """The mesh's ``RealCollectives`` (topology-aware on 2-D meshes)."""
+    nodes = C.n_nodes(mesh)
+    return RealCollectives(
+        C.DATA_AXIS,
+        n_shards,
+        node_axis=C.NODE_AXIS if nodes > 1 else None,
+        n_nodes=nodes,
+    )
+
+
+def reduce_edge_bytes(
+    n_elems: int,
+    full_bytes: int,
+    wire_val_bytes: int,
+    n_shards: int,
+    n_nodes: int,
+    hier: bool,
+) -> tuple[int, int]:
+    """(intra_bytes, inter_bytes) of one dense reduction, combine-edge model.
+
+    A reduction over P participants moves P-1 combine edges.  Hierarchical
+    mode keeps ``n_shards - n_nodes`` edges intra-node at FULL element width
+    and ``n_nodes - 1`` inter-node at wire width; a flat reduce on a
+    multi-node mesh is topology-oblivious and pays every edge inter-node at
+    wire width; on a 1-node mesh everything is intra and inter is 0.
+    """
+    if n_nodes > 1 and hier:
+        intra = n_elems * full_bytes * (n_shards - n_nodes)
+        inter = n_elems * wire_val_bytes * (n_nodes - 1)
+    elif n_nodes > 1:
+        intra = 0
+        inter = n_elems * wire_val_bytes * (n_shards - 1)
+    else:
+        intra = n_elems * wire_val_bytes * (n_shards - 1)
+        inter = 0
+    return intra, inter
+
+
 def _map_reduce_dense(
     kind, source, mapper, red, target, mesh, n_shards, engine, wire, env,
-    with_stats=True, cache=None, node=None, tuned=None,
+    with_stats=True, cache=None, node=None, tuned=None, hier=False,
 ):
     """Dense [K, ...] target — the paper's small fixed key range fast path."""
     K = target.shape[0]
-    axis = C.DATA_AXIS
     cache = cache if cache is not None else {}
     if engine not in ("eager", "pallas", "naive"):
         raise ValueError(f"unknown engine {engine!r}")
+    nodes = C.n_nodes(mesh)
+    hier = bool(hier) and nodes > 1 and engine in ("eager", "pallas")
 
     # The executable cache key IS the plan node's identity-faithful cache
     # signature: everything that shapes the lowered plan, with the mapper and
@@ -621,7 +734,7 @@ def _map_reduce_dense(
         getattr(source, "n", None) if kind in ("vector", "chunked") else
         (source.start, source.stop, source.step) if kind == "range" else None,
         _abstract(target), _abstract(env), tuned,
-    )
+    ) + (("hier",) if hier else ())
     if node is not None:
         node.cache_sig = cache_key
 
@@ -629,11 +742,12 @@ def _map_reduce_dense(
     if compiled_now:
         stage, kernel_meta = dense_shard_stage(
             kind, source, mapper, red, target, engine, wire, n_shards,
-            with_stats=with_stats, tuned=tuned,
+            with_stats=with_stats, tuned=tuned, hier=hier,
         )
+        d = C.data_pspec(mesh)
 
         def shard_fn(env_, *operands):
-            coll = RealCollectives(axis, n_shards)
+            coll = make_collectives(mesh, n_shards)
             local = _local_view(kind, source, operands)
             total, live, kernel_pairs, _ = stage(env_, local, coll)
             return total, live[None], kernel_pairs[None]
@@ -641,8 +755,8 @@ def _map_reduce_dense(
         fn = shard_map(
             shard_fn,
             mesh=mesh,
-            in_specs=(P(),) + tuple(_source_operands(kind, source)[1]),
-            out_specs=(P(), P(C.DATA_AXIS), P(C.DATA_AXIS)),
+            in_specs=(P(),) + tuple(_source_operands(kind, source, mesh)[1]),
+            out_specs=(P(), d, d),
             check_vma=False,
         )
 
@@ -660,21 +774,33 @@ def _map_reduce_dense(
     merged, live, kernel_pairs = run_fn(env, target, *operands)
 
     val_bytes = {"bf16": 2, "int8": 1}.get(wire, jnp.dtype(target.dtype).itemsize)
+    full_bytes = jnp.dtype(target.dtype).itemsize
     key_bytes = narrowest_int_dtype(K).itemsize
+    n_elems = int(np.prod(target.shape))
     if engine in ("eager", "pallas"):
-        payload = int(np.prod(target.shape)) * val_bytes * n_shards
-        coll = f"psum[{K}x{val_bytes}B]"
-        shipped = int(np.prod(target.shape)) * n_shards
+        payload = n_elems * val_bytes * n_shards
+        coll = (
+            hier_collective_desc(red.name, wire)
+            if hier
+            else f"psum[{K}x{val_bytes}B]"
+        )
+        shipped = n_elems * n_shards
+        intra_b, inter_b = reduce_edge_bytes(
+            n_elems, full_bytes, val_bytes, n_shards, nodes, hier
+        )
     else:
         payload = live  # finalized below: pairs * (key+val) bytes
         coll = f"all_gather[pairs x {key_bytes + val_bytes}B]"
         shipped = live
+        intra_b = inter_b = 0  # replaced below once live pairs are known
     stats = MapReduceStats(
         engine=engine,
         collective=coll,
         pairs_emitted=live,
         pairs_shipped=shipped,
         shuffle_payload_bytes=payload,
+        intra_bytes=intra_b,
+        inter_bytes=inter_b,
         compiles=int(compiled_now),
         cache_hits=int(not compiled_now),
         kernel_block_n=kernel_meta.get("block_n"),
@@ -683,28 +809,37 @@ def _map_reduce_dense(
         plan_hash=node.hash if node is not None else None,
     )
     if engine == "naive":
+        naive_payload = jnp.sum(live) * (key_bytes + val_bytes) * n_shards
+        # all_gather edges: every shard's pairs reach all n_shards-1 peers;
+        # with per-node rows of n_shards/nodes shards, the inter fraction of
+        # peer links is (n_shards - n_shards/nodes) / (n_shards - 1).
+        if nodes > 1 and n_shards > 1:
+            inter_frac = (n_shards - n_shards // nodes) / (n_shards - 1)
+        else:
+            inter_frac = 0.0
         stats = dataclasses.replace(
             stats,
-            shuffle_payload_bytes=jnp.sum(live) * (key_bytes + val_bytes) * n_shards,
+            shuffle_payload_bytes=naive_payload,
+            intra_bytes=naive_payload * (1.0 - inter_frac),
+            inter_bytes=naive_payload * inter_frac,
         )
     return merged, stats
 
 
-def _collective_reduce(partial: Array, red: Reducer, axis: str, wire: str) -> Array:
+def _collective_reduce(partial: Array, red: Reducer, axis, wire: str) -> Array:
+    """One reduction hop over ``axis`` (a name or tuple of names).
+
+    Narrowed sums route through ``distributed.collectives.compressed_psum``
+    (shared-scale int8 over the int8 lattice / bf16 cast — see there); every
+    other (reducer, wire) pair is the reducer's own collective.
+    """
     if wire == "none" or red.name != "sum":
         return red.collective(partial, axis)
-    if wire == "bf16":
-        return jax.lax.psum(partial.astype(jnp.bfloat16), axis).astype(partial.dtype)
-    if wire == "int8":
-        # Shared-scale int8 ring reduce: scale = pmax of local absmax.  XLA has
-        # no int8 all-reduce, so the sum runs in int32; the *wire* payload a
-        # real TPU lowering moves is the int8 lattice — accounted in stats.
-        absmax = jax.lax.pmax(jnp.max(jnp.abs(partial.astype(jnp.float32))), axis)
-        scale = jnp.maximum(absmax / 127.0, 1e-30)
-        q = jnp.clip(jnp.round(partial.astype(jnp.float32) / scale), -127, 127)
-        s = jax.lax.psum(q.astype(jnp.int32), axis)
-        return (s.astype(jnp.float32) * scale).astype(partial.dtype)
-    raise ValueError(f"unknown wire mode {wire!r}")
+    if wire not in ("bf16", "int8"):
+        raise ValueError(f"unknown wire mode {wire!r}")
+    from repro.distributed.collectives import compressed_psum
+
+    return compressed_psum(partial, axis, wire=wire)
 
 
 def _wire_key_dtype(key_range: int | None) -> jnp.dtype:
@@ -872,8 +1007,8 @@ def _map_reduce_hash(
     key_range=None, cache=None, node=None, tuned=None,
 ):
     """DistHashMap target: local combine → hash-partition → all_to_all → merge."""
-    axis = C.DATA_AXIS
     cache = cache if cache is not None else {}
+    nodes = C.n_nodes(mesh)
 
     cache_key = (
         "hash", mapper, red.name, red, engine, slack, mesh, kind, key_range,
@@ -894,7 +1029,7 @@ def _map_reduce_hash(
         )
 
         def shard_fn(env_, tkeys, tvals, tovf, *operands):
-            coll = RealCollectives(axis, n_shards)
+            coll = make_collectives(mesh, n_shards)
             local = _local_view(kind, source, operands)
             table = C.HashTable(tkeys[0], tvals[0], tovf[0])
             table, live_emitted, live_shipped, kernel_pairs = stage(
@@ -909,8 +1044,8 @@ def _map_reduce_hash(
                 kernel_pairs[None],
             )
 
-        d = P(C.DATA_AXIS)
-        in_specs = (P(), d, d, d) + tuple(_source_operands(kind, source)[1])
+        d = C.data_pspec(mesh)
+        in_specs = (P(), d, d, d) + tuple(_source_operands(kind, source, mesh)[1])
         cache[cache_key] = (
             jax.jit(
                 shard_map(
@@ -935,12 +1070,23 @@ def _map_reduce_hash(
     out = C.DistHashMap(C.HashTable(nk, nv, novf), reducer_name=red.name)
     val_bytes = jnp.dtype(target.table.vals.dtype).itemsize
     key_bytes = _wire_key_dtype(key_range).itemsize
+    payload = jnp.sum(shipped) * (key_bytes + val_bytes)
+    # all_to_all is point-to-point: with hash-uniform destinations, the
+    # fraction of pairs leaving their node row is (n_shards - n_data)/n_shards
+    # — no hierarchical rewrite applies, only honest topology accounting.
+    inter_frac = (
+        (n_shards - n_shards // nodes) / n_shards
+        if nodes > 1 and n_shards > 1
+        else 0.0
+    )
     stats = MapReduceStats(
         engine=engine,
         collective=f"all_to_all[pairs x {key_bytes + val_bytes}B]",
         pairs_emitted=emitted,
         pairs_shipped=shipped,
-        shuffle_payload_bytes=jnp.sum(shipped) * (key_bytes + val_bytes),
+        shuffle_payload_bytes=payload,
+        intra_bytes=payload * (1.0 - inter_frac),
+        inter_bytes=payload * inter_frac,
         overflow=novf,
         compiles=int(compiled_now),
         cache_hits=int(not compiled_now),

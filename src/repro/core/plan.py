@@ -71,8 +71,10 @@ __all__ = [
     "Plan",
     "SourceInfo",
     "abstract_sig",
+    "apply_hierarchical",
     "apply_tuned",
     "build_mapreduce_node",
+    "hier_collective_desc",
     "node_key_count",
     "resolve_engine",
     "single_op_plan",
@@ -236,14 +238,22 @@ class MapReduceNode:
     # this node FROM (None = never degraded).  Like tuned, not part of
     # stable_desc — but degradation rewrites ``engine``, which is.
     degraded_from: str | None = None
+    # -- hierarchical-collectives pass: True when the node's collective was
+    # rewritten to the two-hop (intra-node full precision, inter-node wire)
+    # topology.  Rendered into stable_desc ONLY when set, so 1-D plans hash
+    # and render exactly as before the pass existed.
+    hier: bool = False
 
     def stable_desc(self) -> str:
-        return (
+        desc = (
             f"map_reduce {self.reducer} fn={_fn_name(self.mapper)} "
             f"src={self.kind}:{self.src} "
             f"-> {self.target_desc} engine={self.engine} wire={self.wire} "
             f"key_range={self.key_range} env={_sig_desc(self.env_sig)}"
         )
+        if self.hier:
+            desc += " hier"
+        return desc
 
     @property
     def hash(self) -> str:
@@ -303,6 +313,7 @@ class Plan:
     state_desc: str
     n_shards: int
     passes: tuple[str, ...]
+    n_nodes: int = 1  # simulated/real host rows of the mesh (1 = 1-D mesh)
     groups: dict[int, list[int]] = dataclasses.field(default_factory=dict)
     group_keys: dict[int, tuple] = dataclasses.field(default_factory=dict)
     collectives_per_iter: int = 0  # after batching/CSE/pruning
@@ -323,6 +334,8 @@ class Plan:
         """Stable digest of the whole optimized plan (nodes + sources +
         state + groups) — the program-level cache identity."""
         parts = [self.state_desc, f"shards={self.n_shards}"]
+        if self.n_nodes > 1:  # absent on 1-D meshes: legacy hashes unchanged
+            parts.append(f"nodes={self.n_nodes}")
         parts += [n.stable_desc() for n in self.nodes]
         parts += [s.desc for s in self.sources if not s.pruned]
         parts += [f"group{g}={idxs}" for g, idxs in sorted(self.groups.items())]
@@ -338,10 +351,15 @@ class Plan:
 
     def render(self, title: str = "Blaze logical plan") -> str:
         lines = [f"== {title} (hash {self.hash}) =="]
-        lines.append(f"mesh: data[{self.n_shards}]")
+        if self.n_nodes > 1:
+            per = self.n_shards // self.n_nodes
+            lines.append(f"mesh: node[{self.n_nodes}]×data[{per}]")
+        else:
+            lines.append(f"mesh: data[{self.n_shards}]")
         lines.append(f"state: {self.state_desc}")
         lines.append(
             "passes: resolve-engines"
+            + (", hierarchical-collectives" if self.n_nodes > 1 else "")
             + ("".join(f", {p}" for p in self.passes))
         )
         lines.append("nodes:")
@@ -418,10 +436,15 @@ class Plan:
         if self.groups:
             lines.append("batched collective groups:")
             for g, idxs in sorted(self.groups.items()):
-                red, wire, dt = self.group_keys.get(g, ("?", "?", "?"))
+                # Key is (red, wire, dtype) plus, on multi-node meshes, the
+                # hier flag — groups never mix hierarchical and flat reduces.
+                key = self.group_keys.get(g, ("?", "?", "?"))
+                red, wire, dt = key[:3]
+                hier = len(key) > 3 and key[3]
                 lines.append(
-                    f"  {chr(ord('A') + g)}: {red}/{wire}/{dt} carries nodes "
-                    f"{idxs} ({len(idxs)} collectives -> 1)"
+                    f"  {chr(ord('A') + g)}: {red}/{wire}/{dt}"
+                    + ("/hier" if hier else "")
+                    + f" carries nodes {idxs} ({len(idxs)} collectives -> 1)"
                 )
         lines.append(
             f"collectives/iter: {self.collectives_per_iter} "
@@ -468,6 +491,42 @@ def apply_tuned(node: MapReduceNode, red: Reducer, cfg: TunedConfig) -> None:
     node.tuned = cfg
 
 
+def hier_collective_desc(reducer_name: str, wire: str) -> str:
+    """EXPLAIN rendering of a hierarchical collective, e.g.
+    ``psum[node×data, hier, wire=int8@inter]``: the intra-node hop always
+    runs at full precision; ``@inter`` marks where wire narrowing applies."""
+    op = "psum" if reducer_name == "sum" else f"{reducer_name}-reduce"
+    desc = f"{op}[node×data, hier"
+    if wire != "none" and reducer_name == "sum":
+        desc += f", wire={wire}@inter"
+    return desc + "]"
+
+
+def apply_hierarchical(node: MapReduceNode, n_nodes: int) -> bool:
+    """The ``hierarchical-collectives`` pass, applied per node.
+
+    Rewrites an eligible node's collective to the two-hop topology: a
+    full-precision intra-node reduce over the fast links first, then the
+    inter-node reduce over node-level partials — with wire narrowing (when
+    requested) applied only to the slow inter-node hop.  Eligible nodes are
+    dense reductions on the eager/pallas plans (``naive`` all-gathers raw
+    pairs and hash targets shuffle point-to-point — neither has a reduction
+    tree to reshape).  A no-op on 1-D meshes (``n_nodes <= 1``), so every
+    pre-existing plan hash and explain golden is unchanged.  Composes with
+    ``batch-collectives``: batched groups carry the member nodes' shared
+    ``hier`` flag through one concatenated two-hop reduce.
+    """
+    if (
+        n_nodes <= 1
+        or node.target_kind != "dense"
+        or node.engine not in ("eager", "pallas")
+    ):
+        return False
+    node.hier = True
+    node.collective = hier_collective_desc(node.reducer, node.wire)
+    return True
+
+
 def degrade_node(node: MapReduceNode) -> None:
     """Degrade a kernel-faulted node to the always-available eager engine.
 
@@ -499,6 +558,8 @@ def build_mapreduce_node(
     env: Any,
     tuning: TuningCache | None = None,
     degraded: set | None = None,
+    n_nodes: int = 1,
+    hierarchical: bool = True,
 ) -> MapReduceNode:
     """Build a MapReduce node and run the resolve-engines pass on it.
 
@@ -509,6 +570,12 @@ def build_mapreduce_node(
     measured winner for this node (keyed by its un-tuned hash) is applied
     before the node is returned — the resolve-engines pass consulting the
     measured cost model instead of the analytic fallback.
+
+    On multi-node meshes (``n_nodes > 1``) the ``hierarchical-collectives``
+    pass runs here too — per node, like resolve-engines — unless the caller
+    opts out (``hierarchical=False``, the flat-topology A/B baseline).  It
+    runs BEFORE ``tune_key`` is captured: a hierarchical node is a
+    different plan, so it must not inherit flat-topology tuning winners.
     """
     target_kind, tdesc = target_desc_of(target)
     if target_kind == "hash":
@@ -550,6 +617,8 @@ def build_mapreduce_node(
         env_sig=abstract_sig(env),
         collective=collective,
     )
+    if hierarchical:
+        apply_hierarchical(node, n_nodes)
     if resolved in ("eager", "pallas"):
         node.cost_estimate = cost_mod.node_cost(
             resolved, node_key_count(target)
@@ -567,13 +636,14 @@ def build_mapreduce_node(
     return node
 
 
-def single_op_plan(node: MapReduceNode, n_shards: int) -> Plan:
+def single_op_plan(node: MapReduceNode, n_shards: int, n_nodes: int = 1) -> Plan:
     """The standalone ``map_reduce`` path: one op is a one-node plan."""
     return Plan(
         nodes=[node],
         sources=[],
         state_desc="-",
         n_shards=n_shards,
+        n_nodes=n_nodes,
         passes=(),
         collectives_per_iter=1,
         collectives_unbatched=1,

@@ -333,13 +333,15 @@ class _CountingCollectives:
         self.count += 1
         return self._inner.all_to_all_tiled(x)
 
-    def reduce(self, partial, red, wire):
+    def reduce(self, partial, red, wire, hier=False):
         self.count += 1
-        return self._inner.reduce(partial, red, wire)
+        return self._inner.reduce(partial, red, wire, hier=hier)
 
-    def reduce_feedback(self, partial, red, wire, residual):
+    def reduce_feedback(self, partial, red, wire, residual, hier=False):
         self.count += 1
-        return self._inner.reduce_feedback(partial, red, wire, residual)
+        return self._inner.reduce_feedback(
+            partial, red, wire, residual, hier=hier
+        )
 
 
 class ProgramContext:
@@ -362,9 +364,11 @@ class ProgramContext:
         self, n_shards: int, mode: str, coll=None, operands=None,
         residuals=None, hash_tables=None, plan: Plan | None = None,
         passes: tuple = DEFAULT_PASSES, tuning=None, overrides=None,
-        degraded=None,
+        degraded=None, n_nodes: int = 1, hierarchical: bool = True,
     ):
         self._n_shards = n_shards
+        self._n_nodes = n_nodes
+        self._hierarchical = hierarchical
         self._mode = mode  # "discover" | "execute"
         # discover-mode autotuning hooks: ``tuning`` is the session's
         # TuningCache (cached winners apply to every node built), and
@@ -376,7 +380,10 @@ class ProgramContext:
         self._overrides = overrides or {}
         self._degraded = degraded
         self._tune_info: dict[int, tuple] = {}  # idx -> candidate-grid params
-        inner = coll if coll is not None else _mr.AbstractCollectives(n_shards)
+        inner = (
+            coll if coll is not None
+            else _mr.AbstractCollectives(n_shards, n_nodes=n_nodes)
+        )
         if mode == "discover":
             inner = _CountingCollectives(inner)
         self._coll = inner
@@ -397,7 +404,7 @@ class ProgramContext:
         # -- shared runtime state ---------------------------------------------
         self._call_i = 0  # ctx-op call counter (node index)
         self._pending: list[int] = []  # deferred ops awaiting their collective
-        self._partials: dict[int, tuple] = {}  # idx -> (partial, red, wire)
+        self._partials: dict[int, tuple] = {}  # idx -> (partial, red, wire, hier)
         self._totals: dict[int, Array] = {}  # idx -> reduced (pre-merge) total
         self._results: dict[int, Array] = {}  # idx -> target-merged result
         self._meta: dict[int, tuple] = {}  # idx -> (red, target) for the merge
@@ -563,28 +570,32 @@ class ProgramContext:
         self._pending = [i for i in self._pending if i not in set(idxs)]
         by_key: dict[tuple, list[int]] = {}
         for i in idxs:
-            partial, red, wire = self._partials[i]
+            partial, red, wire, hier = self._partials[i]
             by_key.setdefault(
-                (red.name, wire, str(partial.dtype)), []
+                (red.name, wire, str(partial.dtype), hier), []
             ).append(i)
         for key, members in by_key.items():
             if len(members) == 1 or not self._batch:
                 for i in members:
-                    partial, red, wire = self._partials[i]
-                    self._totals[i] = self._coll.reduce(partial, red, wire)
+                    partial, red, wire, hier = self._partials[i]
+                    self._totals[i] = self._coll.reduce(
+                        partial, red, wire, hier=hier
+                    )
                 continue
             # One fused collective for the whole group: flatten, concatenate,
             # reduce once, split.  Exact for every built-in reducer — psum /
             # pmin / pmax and the gathered prod fold are all elementwise, so
             # reducing the concatenation is bit-identical to reducing each
             # buffer alone.
-            _p0, red, wire = self._partials[members[0]]
+            _p0, red, wire, hier = self._partials[members[0]]
             flats = [self._partials[i][0].reshape(-1) for i in members]
             sizes = [f.shape[0] for f in flats]
-            total_cat = self._coll.reduce(jnp.concatenate(flats), red, wire)
+            total_cat = self._coll.reduce(
+                jnp.concatenate(flats), red, wire, hier=hier
+            )
             off = 0
             for i, sz in zip(members, sizes):
-                partial, _r, _w = self._partials[i]
+                partial, _r, _w, _h = self._partials[i]
                 self._totals[i] = total_cat[off:off + sz].reshape(partial.shape)
                 off += sz
             if self._mode == "discover":
@@ -686,6 +697,7 @@ class ProgramContext:
                 source_key=source_key, mapper=mapper, red=red, target=target,
                 engine=engine, wire=wire, key_range=key_range, env=env,
                 tuning=self._tuning, degraded=self._degraded,
+                n_nodes=self._n_nodes, hierarchical=self._hierarchical,
             )
             ov = self._overrides.get(node.tune_key)
             if ov is not None:
@@ -718,6 +730,7 @@ class ProgramContext:
                     idx=idx, kind=kind, src=src_desc, source_key=source_key,
                     mapper=mapper, red=red, target=target, engine=engine,
                     wire=wire, key_range=key_range, env=env,
+                    n_nodes=self._n_nodes, hierarchical=self._hierarchical,
                 )
             elif node.cse_of is not None:
                 return PlanValue(self, node.idx)
@@ -743,6 +756,7 @@ class ProgramContext:
             kind, src_static, mapper, red, target, resolved, wire,
             self._n_shards, with_stats=False, feedback=feedback,
             collect=not deferrable, tuned=getattr(node, "tuned", None),
+            hier=node.hier,
         )
         residual = None
         if feedback:
@@ -757,7 +771,7 @@ class ProgramContext:
                 self._residuals[self._res_i] = new_residual
             self._res_i += 1
         if deferrable:
-            self._partials[node.idx] = (total, red, wire)
+            self._partials[node.idx] = (total, red, wire, node.hier)
             self._pending.append(node.idx)
             return PlanValue(self, node.idx)
         self._totals[node.idx] = total
@@ -785,6 +799,7 @@ class ProgramContext:
                 source_key=source_key, mapper=mapper, red=red, target=target,
                 engine=engine, wire="none", key_range=key_range, env=env,
                 tuning=self._tuning, degraded=self._degraded,
+                n_nodes=self._n_nodes, hierarchical=self._hierarchical,
             )
             ov = self._overrides.get(node.tune_key)
             if ov is not None:
@@ -960,6 +975,7 @@ class ProgramContext:
             passes=passes,
             groups=dict(self._groups),
             group_keys=dict(self._group_keys),
+            n_nodes=self._n_nodes,
             collectives_per_iter=n_coll,
             collectives_unbatched=unbatched,
             cse_hits=cse_hits,
@@ -1013,12 +1029,16 @@ class Program:
     def __init__(
         self, session, step_fn: Callable, *, mesh: Mesh | None = None,
         passes: tuple | None = None, tune: bool = False,
-        overrides: dict | None = None,
+        overrides: dict | None = None, hierarchical: bool = True,
     ):
         self._session = session
         self._step_fn = step_fn
         self._mesh = mesh if mesh is not None else session.mesh
-        self._n_shards = self._mesh.shape[C.DATA_AXIS]
+        self._n_shards = C.shard_count(self._mesh)
+        # ``hierarchical=False`` keeps collectives flat even on a multi-node
+        # mesh — the A/B baseline the scaling bench compares against.
+        self._hierarchical = bool(hierarchical)
+        self._n_nodes = C.n_nodes(self._mesh) if self._hierarchical else 1
         self._passes = DEFAULT_PASSES if passes is None else tuple(passes)
         # ``tune``: on first build per state signature, measure the candidate
         # grid for every tunable op (see _maybe_tune) and cache winners in
@@ -1053,6 +1073,7 @@ class Program:
             self._n_shards, "discover", passes=self._passes,
             tuning=self._session.tuning, overrides=self._overrides,
             degraded=getattr(self._session, "_degraded", None),
+            n_nodes=self._n_nodes, hierarchical=self._hierarchical,
         )
 
         def run(s):
@@ -1139,7 +1160,7 @@ class Program:
             }
             variant = Program(
                 session, self._step_fn, mesh=self._mesh, passes=self._passes,
-                overrides=ov,
+                overrides=ov, hierarchical=self._hierarchical,
             )
             try:
                 faults.fault_point("tuning.measure")
@@ -1190,8 +1211,10 @@ class Program:
         self.plan = plan
         self.feedback_slots = len(plan.residual_specs)
         self.hash_slots = len(plan.hash_targets)
-        axis = C.DATA_AXIS
         n_shards = self._n_shards
+        n_nodes = self._n_nodes
+        hierarchical = self._hierarchical
+        mesh = self._mesh
         step_fn = self._step_fn
         passes = self._passes
 
@@ -1210,7 +1233,7 @@ class Program:
                 stream_keys.append(s.key)
                 stream_sources.append(s.source)
                 continue
-            ops, sp = _mr._source_operands(kind, s.source)
+            ops, sp = _mr._source_operands(kind, s.source, mesh)
             operands.extend(ops)
             specs.extend(sp)
             source_keys.append(s.key)
@@ -1228,7 +1251,10 @@ class Program:
             hash_in = flat[n_res:n_res + 3 * n_hash]
             stream_in = flat[n_res + 3 * n_hash:n_res + 3 * n_hash + 2 * n_stream]
             flat_ops = flat[n_res + 3 * n_hash + 2 * n_stream:]
-            coll = _mr.RealCollectives(axis, n_shards)
+            # Spans both mesh axes on a 2-D mesh; whether a given reduce is
+            # hierarchical is per-node (``hier=`` on each call), so the flat
+            # A/B baseline shares this same object.
+            coll = _mr.make_collectives(mesh, n_shards)
             op_map, i = {}, 0
             for sk, k in zip(source_keys, sizes):
                 op_map[sk] = tuple(flat_ops[i:i + k])
@@ -1243,6 +1269,7 @@ class Program:
                     residuals=list(residuals),
                     hash_tables=dict(zip(hash_keys, tables)),
                     plan=plan, passes=passes,
+                    n_nodes=n_nodes, hierarchical=hierarchical,
                 )
                 new_st = ctx._finalize_state(step_fn(ctx, st))
                 return (
@@ -1271,7 +1298,7 @@ class Program:
                 ),
             )
 
-        d = P(C.DATA_AXIS)
+        d = C.data_pspec(self._mesh)
         stream_specs: tuple = ()
         for _ in stream_keys:
             stream_specs += (d, P())  # block rows sharded, base replicated

@@ -166,6 +166,7 @@ class BlazeSession:
         key_range: int | None = None,
         return_stats: bool = False,
         tune: bool = False,
+        hierarchical: bool = True,
     ):
         """Run one MapReduce op, reusing this session's compiled executables.
 
@@ -192,16 +193,24 @@ class BlazeSession:
         ``cost`` grids) is timed once, and the winner is cached in
         ``session.tuning`` — every later dispatch of the same plan (tuned or
         not, per-op or inside a program) reuses it.
+
+        On a multi-node ``("node", "data")`` mesh the
+        ``hierarchical-collectives`` pass rewrites eligible dense reductions
+        to the topology-aware two-hop plan (intra-node full precision,
+        inter-node wire-compressed); ``hierarchical=False`` keeps the flat
+        collective — the A/B baseline ``benchmarks/bench10_scaling.py``
+        measures against.  A no-op on 1-D meshes either way.
         """
         red = get_reducer(reducer)
         mesh = mesh or self.mesh
-        n_shards = mesh.shape[C.DATA_AXIS]
+        n_shards = C.shard_count(mesh)
         kind = _mr._source_kind(source)
         node = plan_mod.build_mapreduce_node(
             idx=0, kind=kind, src=plan_mod.source_desc(kind, source),
             source_key=None, mapper=mapper, red=red, target=target,
             engine=engine, wire=wire, key_range=key_range, env=env,
             tuning=self.tuning, degraded=self._degraded,
+            n_nodes=C.n_nodes(mesh), hierarchical=hierarchical,
         )
         if (
             tune
@@ -243,6 +252,7 @@ class BlazeSession:
                     kind, source, mapper, red, jnp.asarray(target), mesh,
                     n_shards, node.engine, wire, env, return_stats,
                     cache=self._exec_cache, node=node, tuned=node.tuned,
+                    hier=node.hier,
                 ),
                 node,
             )
@@ -272,7 +282,7 @@ class BlazeSession:
 
         hash_target = isinstance(target, C.DistHashMap)
         out = target if hash_target else jnp.asarray(target)
-        emitted = shipped = payload = 0
+        emitted = shipped = payload = intra = inter = 0
         compiles = cache_hits = retries = 0
         last_stats = None
 
@@ -300,12 +310,15 @@ class BlazeSession:
                         "chunked", bv, mapper, red, out, mesh, n_shards,
                         node.engine, wire, env, return_stats,
                         cache=self._exec_cache, node=node, tuned=node.tuned,
+                        hier=node.hier,
                     ),
                     node,
                 )
             emitted = emitted + st.pairs_emitted
             shipped = shipped + st.pairs_shipped
             payload = payload + st.shuffle_payload_bytes
+            intra = intra + st.intra_bytes
+            inter = inter + st.inter_bytes
             compiles += st.compiles
             cache_hits += st.cache_hits
             retries += st.retries
@@ -315,6 +328,8 @@ class BlazeSession:
             pairs_emitted=emitted,
             pairs_shipped=shipped,
             shuffle_payload_bytes=payload,
+            intra_bytes=intra,
+            inter_bytes=inter,
             compiles=compiles,
             cache_hits=cache_hits,
             retries=retries,
@@ -589,7 +604,7 @@ class BlazeSession:
                 return _mr._map_reduce_dense(
                     kind, source, mapper, red, jnp.asarray(target), mesh,
                     n_shards, cfg.engine, wire, env, False,
-                    cache=self._exec_cache, tuned=tuned,
+                    cache=self._exec_cache, tuned=tuned, hier=node.hier,
                 )
 
             try:
@@ -653,7 +668,7 @@ class BlazeSession:
     # -- fused iteration programs (see repro.core.program) -------------------
 
     def program(self, step_fn: Callable, *, mesh=None, passes=None,
-                tune: bool = False):
+                tune: bool = False, hierarchical: bool = True):
         """Lower ``step_fn(ctx, state) -> state`` — a whole iteration of
         MapReduce ops plus elementwise glue — into ONE optimized executable.
 
@@ -663,9 +678,11 @@ class BlazeSession:
         steps).  Discovery builds an explicit logical plan
         (``repro.core.plan``) and runs the optimizer passes on it — per-node
         engine resolution, collective batching, CSE, dead-source pruning;
-        ``passes=()`` disables the optional three for A/B comparisons.  Run
-        the result with ``program(state, n_iters)`` or ``run_loop``; render
-        the plan with ``session.explain(program)``.
+        ``passes=()`` disables the optional three for A/B comparisons, and
+        ``hierarchical=False`` keeps collectives flat on a multi-node mesh
+        (the scaling bench's baseline).  Run the result with
+        ``program(state, n_iters)`` or ``run_loop``; render the plan with
+        ``session.explain(program)``.
 
         ``tune=True``: on the program's first build, any tunable node without
         a measured winner triggers one measurement sweep — throwaway program
@@ -677,7 +694,8 @@ class BlazeSession:
         from repro.core.program import Program
 
         return Program(
-            self, step_fn, mesh=mesh or self.mesh, passes=passes, tune=tune
+            self, step_fn, mesh=mesh or self.mesh, passes=passes, tune=tune,
+            hierarchical=hierarchical,
         )
 
     def explain(self, program, state=None) -> str:

@@ -5,6 +5,17 @@ Used by the shard_map data-parallel training path and the MapReduce engine.
 before the ring reduce; ``error_feedback`` keeps iterative algorithms unbiased
 by re-injecting this round's quantisation error next round.
 
+**Hierarchical (topology-aware) mode.**  On a 2-D ``("node", "data")`` mesh
+intra-node links are an order of magnitude faster than inter-node links, so
+a flat compressed reduce narrows exactly where narrowing is cheap and keeps
+full precision where it is expensive.  Passing ``intra_axis=`` inverts that:
+a full-precision ``psum`` runs over the fast intra-node axis first, then
+only the node-level partials cross the slow ``axis`` hop compressed — fewer
+quantisation addends (one per node instead of one per device) *and* fewer
+bytes on the only links that are actually slow.  ``core/mapreduce.py``'s
+``RealCollectives`` routes its hierarchical reduces through these entry
+points.
+
 XLA exposes no int8 all-reduce, so the int8 mode reduces in int32 over the
 int8 lattice — numerically identical to an int8 wire; stats report the int8
 byte count a native lowering would move (see DESIGN.md §2).
@@ -13,11 +24,24 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Array = jax.Array
 
+Axis = "str | tuple[str, ...]"  # collectives accept one name or a tuple
 
-def compressed_psum(x: Array, axis: str, *, wire: str = "none") -> Array:
+
+def compressed_psum(
+    x: Array, axis, *, wire: str = "none", intra_axis=None
+) -> Array:
+    """Sum over ``axis`` with the payload narrowed per ``wire``.
+
+    With ``intra_axis`` the reduce is hierarchical: full-precision ``psum``
+    over ``intra_axis`` (fast links) first, then the compressed reduce over
+    ``axis`` (slow links) on the node-level partials.
+    """
+    if intra_axis is not None:
+        x = jax.lax.psum(x, intra_axis)
     if wire == "none":
         return jax.lax.psum(x, axis)
     if wire == "bf16":
@@ -32,16 +56,20 @@ def compressed_psum(x: Array, axis: str, *, wire: str = "none") -> Array:
 
 
 def psum_with_feedback(
-    x: Array, residual: Array, axis: str, *, wire: str
+    x: Array, residual: Array, axis, *, wire: str, intra_axis=None
 ) -> tuple[Array, Array]:
-    """(reduced, new_residual): error feedback around the lossy reduce."""
+    """(reduced, new_residual): error feedback around the lossy reduce.
+
+    Hierarchical (``intra_axis``) mode folds the fast axis at full precision
+    first, so the residual tracks exactly the loss of the one lossy hop; the
+    residual is then replicated within a node (every member computes the
+    same node-level error) and re-injected into the node partial next round.
+    """
+    if intra_axis is not None:
+        x = jax.lax.psum(x, intra_axis)
     target = x.astype(jnp.float32) + residual
     reduced = compressed_psum(target, axis, wire=wire)
-    n = jax.lax.psum(jnp.ones((), jnp.float32), axis)
-    # per-device view of what the wire delivered for *this* shard's input
-    recovered = reduced / n  # mean contribution proxy
-    new_residual = target - recovered * 0.0  # see note below
-    # NOTE: exact per-addend feedback requires echoing each device's own
+    # Exact per-addend feedback requires echoing each participant's own
     # quantised value; with a shared scale, quantisation is deterministic,
     # so we recompute it locally instead of echoing:
     if wire == "int8":
@@ -56,10 +84,33 @@ def psum_with_feedback(
     return reduced, new_residual
 
 
-def wire_bytes(x: Array, wire: str) -> int:
-    """Payload bytes one ring pass moves for this tensor."""
-    n = 1
-    for d in x.shape:
-        n *= d
-    per = {"none": x.dtype.itemsize, "bf16": 2, "int8": 1}[wire]
-    return n * per
+#: Narrowed wire widths; every other mode derives from the tensor dtype.
+_WIRE_ITEMSIZE = {"bf16": 2, "int8": 1}
+
+#: One f32 scale accompanies each int8 frame (shared-scale quantisation,
+#: matching ``compressed_psum``/``serialization.quantize``'s per-block scale).
+_INT8_SCALE_BYTES = 4
+
+
+def wire_bytes(x, wire: str, *, n_scales: int = 1) -> int:
+    """Payload bytes one ring pass moves for this tensor.
+
+    ``wire="none"`` derives the element width from the dtype (an f64 or
+    int16 tensor reports 8/2 bytes per element, not a hardcoded 4);
+    ``wire="int8"`` accounts the full frame the quantised payload actually
+    ships — the int8 lattice plus ``n_scales`` f32 scales (1 for the
+    shared-scale collective; ``ceil(n / block)`` for the per-block
+    serialization format).
+    """
+    if wire not in ("none",) and wire not in _WIRE_ITEMSIZE:
+        raise ValueError(f"unknown wire {wire!r}")
+    n = int(np.prod(np.shape(x), dtype=np.int64)) if np.ndim(x) else 1
+    if wire == "none":
+        per = np.dtype(getattr(x, "dtype", np.asarray(x).dtype)).itemsize
+        return n * per
+    payload = n * _WIRE_ITEMSIZE[wire]
+    if wire == "int8":
+        if n_scales < 1:
+            raise ValueError(f"n_scales must be >= 1, got {n_scales}")
+        payload += n_scales * _INT8_SCALE_BYTES
+    return payload

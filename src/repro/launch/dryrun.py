@@ -1,10 +1,11 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.launch.simulate import force_host_device_count
+force_host_device_count(512)
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
 
 The two lines above MUST precede every other import (jax locks the device
-count at first backend init): the dry-run — and only the dry-run — sees 512
-placeholder CPU devices so ``jax.make_mesh`` can build the production meshes.
+count at first backend init — ``launch/simulate.py`` owns that contract):
+the dry-run — and only the dry-run — sees 512 placeholder CPU devices so
+``jax.make_mesh`` can build the production meshes.
 
 Per cell this lowers the REAL program (train_step including the AdamW update,
 or prefill / decode serve steps with full caches) from ShapeDtypeStruct
@@ -26,6 +27,7 @@ Usage:
 """
 import argparse
 import json
+import os
 import re
 import time
 import traceback

@@ -1,12 +1,79 @@
-"""Production mesh construction.
+"""Production mesh construction and multi-host bring-up.
 
-A FUNCTION, not a module-level constant — importing this module never touches
-jax device state (jax locks the device count on first backend init, and the
-dry-run must set XLA_FLAGS before that).
+Everything here is a FUNCTION, not a module-level constant — importing this
+module never touches jax device state (jax locks the device count on first
+backend init, and the dry-run / simulated-topology harnesses must set
+XLA_FLAGS before that; see ``repro.launch.simulate``).
+
+Multi-host entry points:
+
+* ``init_distributed(...)``      — gated ``jax.distributed.initialize``
+  bring-up (no-op on a single process), returns whether a cluster came up.
+* ``make_node_data_mesh(n)``     — the MapReduce engine's 2-D
+  ``("node", "data")`` mesh: ``node`` is the slow inter-host axis (one row
+  per process on a real cluster; simulated rows under
+  ``--xla_force_host_platform_device_count``), ``data`` the fast intra-host
+  axis.  The engine's hierarchical collectives reduce over ``data`` at full
+  precision first and cross ``node`` second (see ``core/mapreduce.py``).
 """
 from __future__ import annotations
 
-from repro.compat import AxisType, make_mesh
+from repro.compat import (
+    AxisType,
+    distributed_initialize,
+    make_mesh,
+    process_count,
+)
+
+
+def init_distributed(
+    coordinator_address: str | None = None,
+    num_processes: int | None = None,
+    process_id: int | None = None,
+    **kwargs,
+) -> bool:
+    """Bring up the multi-process runtime (returns False when single-process).
+
+    Call once, before any device use, on every process of a real cluster:
+
+        init_distributed("host0:1234", num_processes=8, process_id=rank)
+        mesh = make_node_data_mesh()
+
+    On one process (tests, notebooks, the simulated harness) it is a no-op
+    and ``make_node_data_mesh(n)`` simulates the node axis instead.
+    """
+    return distributed_initialize(
+        coordinator_address=coordinator_address,
+        num_processes=num_processes,
+        process_id=process_id,
+        **kwargs,
+    )
+
+
+def make_node_data_mesh(n_nodes: int | None = None, *, devices=None):
+    """A 2-D ``("node", "data")`` mesh over all visible devices.
+
+    ``n_nodes`` defaults to ``jax.process_count()`` — one node row per host
+    on a real multi-process launch.  Pass it explicitly to simulate a
+    multi-node topology on one machine (the device count must divide
+    evenly; pair with ``simulate.force_host_device_count``).
+    """
+    import jax
+
+    from repro.core import containers as C
+
+    devs = list(devices) if devices is not None else jax.devices()
+    nodes = int(n_nodes) if n_nodes is not None else max(1, process_count())
+    if nodes < 1 or len(devs) % nodes:
+        raise ValueError(
+            f"cannot split {len(devs)} devices into {nodes} node rows"
+        )
+    return make_mesh(
+        (nodes, len(devs) // nodes),
+        (C.NODE_AXIS, C.DATA_AXIS),
+        axis_types=(AxisType.Auto, AxisType.Auto),
+        devices=devs,
+    )
 
 
 def make_production_mesh(*, multi_pod: bool = False):

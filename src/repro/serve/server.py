@@ -399,7 +399,8 @@ class BlazeServer:
         snap["session"] = self.session.cache_info()
         snap["queries"] = self.queries
         snap["datasets"] = sorted(self._datasets)
-        snap["mesh_shards"] = self.mesh.shape[C.DATA_AXIS]
+        snap["mesh_shards"] = C.shard_count(self.mesh)
+        snap["mesh_nodes"] = C.n_nodes(self.mesh)
         snap["tuning"] = self._tuning_snapshot()
         snap["recovery"] = self._recovery_snapshot()
         return snap

@@ -32,7 +32,8 @@ def test_grad_wire_bytes_accounting():
     params = {"w": jnp.zeros((1000, 10), jnp.float32)}
     assert grad_wire_bytes(params, "none") == 40_000
     assert grad_wire_bytes(params, "bf16") == 20_000
-    assert grad_wire_bytes(params, "int8") == 10_000
+    # int8 frames ship the shared f32 scale alongside the lattice
+    assert grad_wire_bytes(params, "int8") == 10_000 + 4
 
 
 def test_compressed_training_convergence_parity_8dev():

@@ -225,3 +225,80 @@ print(json.dumps({"first": losses[0], "last": losses[-1]}))
 """
     )
     assert res["last"] < res["first"]
+
+
+def test_node_data_mesh_differential_matrix_8dev():
+    """The ("node","data") topology matrix: dense AND hash engines on every
+    8-device node split (2x4, 4x2), hierarchical and flat, against NumPy /
+    dict oracles.  Dense sums use integer-valued floats so hierarchical
+    reassociation is exact — hier must be bit-equal to flat; hash targets
+    (point-to-point shuffle, never hierarchical) must stay dict-oracle
+    exact on the 2-D mesh."""
+    res = _run(
+        """
+import json, collections, numpy as np, jax, jax.numpy as jnp
+from repro.core import make_dist_hashmap
+from repro.core.session import BlazeSession
+from repro.launch.mesh import make_node_data_mesh
+
+rng = np.random.RandomState(0)
+vals = rng.randint(0, 100, (128, 4)).astype(np.float32)
+words = rng.randint(0, 100, 4000).astype(np.int32)
+ref_counts = collections.Counter(words.tolist())
+
+def dense_m(i, row, emit):
+    emit(0, row)
+
+def tok_m(i, w, emit):
+    emit(w, 1)
+
+out = {}
+for n_nodes in (2, 4):
+    mesh = make_node_data_mesh(n_nodes)
+    s = BlazeSession(mesh=mesh)
+    v = s.distribute(vals)
+    wv = s.distribute(words)
+    r = {}
+    for engine in ("eager", "naive"):
+        t = jnp.zeros((1, 4), jnp.float32)
+        hier = s.map_reduce(v, dense_m, "sum", t, engine=engine)
+        flat = s.map_reduce(v, dense_m, "sum", t, engine=engine,
+                            hierarchical=False)
+        r["dense_" + engine] = {
+            "oracle": bool(np.array_equal(np.asarray(hier)[0], vals.sum(0))),
+            "bit_equal": np.asarray(hier).tobytes()
+                         == np.asarray(flat).tobytes(),
+        }
+    for engine in ("eager", "pallas"):
+        hm = make_dist_hashmap(mesh, 1024, (), jnp.int32, "sum")
+        hm, st = s.map_reduce(wv, tok_m, "sum", hm, engine=engine,
+                              key_range=100, return_stats=True)
+        st = st.finalize()
+        d = hm.to_dict()
+        r["hash_" + engine] = {
+            "oracle": all(int(d.get(k, 0)) == c for k, c in ref_counts.items())
+                      and len(d) == len(ref_counts),
+            "overflow": hm.total_overflow(),
+            "engine": st.engine,
+            "intra": int(st.intra_bytes),
+            "inter": int(st.inter_bytes),
+        }
+    out[str(n_nodes)] = r
+print(json.dumps(out))
+"""
+    )
+    for n_nodes in (2, 4):
+        r = res[str(n_nodes)]
+        for k in ("dense_eager", "dense_naive"):
+            assert r[k]["oracle"], (n_nodes, k)
+            assert r[k]["bit_equal"], (n_nodes, k)
+        for k in ("hash_eager", "hash_pallas"):
+            assert r[k]["oracle"], (n_nodes, k)
+            assert r[k]["overflow"] == 0
+        assert r["hash_pallas"]["engine"] == "pallas"
+        # the all_to_all shuffle sends (n_shards - n_shards/nodes)/n_shards
+        # of the payload across nodes: 4/8 at 2 nodes, 6/8 at 4.
+        tot = r["hash_eager"]["intra"] + r["hash_eager"]["inter"]
+        frac = (8 - 8 // n_nodes) / 8
+        assert tot > 0
+        assert abs(r["hash_eager"]["inter"] - tot * frac) <= 1

@@ -1,10 +1,12 @@
 """Validate every ``results/BENCH_*.json`` against the unified report shape.
 
 One schema for all cross-PR benchmark reports (BENCH_6 serving, BENCH_7
-streaming, BENCH_8 regression, and whatever comes next):
+streaming, BENCH_8 regression, BENCH_scaling multi-host, and whatever comes
+next).  Numbered and named reports alike (``BENCH_\\w+``) must carry:
 
 * ``bench``   — string matching the file name (``BENCH_8`` in
-  ``BENCH_8.json``), so a copied report can't masquerade as another PR's;
+  ``BENCH_8.json``, ``BENCH_scaling`` in ``BENCH_scaling.json``), so a
+  copied report can't masquerade as another PR's;
 * ``scale``   — non-empty string (``smoke`` / ``default`` / ``big``);
 * ``workload``— non-empty object of scalars: the pinned sizes that make
   walls comparable across files;
@@ -66,7 +68,7 @@ def check_report(path: str) -> list[str]:
     if not isinstance(doc, dict):
         return ["top level must be an object"]
 
-    m = re.fullmatch(r"(BENCH_\d+)\.json", name)
+    m = re.fullmatch(r"(BENCH_\w+)\.json", name)
     expect = m.group(1) if m else None
     if doc.get("bench") != expect:
         errors.append(
@@ -110,7 +112,7 @@ def main(argv=None) -> int:
     paths = argv or sorted(
         os.path.join(RESULTS, f)
         for f in os.listdir(RESULTS)
-        if re.fullmatch(r"BENCH_\d+\.json", f)
+        if re.fullmatch(r"BENCH_\w+\.json", f)
     )
     if not paths:
         print("no BENCH_*.json reports to check")
